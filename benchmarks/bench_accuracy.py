@@ -1,0 +1,53 @@
+"""Paper Fig. 8: round-trip relative error D_err vs (l_max, grid, dtype).
+
+Columns: name, us_per_call (map2alm(alm2map) wall), derived = D_err.
+The GL grid isolates implementation error (machine precision); the
+HEALPix-ring grid reproduces the paper's aliasing-driven error growth as
+l_max approaches the 2*nside sampling limit.
+"""
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import grids, sht, spectra
+from benchmarks.common import emit, time_call
+
+KEY = jax.random.PRNGKey(0)
+
+
+def main():
+    for l_max in (32, 64, 128, 256):
+        t = sht.SHT(grids.make_grid("gl", l_max=l_max), l_max=l_max,
+                    m_max=l_max)
+        alm = sht.random_alm(KEY, l_max, l_max)
+        rt = lambda a: t.map2alm(t.alm2map(a))
+        dt = time_call(rt, alm, iters=1)
+        err = spectra.d_err(alm, rt(alm))
+        emit(f"accuracy/gl/f64/lmax{l_max}", dt * 1e6, f"{err:.3e}")
+
+    for nside in (16, 32, 64):
+        # at the sampling limit (l_max = 2 nside) and well-resolved (nside)
+        for l_max in (2 * nside, nside):
+            g = grids.make_grid("healpix_ring", nside=nside)
+            t = sht.SHT(g, l_max=l_max, m_max=l_max)
+            alm = sht.random_alm(KEY, l_max, l_max)
+            rt = lambda a: t.map2alm(t.alm2map(a))
+            dt = time_call(rt, alm, iters=1)
+            err = spectra.d_err(alm, rt(alm))
+            emit(f"accuracy/healpix_ring/nside{nside}/lmax{l_max}",
+                 dt * 1e6, f"{err:.3e}")
+
+    # f32 engine (kernel-precision) error at fixed size
+    l_max = 128
+    g = grids.make_grid("gl", l_max=l_max)
+    t32 = sht.SHT(g, l_max=l_max, m_max=l_max, dtype="float32")
+    alm = sht.random_alm(KEY, l_max, l_max).astype(np.complex64)
+    rt = lambda a: t32.map2alm(t32.alm2map(a))
+    dt = time_call(rt, alm, iters=1)
+    err = spectra.d_err(alm, rt(alm))
+    emit(f"accuracy/gl/f32/lmax{l_max}", dt * 1e6, f"{err:.3e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Paper Figs. 12-13: runtime breakdown of the distributed transforms into
+recurrence / communication / FFT stages, under MPI-style sharding.
+
+Runs in a SUBPROCESS with 8 host devices (this process stays 1-device).
+Each stage is timed by jitting it in isolation with the same shardings.
+Columns: name, us_per_call, derived = stage.
+"""
+
+import os
+import subprocess
+import sys
+
+_HELPER = r'''
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import time
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import grids, sht, plan as planlib, dist_sht
+
+lmax, K = 256, 2
+g = grids.make_grid("gl", l_max=lmax)
+mesh = jax.make_mesh((8,), ("procs",))
+p = planlib.SHTPlan(g, lmax, lmax, 8)
+d = dist_sht.DistSHT(p, mesh, ("procs",))
+alm = sht.random_alm(jax.random.PRNGKey(0), lmax, lmax, K=K)
+packed = jnp.asarray(p.pack_alm(np.asarray(alm)))
+
+def timeit(f, *a):
+    out = f(*a); jax.block_until_ready(out)
+    ts = []
+    for _ in range(3):
+        t0 = time.perf_counter(); out = f(*a); jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+# full transform
+t_full, maps = timeit(d.alm2map, packed)
+# stage timings via the internal builders
+synth, anal, c = d._build(K)
+a_re, a_im = jnp.real(packed), jnp.imag(packed)
+
+import functools
+from jax.sharding import PartitionSpec as P
+spec = P(("procs",))
+
+stage1 = jax.jit(jax.shard_map(lambda ar, ai, m: jnp.concatenate(
+    d._stage1_synth(ar, ai, m), -1), mesh=mesh,
+    in_specs=(spec, spec, spec), out_specs=spec, check_vma=False))
+t_s1, delta = timeit(stage1, a_re, a_im, c["m_flat"])
+
+exch = jax.jit(jax.shard_map(lambda x: d._exchange(x, to_rings=True),
+    mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False))
+t_comm, exch_out = timeit(exch, delta)
+
+fft = jax.jit(jax.shard_map(lambda x, ph, vl: d._synth_fft(
+    x[..., :K], x[..., K:], ph, vl), mesh=mesh,
+    in_specs=(spec, spec, spec), out_specs=spec, check_vma=False))
+t_fft, _ = timeit(fft, exch_out, c["phi0"], c["valid"])
+
+print(f"CSV breakdown/alm2map/full,{t_full*1e6:.1f},8dev-lmax{lmax}")
+print(f"CSV breakdown/alm2map/recurrence,{t_s1*1e6:.1f},stage1")
+print(f"CSV breakdown/alm2map/all_to_all,{t_comm*1e6:.1f},comm")
+print(f"CSV breakdown/alm2map/fft,{t_fft*1e6:.1f},stage2")
+
+# direct transform breakdown (mirror)
+maps_plan = jnp.asarray(p.gather_map(np.zeros((g.n_rings, g.max_n_phi, K))))
+t_full_a, _ = timeit(d.map2alm, maps_plan)
+print(f"CSV breakdown/map2alm/full,{t_full_a*1e6:.1f},8dev-lmax{lmax}")
+'''
+
+
+def main():
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    r = subprocess.run([sys.executable, "-c", _HELPER], capture_output=True,
+                       text=True, timeout=560, env=env)
+    for line in r.stdout.splitlines():
+        if line.startswith("CSV "):
+            print(line[4:])
+    if r.returncode != 0:
+        print(f"breakdown/error,0.0,{r.stderr.splitlines()[-1] if r.stderr else 'unknown'}")
+
+
+if __name__ == "__main__":
+    main()

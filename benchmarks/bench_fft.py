@@ -1,0 +1,44 @@
+"""Paper Fig. 14: FFT strategy comparison.
+
+The paper compared CUFFT (GPU) vs MKL (CPU) and kept FFTs on the CPU.  Our
+TPU-shaped analogue: one batched uniform-length irfft over all rings (the
+production path) vs the bucketed variable-length path (true HEALPix
+raggedness).  Columns: name, us_per_call, derived = strategy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import grids, sht
+from benchmarks.common import emit, time_call
+
+KEY = jax.random.PRNGKey(2)
+
+
+def main():
+    for nside in (32, 64, 128):
+        l_max = 2 * nside
+        alm = sht.random_alm(KEY, l_max, l_max)
+
+        gu = grids.make_grid("healpix_ring", nside=nside)
+        tu = sht.SHT(gu, l_max=l_max, m_max=l_max)
+        delta = tu._delta_from_alm(alm)
+        f_uni = jax.jit(tu._synth_fft_uniform)
+        dt = time_call(f_uni, delta, iters=3)
+        emit(f"fft/batched-uniform/nside{nside}", dt * 1e6,
+             f"n_phi={gu.max_n_phi} rings={gu.n_rings}")
+
+        gr = grids.make_grid("healpix", nside=nside)
+        tr = sht.SHT(gr, l_max=l_max, m_max=l_max)
+        import time as _t
+        t0 = _t.perf_counter()
+        tr._synth_fft_ragged(delta)
+        dt_r = _t.perf_counter() - t0
+        emit(f"fft/bucketed-ragged/nside{nside}", dt_r * 1e6,
+             f"{len(np.unique(gr.n_phi))} buckets (host loop)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,91 @@
+"""Paper Figs. 9-10: Legendre-stage time and GFlop/s, synthesis vs analysis.
+
+Compares the engines on the recurrence hot spot (paper's >90% step):
+  * f64 jnp engine (the oracle; paper's "multithreaded s2hat" analogue)
+  * f32 jnp engine
+  * Pallas kernels, vpu and mxu variants (interpret mode on CPU -- wall
+    times are NOT TPU times; the derived GFlop/s column is the algorithmic
+    flop count / wall, meaningful for relative comparisons only.  On-TPU
+    projections live in the roofline, EXPERIMENTS.md §Roofline.)
+
+Also reproduces the paper's direct-vs-inverse dichotomy measurement: the
+analysis direction's reduction structure vs the synthesis direction.
+Columns: name, us_per_call, derived = GFlop/s | notes.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import grids, legendre, sht
+from repro.kernels import ops as kops, ref as kref
+from benchmarks.common import emit, time_call
+
+KEY = jax.random.PRNGKey(1)
+
+
+def _flops(l_max, R, K):
+    L1 = l_max + 1
+    return R * L1 * (L1 + 1) / 2 * (20.0 + 8.0 * K)
+
+
+def main():
+    for l_max, K in ((128, 1), (256, 1), (256, 8)):
+        g = grids.make_grid("gl", l_max=l_max)
+        lm = legendre.log_mu(l_max)
+        m_vals = np.arange(l_max + 1)
+        alm = sht.random_alm(KEY, l_max, l_max, K=K)
+        a_re = np.real(np.asarray(alm))
+        a_im = np.imag(np.asarray(alm))
+        fl = _flops(l_max, g.n_rings, K)
+
+        # f64 engine, synthesis
+        dt = time_call(lambda: legendre.delta_from_alm(
+            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm, l_max=l_max),
+            iters=2)
+        emit(f"recurrence/synth/jnp-f64/lmax{l_max}/K{K}", dt * 1e6,
+             f"{fl / dt / 1e9:.2f}")
+
+        # f64 engine, analysis (the paper's slower-on-GPU direction)
+        d_re, d_im = legendre.delta_from_alm(a_re, a_im, m_vals, g.cos_theta,
+                                             g.sin_theta, lm, l_max=l_max)
+        w = np.ones(g.n_rings)
+        dt = time_call(lambda: legendre.alm_from_delta(
+            d_re, d_im, m_vals, g.cos_theta, g.sin_theta, w, lm,
+            l_max=l_max), iters=2)
+        emit(f"recurrence/anal/jnp-f64/lmax{l_max}/K{K}", dt * 1e6,
+             f"{fl / dt / 1e9:.2f}")
+
+        # folded synthesis (the beyond-paper recurrence halving)
+        nh = (g.n_rings + 1) // 2
+        dt = time_call(lambda: legendre.delta_from_alm_folded(
+            a_re, a_im, m_vals, g.cos_theta[:nh], g.sin_theta[:nh], lm,
+            l_max=l_max), iters=2)
+        emit(f"recurrence/synth-fold/jnp-f64/lmax{l_max}/K{K}", dt * 1e6,
+             f"{fl / dt / 1e9:.2f}")
+
+    # kernels (interpret mode): small sizes only
+    for l_max, K, var in ((96, 1, "vpu"), (96, 8, "mxu")):
+        g = grids.make_grid("gl", l_max=l_max)
+        lm = legendre.log_mu(l_max)
+        m_vals = np.arange(l_max + 1)
+        alm = sht.random_alm(KEY, l_max, l_max, K=K)
+        a32 = jnp.concatenate([jnp.real(alm), jnp.imag(alm)],
+                              axis=-1).astype(jnp.float32)
+        pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
+        x32 = jnp.asarray(g.cos_theta, jnp.float32)
+        fl = _flops(l_max, g.n_rings, K)
+        dt = time_call(lambda: kops.synth(a32, m_vals, x32, pmm, pms,
+                                          l_max=l_max, variant=var), iters=1)
+        emit(f"recurrence/synth/pallas-{var}-interp/lmax{l_max}/K{K}",
+             dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+        dw = jnp.ones((l_max + 1, 1, g.n_rings, 2 * K), jnp.float32)
+        dt = time_call(lambda: kops.anal(dw, m_vals, x32, pmm, pms,
+                                         l_max=l_max, variant=var), iters=1)
+        emit(f"recurrence/anal/pallas-{var}-interp/lmax{l_max}/K{K}",
+             dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Paper Fig. 4: alpha-beta model -- runtime vs n_proc, vs problem size,
+and the compute/communication crossover contour.
+
+Columns: name, us_per_call = modelled total time, derived =
+compute_us/comm_us/crossover.
+"""
+
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import comm_model as CM
+from benchmarks.common import emit
+
+
+def main():
+    for params in (CM.MPICH_CLUSTER, CM.TPU_V5E_ICI):
+        # left panel: fixed size (nside=4096), sweep processes
+        for p in (16, 64, 256, 1024, 4096):
+            t = CM.sht_times(4096, p, params)
+            emit(f"scaling-model/{params.name}/nside4096/p{p}",
+                 t["total"] * 1e6,
+                 f"comp={t['compute']*1e6:.0f}us comm={t['comm']*1e6:.0f}us")
+        # middle panel: fixed processes (512), sweep size
+        for nside in (1024, 2048, 4096, 8192, 16384):
+            t = CM.sht_times(nside, 512, params)
+            emit(f"scaling-model/{params.name}/p512/nside{nside}",
+                 t["total"] * 1e6,
+                 f"comp={t['compute']*1e6:.0f}us comm={t['comm']*1e6:.0f}us")
+        # right panel: crossover process count per size
+        for nside in (1024, 4096, 16384):
+            c = CM.crossover_nproc(nside, params)
+            emit(f"scaling-model/{params.name}/crossover/nside{nside}",
+                 0.0, f"crossover_nproc={c}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Paper Fig. 15: relative speed-up across problem sizes.
+
+The paper reports MPI/CUDA vs MPI/OpenMP speed-up per process count.  Our
+measurable analogue on this container: the f32 engine vs the f64 engine
+(the precision/layout transformation that enables the TPU kernels), the
+fold optimisation, and the batched-K amortisation -- each as a ratio at
+several sizes.  Columns: name, us_per_call (optimised path), derived =
+speedup vs baseline.
+"""
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import grids, legendre, sht
+from benchmarks.common import emit, time_call
+
+KEY = jax.random.PRNGKey(3)
+
+
+def main():
+    for l_max in (128, 256):
+        g = grids.make_grid("gl", l_max=l_max)
+        lm = legendre.log_mu(l_max)
+        m_vals = np.arange(l_max + 1)
+        alm = sht.random_alm(KEY, l_max, l_max)
+        a_re = np.real(np.asarray(alm))
+        a_im = np.imag(np.asarray(alm))
+
+        base = time_call(lambda: legendre.delta_from_alm(
+            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm,
+            l_max=l_max, dtype=np.float64), iters=2)
+        f32 = time_call(lambda: legendre.delta_from_alm(
+            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm,
+            l_max=l_max, dtype=np.float32), iters=2)
+        emit(f"speedup/f32-vs-f64/lmax{l_max}", f32 * 1e6,
+             f"x{base / f32:.2f}")
+
+        nh = (g.n_rings + 1) // 2
+        fold = time_call(lambda: legendre.delta_from_alm_folded(
+            a_re, a_im, m_vals, g.cos_theta[:nh], g.sin_theta[:nh], lm,
+            l_max=l_max), iters=2)
+        emit(f"speedup/fold-vs-unfold/lmax{l_max}", fold * 1e6,
+             f"x{base / fold:.2f}")
+
+    # batched-K amortisation (the MXU story at the algorithmic level):
+    # per-map time shrinks as K grows because P generation is shared.
+    l_max = 128
+    g = grids.make_grid("gl", l_max=l_max)
+    lm = legendre.log_mu(l_max)
+    m_vals = np.arange(l_max + 1)
+    t1 = None
+    for K in (1, 4, 16):
+        alm = sht.random_alm(KEY, l_max, l_max, K=K)
+        a_re = np.real(np.asarray(alm))
+        a_im = np.imag(np.asarray(alm))
+        t = time_call(lambda: legendre.delta_from_alm(
+            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm, l_max=l_max),
+            iters=2)
+        if K == 1:
+            t1 = t
+        emit(f"speedup/batched-K{K}/lmax{l_max}", t / K * 1e6,
+             f"per-map x{t1 / (t / K):.2f} vs K=1")
+
+
+if __name__ == "__main__":
+    main()

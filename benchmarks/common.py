@@ -1,0 +1,24 @@
+"""Shared benchmark utilities: timing, CSV emission."""
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_call(fn, *args, warmup=1, iters=3, **kw):
+    """Median wall time of a jitted call (block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name, us_per_call, derived=""):
+    print(f"{name},{us_per_call:.1f},{derived}")

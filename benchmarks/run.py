@@ -1,0 +1,26 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.  Wall times are CPU-host
+times (TPU projections live in the roofline analysis; EXPERIMENTS.md).
+"""
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_recurrence,
+                            bench_scaling_model, bench_fft, bench_speedup,
+                            bench_breakdown)
+    print("name,us_per_call,derived")
+    for mod in (bench_accuracy, bench_recurrence, bench_scaling_model,
+                bench_fft, bench_speedup, bench_breakdown):
+        try:
+            mod.main()
+        except Exception as e:  # keep the harness going
+            print(f"{mod.__name__}/ERROR,0.0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,66 @@
+"""End-to-end CMB-style pipeline (the paper's target application):
+
+  C_l power spectrum -> Gaussian a_lm realisations (a Monte-Carlo batch)
+  -> alm2map synthesis -> add white noise -> map2alm analysis ->
+  pseudo-C_l estimation and comparison against the input spectrum.
+
+Runs distributed when multiple devices are available (set
+XLA_FLAGS=--xla_force_host_platform_device_count=8 to exercise the
+shard_map two-stage transforms on CPU), serial otherwise.
+
+    PYTHONPATH=src python examples/cmb_pipeline.py --lmax 96 --K 8
+"""
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import dist_sht, grids, plan as planlib, sht, spectra
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lmax", type=int, default=96)
+    ap.add_argument("--K", type=int, default=8, help="Monte-Carlo batch")
+    ap.add_argument("--noise", type=float, default=1e-3)
+    a = ap.parse_args()
+
+    key = jax.random.PRNGKey(1)
+    cl = spectra.cmb_like_cl(a.lmax)
+    alm = spectra.alm_from_cl(key, cl, K=a.K)
+    grid = grids.make_grid("gl", l_max=a.lmax)
+
+    n_dev = jax.device_count()
+    if n_dev > 1:
+        mesh = jax.make_mesh((n_dev,), ("procs",))
+        plan = planlib.SHTPlan(grid, a.lmax, a.lmax, n_dev)
+        d = dist_sht.DistSHT(plan, mesh, ("procs",))
+        print(f"distributed transforms: {plan.describe()}")
+        maps = d.alm2map(jnp.asarray(plan.pack_alm(np.asarray(alm))))
+        noise = a.noise * jax.random.normal(key, maps.shape)
+        alm_back = plan.unpack_alm(np.asarray(d.map2alm(maps + noise)))
+    else:
+        t = sht.SHT(grid, l_max=a.lmax, m_max=a.lmax)
+        print(f"serial transforms on {grid.name} ({grid.n_rings} rings)")
+        maps = t.alm2map(alm)
+        noise = a.noise * jax.random.normal(key, maps.shape)
+        alm_back = t.map2alm(maps + noise)
+
+    cl_est = np.asarray(spectra.cl_from_alm(jnp.asarray(alm_back))).mean(-1)
+    l = np.arange(2, a.lmax + 1)
+    rel = np.abs(cl_est[2:] - cl[2:]) / cl[2:]
+    cosmic = np.sqrt(2.0 / (2 * l + 1) / a.K)          # cosmic variance
+    print(f"map rms: {float(jnp.std(maps)):.4e}  "
+          f"noise rms: {a.noise:.1e}")
+    print(f"pseudo-C_l rel. error: median={np.median(rel):.3f} "
+          f"(cosmic-variance bound ~{np.median(cosmic):.3f})")
+    ok = np.median(rel) < 5 * np.median(cosmic) + a.noise * 10
+    print("PASS" if ok else "FAIL: spectrum recovery outside expectations")
+    raise SystemExit(0 if ok else 1)
+
+
+if __name__ == "__main__":
+    main()

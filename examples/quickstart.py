@@ -1,0 +1,45 @@
+"""Quickstart: the paper's validation experiment in 30 lines.
+
+Synthesises a map from random a_lm (inverse SHT), analyses it back (direct
+SHT), and reports the round-trip error D_err (paper eq. 19) -- on the
+exact Gauss-Legendre grid this sits at machine precision.
+
+    PYTHONPATH=src python examples/quickstart.py [--lmax 128]
+"""
+
+import argparse
+
+import jax
+
+import repro  # noqa: F401
+from repro.core import grids, sht, spectra
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lmax", type=int, default=128)
+    ap.add_argument("--grid", default="gl", choices=["gl", "healpix_ring"])
+    ap.add_argument("--K", type=int, default=2, help="simultaneous maps")
+    a = ap.parse_args()
+
+    if a.grid == "gl":
+        grid = grids.make_grid("gl", l_max=a.lmax)
+    else:
+        grid = grids.make_grid("healpix_ring", nside=max(a.lmax // 2, 1))
+    t = sht.SHT(grid, l_max=a.lmax, m_max=a.lmax)
+
+    key = jax.random.PRNGKey(0)
+    alm = sht.random_alm(key, a.lmax, a.lmax, K=a.K)   # uniform (-1,1), paper §5
+    maps = t.alm2map(alm)          # inverse SHT (synthesis)
+    alm_back = t.map2alm(maps)     # direct SHT (analysis)
+
+    err = spectra.d_err(alm, alm_back)
+    print(f"grid={grid.name} rings={grid.n_rings} n_pix={grid.n_pix} "
+          f"l_max={a.lmax} K={a.K}")
+    print(f"round-trip D_err = {err:.3e}"
+          + ("  (exact quadrature: machine precision)" if a.grid == "gl"
+             else "  (approximate quadrature, paper Fig. 8 regime)"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,206 @@
+"""Render the roofline/dry-run tables for EXPERIMENTS.md from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python scripts/make_report.py > results/roofline_tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+
+def attention_flops(arch, shape_name):
+    """Attention-score flops excluded from the 6*N*D convention (for the
+    `useful+attn` column).  Causal halves the S^2 term; windowed/local
+    attention bounds it; ssm archs have none."""
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    cfg = registry.get(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "ssm":
+        return 0.0
+    H = cfg.n_heads
+    if cfg.attention == "mla":
+        qk_d = cfg.qk_nope_dim + cfg.qk_rope_dim
+        v_d = cfg.v_head_dim
+    else:
+        qk_d = v_d = cfg.hd
+    if cfg.block_pattern:  # hybrid: only the 'local' layers attend
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.block_pattern[i % len(cfg.block_pattern)] == "local")
+        win = cfg.local_window
+    else:
+        n_attn = cfg.n_layers + cfg.n_encoder_layers
+        win = cfg.sliding_window
+    if shape.kind == "decode":
+        ctx = min(S, win) if win else S
+        per_tok = 2.0 * H * (qk_d + v_d) * ctx
+        return B * n_attn * per_tok
+    eff = min(S, win) if win else S
+    per_layer = 2.0 * B * H * (qk_d + v_d) * S * eff / 2.0   # causal half
+    mult = 3.0 if shape.kind == "train" else 1.0             # +backward
+    return n_attn * per_layer * mult
+
+
+def moe_ragged_inflation(arch, shape_name, n_dev):
+    """Per-device phantom flops from XLA's ragged_dot cost accounting.
+
+    HloCostAnalysis charges ragged_dot as a DENSE dot over all groups
+    (verified: 128x64 @ (8,64,32) groups is counted as ~8x the true work),
+    so MoE expert matmuls are inflated by E_local.  A real TPU grouped
+    matmul does group_sizes-proportional work; we subtract the analytic
+    phantom so t_comp reflects deployable compute.  Raw numbers stay in
+    the JSONs (`roofline` field).
+    """
+    from repro.configs import registry
+    from repro.configs.base import SHAPES
+    cfg = registry.get(arch)
+    if not cfg.n_experts:
+        return 0.0
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    s_model = 16
+    n_rows_mesh = n_dev // s_model
+    e_loc = cfg.n_experts // s_model
+    d, ff = cfg.d_model, cfg.moe_d_ff
+    n_moe = cfg.n_layers - cfg.first_dense_layers
+    if shape.kind == "decode":
+        t_loc = max(B // n_rows_mesh, 1) * 1
+        cap = int(-(-t_loc * cfg.top_k * cfg.capacity_factor // s_model))
+        rows = cap                       # replicated path
+        mult = 1.0
+    else:
+        t_loc = (B // n_rows_mesh) * S // s_model
+        cap = int(-(-t_loc * cfg.top_k * cfg.capacity_factor // s_model))
+        rows = s_model * cap             # a2a recv buffer
+        mult = 3.0 if shape.kind == "train" else 1.0
+    true_ffn = rows * 3 * 2 * d * ff
+    return true_ffn * (e_loc - 1) * mult * n_moe
+
+
+def fmt_t(x):
+    if x is None:
+        return "-"
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def fmt_b(x):
+    for unit, div in (("TB", 1e12), ("GB", 1e9), ("MB", 1e6), ("kB", 1e3)):
+        if x >= div:
+            return f"{x/div:.2f}{unit}"
+    return f"{x:.0f}B"
+
+
+def load(out_dir):
+    recs = {}
+    for f in glob.glob(os.path.join(out_dir, "*.json")):
+        r = json.load(open(f))
+        recs[r["tag"]] = r
+    return recs
+
+
+ARCH_ORDER = ["kimi-k2-1t-a32b", "deepseek-v3-671b", "internvl2-1b",
+              "qwen1.5-32b", "qwen3-8b", "h2o-danube-3-4b", "qwen2-0.5b",
+              "xlstm-125m", "recurrentgemma-9b", "whisper-large-v3",
+              "sht_cmb"]
+LM_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+SHT_SHAPES = ["synth_2k_k8", "synth_4k_k1", "anal_4k_k4", "synth_8k_k4"]
+
+
+def table(recs, mesh):
+    lines = [
+        "| arch | shape | status | t_comp | t_mem | t_coll | bottleneck | "
+        "useful/HLO | +attn | roofline frac | HBM/dev (args+tmp) | compile |",
+        "|---|---|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        shapes = SHT_SHAPES if arch == "sht_cmb" else LM_SHAPES
+        for shape in shapes:
+            tag = f"{arch}__{shape}__{mesh}"
+            r = recs.get(tag)
+            if r is None:
+                lines.append(f"| {arch} | {shape} | (pending) "
+                             "| | | | | | | | | |")
+                continue
+            if r["status"] == "skip":
+                lines.append(f"| {arch} | {shape} | SKIP: "
+                             f"{r['reason'][:60]}... | | | | | | | | | |")
+                continue
+            if r["status"] == "error":
+                lines.append(f"| {arch} | {shape} | ERROR: "
+                             f"{r['error'][:60]} | | | | | | | | | |")
+                continue
+            ro = r["roofline"]
+            mem = r.get("memory_analysis", {})
+            hbm = (mem.get("argument_size_in_bytes", 0)
+                   + mem.get("temp_size_in_bytes", 0))
+            flops_dev = ro["flops_per_device"]
+            if arch != "sht_cmb":
+                flops_dev = max(
+                    flops_dev - moe_ragged_inflation(arch, shape,
+                                                     ro["n_devices"]), 0.0)
+            t_comp = flops_dev / 197e12
+            tot_hlo = flops_dev * ro["n_devices"]
+            t_max = max(t_comp, ro["t_memory_s"], ro["t_collective_s"])
+            bot = {t_comp: "compute", ro["t_memory_s"]: "memory",
+                   ro["t_collective_s"]: "collective"}[t_max]
+            t_useful = ro["model_flops"] / max(ro["n_devices"], 1) / 197e12
+            frac = t_useful / t_max if t_max else 0.0
+            if arch != "sht_cmb" and tot_hlo > 0:
+                ua = (ro["model_flops"]
+                      + attention_flops(arch, shape)) / tot_hlo
+                ua_s = f"{min(ua, 9.999):.3f}"
+                u_s = f"{ro['model_flops'] / tot_hlo:.3f}"
+            else:
+                ua_s = "-"
+                u_s = f"{ro['useful_flops_fraction']:.3f}"
+                frac = ro["roofline_fraction"]
+            lines.append(
+                f"| {arch} | {shape} | ok "
+                f"| {fmt_t(t_comp)} | {fmt_t(ro['t_memory_s'])} "
+                f"| {fmt_t(ro['t_collective_s'])} | {bot} "
+                f"| {u_s} | {ua_s} "
+                f"| {frac:.3f} "
+                f"| {fmt_b(hbm)} | {r.get('compile_s', 0):.0f}s |")
+    return "\n".join(lines)
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(out_dir)
+    n_ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    n_skip = sum(1 for r in recs.values() if r["status"] == "skip")
+    n_err = sum(1 for r in recs.values() if r["status"] == "error")
+    print(f"<!-- generated by scripts/make_report.py: {n_ok} ok, "
+          f"{n_skip} skip, {n_err} error -->\n")
+    for mesh in ("single", "multi"):
+        print(f"### Mesh: {mesh} "
+              f"({'2x16x16 = 512 chips' if mesh == 'multi' else '16x16 = 256 chips'})\n")
+        print(table(recs, mesh))
+        print()
+    # hillclimb variants, if present
+    extras = {t: r for t, r in recs.items() if t.count("__") > 2}
+    if extras:
+        print("### Optimisation-variant cells (hillclimb)\n")
+        print("| tag | t_comp | t_mem | t_coll | bottleneck | roofline frac |")
+        print("|---|---|---|---|---|---|")
+        for t in sorted(extras):
+            r = extras[t]
+            if r["status"] != "ok":
+                print(f"| {t} | {r['status']} | | | | |")
+                continue
+            ro = r["roofline"]
+            print(f"| {t} | {fmt_t(ro['t_compute_s'])} "
+                  f"| {fmt_t(ro['t_memory_s'])} "
+                  f"| {fmt_t(ro['t_collective_s'])} | {ro['bottleneck']} "
+                  f"| {ro['roofline_fraction']:.3f} |")
+
+
+if __name__ == "__main__":
+    main()

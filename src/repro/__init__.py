@@ -1,0 +1,17 @@
+"""repro: Parallel Spherical Harmonic Transforms as a multi-pod JAX framework.
+
+Implements Szydlarski et al. (INRIA RR-7635) -- the two-stage distributed SHT
+with intra-node acceleration -- adapted to TPU (shard_map + Pallas), together
+with the assigned 10-architecture LM model zoo, training/serving substrate,
+multi-pod dry-run and roofline tooling.  See DESIGN.md.
+
+float64 is enabled globally: the SHT reference engine is double precision
+(matching the paper); all model/kernel code passes explicit dtypes and is
+unaffected by the default-dtype change.
+"""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+__version__ = "1.0.0"

@@ -1,0 +1,2 @@
+# One module per assigned architecture (exact public-literature configs)
+# plus the paper's own SHT configuration.  See registry.py.

@@ -1,0 +1,252 @@
+"""Iso-latitude sphere grids for spherical harmonic transforms.
+
+The paper (§2.2) restricts pixelisations to iso-latitude rings with
+equidistant pixels per ring, which is what makes the O(R_N * l_max^2)
+algorithm possible.  We provide three grid families:
+
+  * ``gl``            -- Gauss-Legendre rings (exact quadrature for
+                         band-limited fields), uniform n_phi.  The TPU
+                         production grid.
+  * ``healpix_ring``  -- HEALPix ring latitudes and area weights, but a
+                         uniform number of samples per ring ("ring-uniform"
+                         variant).  Approximate quadrature, mirroring the
+                         paper's HEALPix error behaviour, TPU friendly.
+  * ``healpix``       -- true HEALPix ring structure (n_phi = 4i in the
+                         polar caps).  Ragged; used by the bucketed CPU
+                         validation path only.
+
+All geometry is computed with numpy in float64 at plan time; nothing here
+touches jax device state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+__all__ = [
+    "RingGrid",
+    "gauss_legendre_grid",
+    "healpix_ring_grid",
+    "healpix_grid",
+    "make_grid",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class RingGrid:
+    """Geometry of an iso-latitude ring grid.
+
+    Rings are stored north-to-south.  ``n_phi`` may vary per ring (true
+    HEALPix) or be constant (``uniform`` grids).  ``phi0`` is the azimuth of
+    the first pixel in each ring (paper eq. 11 phase factor).
+    """
+
+    name: str
+    cos_theta: np.ndarray     # (R,) float64, ring latitudes (cos theta), descending
+    sin_theta: np.ndarray     # (R,) float64, sin theta (>0)
+    weights: np.ndarray       # (R,) float64, quadrature weight per *sample* on the ring
+    n_phi: np.ndarray         # (R,) int64, samples per ring
+    phi0: np.ndarray          # (R,) float64, azimuth of first sample per ring
+    uniform: bool             # all rings share n_phi
+    nside: Optional[int] = None  # set for healpix-family grids
+
+    @property
+    def n_rings(self) -> int:
+        return int(self.cos_theta.shape[0])
+
+    @property
+    def n_pix(self) -> int:
+        return int(self.n_phi.sum())
+
+    @property
+    def max_n_phi(self) -> int:
+        return int(self.n_phi.max())
+
+    @property
+    def equator_symmetric(self) -> bool:
+        """True if ring i and ring R-1-i are mirror images (cosθ -> -cosθ)."""
+        ct = self.cos_theta
+        return bool(np.allclose(ct, -ct[::-1], atol=1e-12))
+
+    def ring_areas(self) -> np.ndarray:
+        """Total quadrature weight per ring (weight * n_phi)."""
+        return self.weights * self.n_phi
+
+    def validate(self) -> None:
+        assert self.cos_theta.ndim == 1
+        r = self.n_rings
+        for arr in (self.sin_theta, self.weights, self.n_phi, self.phi0):
+            assert arr.shape == (r,), (arr.shape, r)
+        assert np.all(np.diff(self.cos_theta) < 0), "rings must go north->south"
+        assert np.all(self.sin_theta > 0)
+        assert np.all(self.n_phi >= 1)
+        if self.uniform:
+            assert np.all(self.n_phi == self.n_phi[0])
+        # Sum of all weights approximates the sphere area 4*pi.
+        total = float(np.sum(self.weights * self.n_phi))
+        assert abs(total - 4.0 * np.pi) < 1e-6 * 4.0 * np.pi, total
+
+
+# ---------------------------------------------------------------------------
+# Gauss-Legendre grid
+# ---------------------------------------------------------------------------
+
+
+def _gauss_legendre_nodes(n: int) -> tuple[np.ndarray, np.ndarray]:
+    """Nodes & weights of n-point Gauss-Legendre quadrature on [-1, 1].
+
+    Newton iteration on P_n with the standard Chebyshev initial guess.
+    float64, no scipy.  Matches numpy.polynomial.legendre.leggauss (which we
+    also use as a cross-check in tests) to ~1e-15.
+    """
+    k = np.arange(1, n + 1, dtype=np.float64)
+    x = np.cos(np.pi * (k - 0.25) / (n + 0.5))  # initial guess, descending
+    for _ in range(100):
+        # Evaluate P_n(x) and P_{n-1}(x) via the (unnormalised) recurrence.
+        p0 = np.ones_like(x)
+        p1 = x.copy()
+        for ell in range(2, n + 1):
+            p0, p1 = p1, ((2 * ell - 1) * x * p1 - (ell - 1) * p0) / ell
+        # derivative: P'_n = n (x P_n - P_{n-1}) / (x^2 - 1)
+        dp = n * (x * p1 - p0) / (x * x - 1.0)
+        dx = p1 / dp
+        x = x - dx
+        if np.max(np.abs(dx)) < 1e-15:
+            break
+    # weights: w = 2 / ((1 - x^2) P'_n(x)^2)
+    p0 = np.ones_like(x)
+    p1 = x.copy()
+    for ell in range(2, n + 1):
+        p0, p1 = p1, ((2 * ell - 1) * x * p1 - (ell - 1) * p0) / ell
+    dp = n * (x * p1 - p0) / (x * x - 1.0)
+    w = 2.0 / ((1.0 - x * x) * dp * dp)
+    return x, w
+
+
+def gauss_legendre_grid(l_max: int, n_rings: Optional[int] = None,
+                        n_phi: Optional[int] = None) -> RingGrid:
+    """Gauss-Legendre grid, exact for fields band-limited at ``l_max``.
+
+    Defaults: ``n_rings = l_max + 1`` (GL quadrature of degree 2*l_max+1 is
+    exact for the P_lm * P_l'm' integrand), ``n_phi = 2*l_max + 2`` (exact
+    azimuthal quadrature for |m| <= l_max, kept even for rfft friendliness).
+    """
+    if n_rings is None:
+        n_rings = l_max + 1
+    if n_phi is None:
+        n_phi = 2 * l_max + 2
+    x, w = _gauss_legendre_nodes(n_rings)
+    # x descending == north -> south already.
+    # Per-sample weight: ring weight * (2 pi / n_phi).
+    w_sample = w * (2.0 * np.pi / n_phi)
+    r = n_rings
+    return RingGrid(
+        name="gl",
+        cos_theta=x,
+        sin_theta=np.sqrt(1.0 - x * x),
+        weights=w_sample,
+        n_phi=np.full(r, n_phi, dtype=np.int64),
+        phi0=np.zeros(r, dtype=np.float64),
+        uniform=True,
+    )
+
+
+# ---------------------------------------------------------------------------
+# HEALPix-family grids
+# ---------------------------------------------------------------------------
+
+
+def _healpix_ring_geometry(nside: int):
+    """Ring latitudes / counts / phases of the HEALPix ring scheme.
+
+    Standard formulas (Gorski et al. 2005):
+      north cap   i = 1..nside-1 : z = 1 - i^2/(3 nside^2),  n_phi = 4i,
+                                   phi0 = pi / (4 i)
+      equatorial  i = nside..3*nside : z = 4/3 - 2i/(3 nside),  n_phi = 4 nside,
+                                   phi0 = (pi / (4 nside)) * ((i - nside + 1) % 2)
+      south cap: mirror of the north cap.
+    """
+    assert nside >= 1
+    zs, nphis, phi0s = [], [], []
+    for i in range(1, nside):  # north polar cap
+        zs.append(1.0 - (i * i) / (3.0 * nside * nside))
+        nphis.append(4 * i)
+        phi0s.append(np.pi / (4.0 * i))
+    for i in range(nside, 3 * nside + 1):  # equatorial belt (incl. equator)
+        zs.append(4.0 / 3.0 - 2.0 * i / (3.0 * nside))
+        nphis.append(4 * nside)
+        s = (i - nside + 1) % 2
+        phi0s.append((np.pi / (4.0 * nside)) * s)
+    for i in range(nside - 1, 0, -1):  # south polar cap
+        zs.append(-(1.0 - (i * i) / (3.0 * nside * nside)))
+        nphis.append(4 * i)
+        phi0s.append(np.pi / (4.0 * i))
+    z = np.asarray(zs, dtype=np.float64)
+    n_phi = np.asarray(nphis, dtype=np.int64)
+    phi0 = np.asarray(phi0s, dtype=np.float64)
+    return z, n_phi, phi0
+
+
+def healpix_grid(nside: int) -> RingGrid:
+    """True HEALPix ring grid (ragged n_phi).  Equal-area sample weights."""
+    z, n_phi, phi0 = _healpix_ring_geometry(nside)
+    n_pix = 12 * nside * nside
+    w_pix = 4.0 * np.pi / n_pix  # equal-area pixels
+    r = z.shape[0]
+    return RingGrid(
+        name="healpix",
+        cos_theta=z,
+        sin_theta=np.sqrt(1.0 - z * z),
+        weights=np.full(r, w_pix, dtype=np.float64),
+        n_phi=n_phi,
+        phi0=phi0,
+        uniform=False,
+        nside=nside,
+    )
+
+
+def healpix_ring_grid(nside: int) -> RingGrid:
+    """Ring-uniform HEALPix variant: same latitudes & per-ring areas as
+    HEALPix, but a uniform ``n_phi = 4*nside`` samples on every ring.
+
+    The theta quadrature (and hence the approximate-analysis error behaviour,
+    paper Fig. 8) is identical to HEALPix; the phi quadrature is exact for
+    m < 2*nside on every ring.  This is the TPU-friendly variant: one batched
+    FFT of length 4*nside serves every ring.
+    """
+    z, n_phi_true, phi0 = _healpix_ring_geometry(nside)
+    n_pix = 12 * nside * nside
+    ring_area = (4.0 * np.pi / n_pix) * n_phi_true  # true HEALPix ring areas
+    n_phi_u = 4 * nside
+    w_sample = ring_area / n_phi_u
+    r = z.shape[0]
+    return RingGrid(
+        name="healpix_ring",
+        cos_theta=z,
+        sin_theta=np.sqrt(1.0 - z * z),
+        weights=w_sample.astype(np.float64),
+        n_phi=np.full(r, n_phi_u, dtype=np.int64),
+        phi0=phi0,
+        uniform=True,
+        nside=nside,
+    )
+
+
+def make_grid(kind: str, *, l_max: Optional[int] = None,
+              nside: Optional[int] = None, **kw) -> RingGrid:
+    if kind == "gl":
+        assert l_max is not None, "gl grid needs l_max"
+        g = gauss_legendre_grid(l_max, **kw)
+    elif kind == "healpix_ring":
+        assert nside is not None, "healpix_ring grid needs nside"
+        g = healpix_ring_grid(nside)
+    elif kind == "healpix":
+        assert nside is not None, "healpix grid needs nside"
+        g = healpix_grid(nside)
+    else:
+        raise ValueError(f"unknown grid kind: {kind!r}")
+    g.validate()
+    return g

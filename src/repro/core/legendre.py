@@ -1,0 +1,365 @@
+"""Normalised associated Legendre functions via the scaled two-term recurrence.
+
+Implements the paper's §2.1 machinery in a vectorised, branch-free form:
+
+  recurrence (paper eq. 7, with the sign corrected -- the published "+" is a
+  typo; the standard normalised recurrence is)
+
+      P_{l,m}(x) = beta_{l,m} * x * P_{l-1,m}(x) - (beta_{l,m}/beta_{l-1,m}) * P_{l-2,m}(x)
+      beta_{l,m} = sqrt((4 l^2 - 1) / (l^2 - m^2))                (paper eq. 8)
+
+  seeds (paper eqs. 9-10, normalised convention P_mm = mu_m (1-x^2)^{m/2})
+
+      mu_m   = sqrt(1/(4 pi)) * prod_{k=1..m} sqrt((2k+1)/(2k))
+      P_{m+1,m} = sqrt(2m+3) * x * P_mm
+
+  and the under/overflow rescaling: instead of the paper's per-value test and
+  scale-vector lookup (a scalar-code construct), we carry every P value as a
+  (mantissa, scale) pair with P = mant * 2^(scale * SCALE_BITS), scale <= 0,
+  and renormalise with vector selects.  Contributions with scale < 0 (i.e.
+  |P| < 2^-(SCALE_BITS/2)) are dropped from accumulations; they are below the
+  dtype's resolution by construction.  This is the SIMD-uniform TPU adaptation
+  of the paper's scheme (DESIGN.md §2).
+
+Everything in this module is pure jnp and dtype-parametric: float64 for the
+reference/validation engine, float32 matching the Pallas kernel numerics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "log_mu",
+    "scale_bits_for",
+    "pmm_scaled",
+    "recurrence_step",
+    "delta_from_alm",
+    "alm_from_delta",
+    "delta_from_alm_folded",
+    "alm_from_delta_folded",
+]
+
+_LN2 = float(np.log(2.0))
+
+
+def scale_bits_for(dtype) -> int:
+    """SCALE_BITS used by the scaled recurrence for a given dtype."""
+    dtype = jnp.dtype(dtype)
+    if dtype == jnp.dtype(jnp.float64):
+        return 512
+    if dtype == jnp.dtype(jnp.float32):
+        return 64
+    raise ValueError(f"unsupported recurrence dtype {dtype}")
+
+
+def log_mu(m_max: int) -> np.ndarray:
+    """log(mu_m) for m = 0..m_max (host-side, float64).
+
+    mu_m = sqrt(1/(4 pi)) * prod_{k=1..m} sqrt((2k+1)/(2k)); computed as a
+    cumulative sum of logs so it is exact to f64 rounding for any m.
+    """
+    m = np.arange(1, m_max + 1, dtype=np.float64)
+    inc = 0.5 * np.log((2.0 * m + 1.0) / (2.0 * m))
+    out = np.empty(m_max + 1, dtype=np.float64)
+    out[0] = -0.5 * np.log(4.0 * np.pi)
+    out[1:] = out[0] + np.cumsum(inc)
+    return out
+
+
+def pmm_scaled(log_mu_m, m, sin_theta, *, dtype, scale_bits: int):
+    """Scaled seed P_mm = mu_m * sin(theta)^m as (mantissa, scale).
+
+    log P_mm = log mu_m + m * log(sin theta); split into scale * SCALE_BITS
+    octaves + mantissa so the seed is representable for any m, theta.
+    All logs are evaluated in float64 on the *host-precision* path (inputs may
+    be numpy) and cast at the end, so the f32 engine seeds are as accurate as
+    f32 allows.
+    """
+    log_p = log_mu_m + m * jnp.log(sin_theta)  # f64 if inputs are f64
+    denom = scale_bits * _LN2
+    # round (not floor): keeps the mantissa within [2^-B/2, 2^B/2] and maps
+    # any representable P (log_p near 0) to scale == 0 exactly.
+    scale = jnp.minimum(jnp.round(log_p / denom), 0.0)
+    mant = jnp.exp(log_p - scale * denom)
+    return mant.astype(dtype), scale.astype(jnp.int32)
+
+
+def _beta(l, m, dtype):
+    """beta_{l,m}; caller guarantees l > m (paper eq. 8)."""
+    l = l.astype(dtype) if hasattr(l, "astype") else jnp.asarray(l, dtype)
+    m = m.astype(dtype) if hasattr(m, "astype") else jnp.asarray(m, dtype)
+    return jnp.sqrt((4.0 * l * l - 1.0) / (l * l - m * m))
+
+
+def recurrence_step(l, m, x, mant_prev, mant_curr, scale, pmm_mant, pmm_scale,
+                    *, scale_bits: int, dtype):
+    """One vectorised step of the scaled recurrence at multipole ``l``.
+
+    Shapes: ``m`` is (M, 1), ``x`` is (1, R) (or any broadcastable pair);
+    carries are (M, R).  Returns (new_prev, new_curr, new_scale, value) where
+    ``value`` is the descaled P_{l,m} (zero wherever scale < 0 or l < m).
+    """
+    fdt = dtype
+    lf = jnp.asarray(l, fdt)
+    mf = m.astype(fdt)
+    # beta_{l,m} and beta_{l-1,m}: guard the l <= m+1 cases with safe values.
+    # (Also guards padded lanes with m = -1 used by the distributed plan:
+    # those never seed, so any finite beta keeps them at exactly zero.)
+    safe = lambda v: jnp.where(jnp.isfinite(v), v, 0.0)
+    bl = safe(_beta(jnp.maximum(lf, mf + 2.0), m, fdt))
+    blm1 = safe(_beta(jnp.maximum(lf - 1.0, mf + 1.0), m, fdt))
+    ratio = jnp.where(blm1 > 0, bl / jnp.where(blm1 > 0, blm1, 1.0), 0.0)
+    two_m_p3 = jnp.sqrt(jnp.maximum(2.0 * mf + 3.0, 0.0))
+
+    p_rec = bl * x * mant_curr - ratio * mant_prev
+    p_first = two_m_p3 * x * mant_curr          # l == m+1 (curr holds P_mm)
+    is_seed = l == m                             # (M, 1) broadcast
+    is_first = l == m + 1
+    before = l < m
+
+    new_curr = jnp.where(before, 0.0,
+               jnp.where(is_seed, pmm_mant,
+               jnp.where(is_first, p_first, p_rec)))
+    new_prev = jnp.where(before | is_seed, 0.0, mant_curr)
+    new_scale = jnp.where(is_seed, pmm_scale, scale)
+
+    # Renormalise: if the pair has grown past 2^(B/2), push an octave of
+    # 2^B back into the scale (only meaningful while scale < 0).
+    big = jnp.asarray(2.0, fdt) ** (scale_bits // 2)
+    inv_big2 = jnp.asarray(2.0, fdt) ** (-scale_bits)
+    grow = (jnp.abs(new_curr) > big) & (new_scale < 0)
+    new_curr = jnp.where(grow, new_curr * inv_big2, new_curr)
+    new_prev = jnp.where(grow, new_prev * inv_big2, new_prev)
+    new_scale = jnp.where(grow, new_scale + 1, new_scale)
+    # Shrink guard (pair heading to underflow while still scaled): rare for
+    # the synthesis direction (P grows towards the turning point) but present
+    # for completeness and required for very high m at near-polar rings.
+    small = (jnp.abs(new_curr) < 1.0 / big) & (jnp.abs(new_prev) < 1.0 / big) \
+        & (new_scale > jnp.int32(-32000)) & ~before & ~is_seed
+    big2 = jnp.asarray(2.0, fdt) ** scale_bits
+    new_curr2 = jnp.where(small, new_curr * big2, new_curr)
+    new_prev2 = jnp.where(small, new_prev * big2, new_prev)
+    new_scale2 = jnp.where(small, new_scale - 1, new_scale)
+
+    value = jnp.where((new_scale2 == 0) & ~before, new_curr2, 0.0)
+    return new_prev2, new_curr2, new_scale2, value
+
+
+def _prep(m_vals, grid_x, log_mu_all, dtype):
+    m = jnp.asarray(m_vals, jnp.int32)[:, None]                  # (M, 1)
+    x = jnp.asarray(grid_x, dtype)[None, :]                      # (1, R)
+    lm = jnp.asarray(log_mu_all, jnp.float64)[jnp.asarray(m_vals, jnp.int32)]
+    return m, x, lm[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
+def _delta_from_alm_impl(a_re, a_im, m, x, sin_theta, log_mu_m, *, l_max,
+                         scale_bits, dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]
+    K = a_re.shape[-1]
+    pmm_mant, pmm_scale = pmm_scaled(log_mu_m, m.astype(jnp.float64),
+                                     jnp.asarray(sin_theta, jnp.float64)[None, :],
+                                     dtype=dtype, scale_bits=scale_bits)
+    carry0 = (
+        jnp.zeros((M, R), dtype),          # P_{l-2} mantissa
+        jnp.zeros((M, R), dtype),          # P_{l-1} mantissa
+        jnp.zeros((M, R), jnp.int32),      # scale
+        jnp.zeros((M, R, K), dtype),       # d_re accumulator
+        jnp.zeros((M, R, K), dtype),       # d_im accumulator
+    )
+
+    def body(l, carry):
+        mp, mc, sc, dre, dim = carry
+        mp, mc, sc, val = recurrence_step(
+            l, m, x, mp, mc, sc, pmm_mant, pmm_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        # Delta_m(r) += a_{l,m} * P_{l,m}(r)   (paper eq. 12)
+        are = jax.lax.dynamic_index_in_dim(a_re, l, axis=1, keepdims=False)
+        aim = jax.lax.dynamic_index_in_dim(a_im, l, axis=1, keepdims=False)
+        dre = dre + val[..., None] * are[:, None, :]
+        dim = dim + val[..., None] * aim[:, None, :]
+        return mp, mc, sc, dre, dim
+
+    _, _, _, d_re, d_im = jax.lax.fori_loop(0, l_max + 1, body, carry0)
+    return d_re, d_im
+
+
+def delta_from_alm(a_re, a_im, m_vals, grid_x, grid_sin, log_mu_all, *,
+                   l_max: int, dtype=jnp.float64):
+    """Synthesis inner step: Delta^A_m(r) = sum_l a_lm P_lm(cos theta_r).
+
+    a_re/a_im: (M, l_max+1, K) with rows l < m zero-padded.
+    Returns (d_re, d_im): (M, R, K).  This is paper Algorithm 2 STEP 2 /
+    Algorithm 3 STEP 2, vectorised over (m, ring) with the l loop sequential.
+    """
+    dtype = jnp.dtype(dtype)
+    m, x, log_mu_m = _prep(m_vals, grid_x, log_mu_all, dtype)
+    sb = scale_bits_for(dtype)
+    return _delta_from_alm_impl(
+        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, x,
+        np.asarray(grid_sin, np.float64), log_mu_m,
+        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
+def _alm_from_delta_impl(d_re, d_im, m, x, sin_theta, log_mu_m, w, *, l_max,
+                         scale_bits, dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]
+    pmm_mant, pmm_scale = pmm_scaled(log_mu_m, m.astype(jnp.float64),
+                                     jnp.asarray(sin_theta, jnp.float64)[None, :],
+                                     dtype=dtype, scale_bits=scale_bits)
+    dw_re = d_re * w[None, :, None]
+    dw_im = d_im * w[None, :, None]
+    carry0 = (
+        jnp.zeros((M, R), dtype),
+        jnp.zeros((M, R), dtype),
+        jnp.zeros((M, R), jnp.int32),
+    )
+
+    def step(carry, l):
+        mp, mc, sc = carry
+        mp, mc, sc, val = recurrence_step(
+            l, m, x, mp, mc, sc, pmm_mant, pmm_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        # a_{l,m} = sum_r w_r Delta^S_m(r) P_lm(r)   (paper eq. 13)
+        a_re_l = jnp.einsum("mr,mrk->mk", val, dw_re)
+        a_im_l = jnp.einsum("mr,mrk->mk", val, dw_im)
+        return (mp, mc, sc), (a_re_l, a_im_l)
+
+    _, (a_re, a_im) = jax.lax.scan(step, carry0, jnp.arange(l_max + 1))
+    # scan stacks on axis 0 -> (L, M, K); reorder to (M, L, K).
+    return jnp.swapaxes(a_re, 0, 1), jnp.swapaxes(a_im, 0, 1)
+
+
+def alm_from_delta(d_re, d_im, m_vals, grid_x, grid_sin, weights, log_mu_all,
+                   *, l_max: int, dtype=jnp.float64):
+    """Analysis inner step: a_lm = sum_r w_r Delta^S_m(r) P_lm(cos theta_r).
+
+    d_re/d_im: (M, R, K).  Returns (a_re, a_im): (M, l_max+1, K) with rows
+    l < m exactly zero.  Paper Algorithm 1 STEP 3.
+    """
+    dtype = jnp.dtype(dtype)
+    m, x, log_mu_m = _prep(m_vals, grid_x, log_mu_all, dtype)
+    sb = scale_bits_for(dtype)
+    w = jnp.asarray(weights, dtype)
+    return _alm_from_delta_impl(
+        jnp.asarray(d_re, dtype), jnp.asarray(d_im, dtype), m, x,
+        np.asarray(grid_sin, np.float64), log_mu_m, w,
+        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+
+
+# ---------------------------------------------------------------------------
+# Equator-folded variants (beyond-paper optimisation; libpsht-style).
+#
+# P_lm(-x) = (-1)^(l+m) P_lm(x), so for a grid symmetric about the equator the
+# recurrence only needs to run over the northern half of the rings:
+#   Delta(north r) = E(r) + O(r),   Delta(mirror r) = E(r) - O(r)
+# with E/O the even/odd (l+m) partial sums.  Halves the recurrence flops; the
+# accumulate flops stay constant.  Used by the `fold=True` engine path and the
+# Pallas kernel hillclimb (EXPERIMENTS.md §Perf).
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
+def _delta_from_alm_folded_impl(a_re, a_im, m, x, sin_theta, log_mu_m, *,
+                                l_max, scale_bits, dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]      # R = number of *northern* rings
+    K = a_re.shape[-1]
+    pmm_mant, pmm_scale = pmm_scaled(log_mu_m, m.astype(jnp.float64),
+                                     jnp.asarray(sin_theta, jnp.float64)[None, :],
+                                     dtype=dtype, scale_bits=scale_bits)
+    zeros = lambda *s: jnp.zeros(s, dtype)
+    carry0 = (zeros(M, R), zeros(M, R), jnp.zeros((M, R), jnp.int32),
+              zeros(M, R, K), zeros(M, R, K),   # even re/im
+              zeros(M, R, K), zeros(M, R, K))   # odd re/im
+
+    def body(l, carry):
+        mp, mc, sc, ere, eim, ore_, oim = carry
+        mp, mc, sc, val = recurrence_step(
+            l, m, x, mp, mc, sc, pmm_mant, pmm_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        are = jax.lax.dynamic_index_in_dim(a_re, l, axis=1, keepdims=False)
+        aim = jax.lax.dynamic_index_in_dim(a_im, l, axis=1, keepdims=False)
+        cre = val[..., None] * are[:, None, :]
+        cim = val[..., None] * aim[:, None, :]
+        even = (((l + m) % 2) == 0)[..., None]     # (M, 1, 1)
+        ere = ere + jnp.where(even, cre, 0.0)
+        eim = eim + jnp.where(even, cim, 0.0)
+        ore_ = ore_ + jnp.where(even, 0.0, cre)
+        oim = oim + jnp.where(even, 0.0, cim)
+        return mp, mc, sc, ere, eim, ore_, oim
+
+    _, _, _, ere, eim, ore_, oim = jax.lax.fori_loop(0, l_max + 1, body, carry0)
+    return ere, eim, ore_, oim
+
+
+def delta_from_alm_folded(a_re, a_im, m_vals, north_x, north_sin, log_mu_all,
+                          *, l_max: int, dtype=jnp.float64):
+    """Folded synthesis: returns even/odd partials over the northern rings.
+
+    (d_even_re, d_even_im, d_odd_re, d_odd_im), each (M, R_north, K).
+    North ring r: even + odd; its mirror: even - odd.
+    """
+    dtype = jnp.dtype(dtype)
+    m, x, log_mu_m = _prep(m_vals, north_x, log_mu_all, dtype)
+    sb = scale_bits_for(dtype)
+    return _delta_from_alm_folded_impl(
+        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, x,
+        np.asarray(north_sin, np.float64), log_mu_m,
+        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
+def _alm_from_delta_folded_impl(s_e_re, s_e_im, s_o_re, s_o_im, m, x,
+                                sin_theta, log_mu_m, *, l_max, scale_bits,
+                                dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]
+    pmm_mant, pmm_scale = pmm_scaled(log_mu_m, m.astype(jnp.float64),
+                                     jnp.asarray(sin_theta, jnp.float64)[None, :],
+                                     dtype=dtype, scale_bits=scale_bits)
+    carry0 = (jnp.zeros((M, R), dtype), jnp.zeros((M, R), dtype),
+              jnp.zeros((M, R), jnp.int32))
+
+    def step(carry, l):
+        mp, mc, sc = carry
+        mp, mc, sc, val = recurrence_step(
+            l, m, x, mp, mc, sc, pmm_mant, pmm_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        even = (((l + m) % 2) == 0)[..., None]     # (M, 1) -> (M, 1, 1) below
+        sre = jnp.where(even, s_e_re, s_o_re)
+        sim = jnp.where(even, s_e_im, s_o_im)
+        a_re_l = jnp.einsum("mr,mrk->mk", val, sre)
+        a_im_l = jnp.einsum("mr,mrk->mk", val, sim)
+        return (mp, mc, sc), (a_re_l, a_im_l)
+
+    _, (a_re, a_im) = jax.lax.scan(step, carry0, jnp.arange(l_max + 1))
+    return jnp.swapaxes(a_re, 0, 1), jnp.swapaxes(a_im, 0, 1)
+
+
+def alm_from_delta_folded(sum_e_re, sum_e_im, sum_o_re, sum_o_im, m_vals,
+                          north_x, north_sin, log_mu_all, *, l_max: int,
+                          dtype=jnp.float64):
+    """Folded analysis.  Inputs are the pre-folded weighted sums over ring
+    pairs: sum_e = w_n*Delta(north) + w_s*Delta(south mirror), sum_o = the
+    difference (equator ring, if any, contributes to sum_e and sum_o with the
+    same value and half... no: with its own weight in sum_e and ZERO in sum_o
+    handled by the caller).  Each (M, R_north, K).
+    """
+    dtype = jnp.dtype(dtype)
+    m, x, log_mu_m = _prep(m_vals, north_x, log_mu_all, dtype)
+    sb = scale_bits_for(dtype)
+    return _alm_from_delta_folded_impl(
+        jnp.asarray(sum_e_re, dtype), jnp.asarray(sum_e_im, dtype),
+        jnp.asarray(sum_o_re, dtype), jnp.asarray(sum_o_im, dtype), m, x,
+        np.asarray(north_sin, np.float64), log_mu_m,
+        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)

@@ -1,0 +1,201 @@
+"""SHTPlan: the data-distribution plan for the parallel transforms.
+
+Encodes the paper's §4.1.1 layout decisions as static (numpy, host-side)
+arrays consumed by ``dist_sht``:
+
+* **m distribution with min-max pairing** (paper Fig. 5): the global m list
+  is reordered as [0, m_max, 1, m_max-1, ...] and pairs are dealt
+  round-robin to shards, so every shard's total recurrence length is the
+  paper's invariant  sum over pairs of (2 l_max - m_max + 2).  Padding slots
+  (m = -1) keep every shard's slot count identical -- the TPU analogue of
+  `Alltoallv` raggedness (DESIGN.md §2).
+* **ring distribution**: rings are dealt to shards as blocks of mirror pairs
+  (north_i, south_mirror_i) so each shard can fold about the equator; dummy
+  rings (weight 0) pad R to a multiple of the shard count.
+
+The plan is pure geometry: it never touches jax device state and can be
+built under `jax.eval_shape` / dry-run tracing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import numpy as np
+
+from repro.core import legendre
+from repro.core.grids import RingGrid
+
+__all__ = ["SHTPlan", "minmax_m_order"]
+
+
+def minmax_m_order(m_max: int) -> np.ndarray:
+    """[0, m_max, 1, m_max-1, ...] -- the min-max pair ordering."""
+    out = np.empty(m_max + 1, dtype=np.int64)
+    out[0::2] = np.arange((m_max + 2) // 2)
+    out[1::2] = m_max - np.arange((m_max + 1) // 2)
+    return out
+
+
+@dataclasses.dataclass(frozen=True)
+class SHTPlan:
+    """Distribution plan for a (grid, l_max, m_max, n_shards) problem."""
+
+    grid: RingGrid
+    l_max: int
+    m_max: int
+    n_shards: int
+
+    # ---- m axis ------------------------------------------------------------
+
+    @functools.cached_property
+    def m_assignment(self) -> np.ndarray:
+        """(n_shards, m_local) global m value per slot; -1 = padding.
+
+        Pairs from ``minmax_m_order`` are dealt round-robin: pair p goes to
+        shard p % n_shards, preserving the paper's balance invariant.
+        """
+        order = minmax_m_order(self.m_max)
+        # Group into pairs [(0, m_max), (1, m_max-1), ...]; a lone middle
+        # element (even m_max+1 count has none) forms a singleton pair.
+        pairs = [order[i:i + 2] for i in range(0, len(order), 2)]
+        per_shard: list[list[int]] = [[] for _ in range(self.n_shards)]
+        for p, pair in enumerate(pairs):
+            per_shard[p % self.n_shards].extend(int(v) for v in pair)
+        m_local = max(len(s) for s in per_shard)
+        out = np.full((self.n_shards, m_local), -1, dtype=np.int64)
+        for i, s in enumerate(per_shard):
+            out[i, : len(s)] = s
+        return out
+
+    @property
+    def m_local(self) -> int:
+        return self.m_assignment.shape[1]
+
+    @functools.cached_property
+    def m_flat(self) -> np.ndarray:
+        """(n_shards * m_local,) global m per global slot (row-major)."""
+        return self.m_assignment.reshape(-1)
+
+    @functools.cached_property
+    def recurrence_steps_per_shard(self) -> np.ndarray:
+        """Work balance diagnostic: total l-recurrence steps per shard."""
+        a = self.m_assignment
+        steps = np.where(a >= 0, self.l_max + 1 - np.maximum(a, 0), 0)
+        return steps.sum(axis=1)
+
+    def pack_alm(self, alm: np.ndarray) -> np.ndarray:
+        """(M, L, K) dense alm -> (n_shards * m_local, L, K) plan layout.
+
+        Padding slots are zero.  Works with numpy or jnp inputs.
+        """
+        M, L, K = alm.shape
+        assert M == self.m_max + 1 and L == self.l_max + 1
+        import jax.numpy as jnp
+        xp = jnp if not isinstance(alm, np.ndarray) else np
+        safe = np.maximum(self.m_flat, 0)
+        out = alm[safe]
+        mask = (self.m_flat >= 0)[:, None, None]
+        return xp.where(xp.asarray(mask), out, xp.zeros_like(out))
+
+    def unpack_alm(self, packed: np.ndarray) -> np.ndarray:
+        """Inverse of pack_alm (padding rows dropped)."""
+        import jax.numpy as jnp
+        xp = jnp if not isinstance(packed, np.ndarray) else np
+        M = self.m_max + 1
+        out_shape = (M,) + tuple(packed.shape[1:])
+        out = xp.zeros(out_shape, packed.dtype)
+        valid = self.m_flat >= 0
+        idx = self.m_flat[valid]
+        if xp is np:
+            out[idx] = packed[valid]
+            return out
+        return out.at[xp.asarray(idx)].set(packed[xp.asarray(valid)])
+
+    # ---- ring axis -----------------------------------------------------------
+
+    @functools.cached_property
+    def n_pairs_pad(self) -> int:
+        """Mirror-pair count padded to a multiple of n_shards."""
+        n_pairs = (self.grid.n_rings + 1) // 2
+        return -(-n_pairs // self.n_shards) * self.n_shards
+
+    @functools.cached_property
+    def ring_order(self) -> np.ndarray:
+        """(R_pad,) grid ring index per plan slot; -1 = dummy padding ring.
+
+        Pair-interleaved: slot 2i is pair i's northern ring, slot 2i+1 its
+        southern mirror.  An odd equator ring is a pair with a dummy south;
+        padding pairs are (dummy, dummy).  Every shard owns r_local/2
+        consecutive *pairs*, which is what the fold optimisation and the
+        tiled all_to_all both want.
+        """
+        R = self.grid.n_rings
+        out = np.full(2 * self.n_pairs_pad, -1, dtype=np.int64)
+        for i in range(R // 2):
+            out[2 * i] = i                 # northern ring
+            out[2 * i + 1] = R - 1 - i     # its mirror
+        if R % 2 == 1:
+            out[2 * (R // 2)] = R // 2     # equator (dummy south partner)
+        return out
+
+    @property
+    def r_pad(self) -> int:
+        return self.ring_order.shape[0]
+
+    @property
+    def r_local(self) -> int:
+        return self.r_pad // self.n_shards
+
+    @functools.cached_property
+    def north_order(self) -> np.ndarray:
+        """(n_pairs_pad,) grid ring index of each pair's north; -1 padding."""
+        return self.ring_order[0::2]
+
+    @functools.cached_property
+    def ring_geometry(self) -> dict[str, np.ndarray]:
+        """Per-plan-slot ring geometry (R_pad,), dummies weight-0/benign."""
+        g = self.grid
+        ro = self.ring_order
+        safe = np.maximum(ro, 0)
+        dummy = ro < 0
+        cos = np.where(dummy, 0.123456, g.cos_theta[safe])
+        sin = np.sqrt(1.0 - cos * cos)
+        w = np.where(dummy, 0.0, g.weights[safe])
+        phi0 = np.where(dummy, 0.0, g.phi0[safe])
+        nphi = np.where(dummy, g.max_n_phi, g.n_phi[safe])
+        return {"cos_theta": cos, "sin_theta": sin, "weights": w,
+                "phi0": phi0, "n_phi": nphi, "valid": ~dummy}
+
+    def scatter_map(self, maps_plan: np.ndarray) -> np.ndarray:
+        """(R_pad, n_phi, K) plan-order maps -> (R, n_phi, K) grid order."""
+        import jax.numpy as jnp
+        xp = jnp if not isinstance(maps_plan, np.ndarray) else np
+        R = self.grid.n_rings
+        out = xp.zeros((R,) + tuple(maps_plan.shape[1:]), maps_plan.dtype)
+        valid = self.ring_order >= 0
+        idx = self.ring_order[valid]
+        if xp is np:
+            out[idx] = maps_plan[valid]
+            return out
+        return out.at[xp.asarray(idx)].set(maps_plan[xp.asarray(valid)])
+
+    def gather_map(self, maps_grid: np.ndarray) -> np.ndarray:
+        """(R, n_phi, K) grid-order maps -> (R_pad, n_phi, K) plan order."""
+        import jax.numpy as jnp
+        xp = jnp if not isinstance(maps_grid, np.ndarray) else np
+        safe = np.maximum(self.ring_order, 0)
+        out = maps_grid[xp.asarray(safe)] if xp is not np else maps_grid[safe]
+        mask = (self.ring_order >= 0)[:, None, None]
+        return xp.where(xp.asarray(mask), out, xp.zeros_like(out))
+
+    # ---- logs ---------------------------------------------------------------
+
+    def describe(self) -> str:
+        steps = self.recurrence_steps_per_shard
+        return (f"SHTPlan(grid={self.grid.name}, l_max={self.l_max}, "
+                f"m_max={self.m_max}, shards={self.n_shards}, "
+                f"m_local={self.m_local}, r_pad={self.r_pad}, "
+                f"r_local={self.r_local}, "
+                f"balance={steps.min()}/{steps.max()} steps)")

@@ -1,0 +1,286 @@
+"""Serial/batched spherical harmonic transforms (the pure-jnp engine).
+
+Implements paper Algorithms 1 & 2 for iso-latitude grids:
+
+  alm2map (inverse / synthesis, paper eq. 11-12):
+      Delta^A_m(r) = sum_l a_lm P_lm(cos theta_r)        (Legendre stage)
+      s(r, phi_j)  = sum_m e^{i m phi_j} Delta^A_m(r)    (FFT stage)
+
+  map2alm (direct / analysis, paper eq. 13-14):
+      Delta^S_m(r) = sum_j w_r s(r, phi_j) e^{-i m phi_j}  (FFT stage)
+      a_lm         = sum_r Delta^S_m(r) P_lm(cos theta_r)  (Legendre stage)
+
+This module is the *oracle*: float64 by default, used by every test.  The
+Pallas kernels (repro.kernels) and the distributed transforms
+(repro.core.dist_sht) are validated against it.
+
+Conventions
+-----------
+* Fields are real; only m >= 0 coefficients are stored (a_{l,-m} = (-1)^m
+  conj(a_lm)).
+* alm layout: dense rectangle ``(m_max+1, l_max+1, K)`` complex ("MLK"),
+  entries with l < m must be zero.  ``K`` is the number of simultaneous maps
+  (the batched/multi-map transform -- the paper's Monte-Carlo target
+  workload and our MXU lever).
+* maps layout: ``(R, n_phi_max, K)`` real for uniform grids.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import legendre
+from repro.core.grids import RingGrid
+
+__all__ = ["SHT", "alm_rect_zeros", "random_alm", "alm_mask"]
+
+
+def alm_mask(l_max: int, m_max: int) -> np.ndarray:
+    """(m_max+1, l_max+1) bool mask of valid (m, l) entries (l >= m)."""
+    m = np.arange(m_max + 1)[:, None]
+    l = np.arange(l_max + 1)[None, :]
+    return l >= m
+
+
+def alm_rect_zeros(l_max: int, m_max: int, K: int = 1,
+                   dtype=np.complex128) -> np.ndarray:
+    return np.zeros((m_max + 1, l_max + 1, K), dtype=dtype)
+
+
+def random_alm(key, l_max: int, m_max: int, K: int = 1,
+               dtype=jnp.float64) -> jnp.ndarray:
+    """Random a_lm, uniform in (-1, 1) (paper §5 experimental setup).
+
+    m = 0 entries are real (required for a real field).
+    """
+    kr, ki = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    shape = (m_max + 1, l_max + 1, K)
+    re = jax.random.uniform(kr, shape, dtype, -1.0, 1.0)
+    im = jax.random.uniform(ki, shape, dtype, -1.0, 1.0)
+    im = im.at[0].set(0.0)  # m = 0 is real
+    mask = jnp.asarray(alm_mask(l_max, m_max))[..., None]
+    return jnp.where(mask, re + 1j * im, 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class SHT:
+    """Batched serial SHT engine on an iso-latitude grid.
+
+    Parameters
+    ----------
+    grid : RingGrid
+    l_max, m_max : band limits (m_max <= l_max; default m_max = l_max)
+    dtype : recurrence/accumulation dtype (float64 oracle, float32 perf)
+    fold : use the equator-fold optimisation (grid must be symmetric)
+    """
+
+    grid: RingGrid
+    l_max: int
+    m_max: int
+    dtype: str = "float64"
+    fold: bool = False
+
+    def __post_init__(self):
+        assert self.m_max <= self.l_max
+        if self.fold:
+            assert self.grid.equator_symmetric, "fold requires a symmetric grid"
+
+    # -- geometry helpers ---------------------------------------------------
+
+    @property
+    def n_north(self) -> int:
+        """Number of northern rings incl. the equator ring if present."""
+        return (self.grid.n_rings + 1) // 2
+
+    @property
+    def has_equator(self) -> bool:
+        return self.grid.n_rings % 2 == 1
+
+    @functools.cached_property
+    def _log_mu(self) -> np.ndarray:
+        return legendre.log_mu(self.m_max)
+
+    @functools.cached_property
+    def _m_all(self) -> np.ndarray:
+        return np.arange(self.m_max + 1)
+
+    # -- FFT stage ----------------------------------------------------------
+
+    def _phase(self, sign: float) -> jnp.ndarray:
+        """e^{sign * i * m * phi0(r)} as (M, R) complex."""
+        m = np.arange(self.m_max + 1, dtype=np.float64)[:, None]
+        ph = sign * m * self.grid.phi0[None, :]
+        return jnp.asarray(np.exp(1j * ph))
+
+    def _synth_fft_uniform(self, delta: jnp.ndarray) -> jnp.ndarray:
+        """FFT stage of alm2map on a uniform grid.  delta: (M, R, K) complex
+        -> maps (R, n_phi, K) real.  Paper eq. 11 with alias folding."""
+        g = self.grid
+        n = g.max_n_phi
+        assert n >= 2 * self.m_max, "uniform FFT stage requires n_phi >= 2*m_max"
+        dp = delta * self._phase(+1.0)[..., None]     # apply e^{i m phi0}
+        M = self.m_max + 1
+        # Fold m into rfft bins b = m mod n; bins past n/2 wrap to the
+        # conjugate half.  For n >= 2*m_max+1 this is a plain pad.
+        ms = np.arange(M)
+        b = ms % n
+        hi = b > n // 2                                # conjugate wrap
+        bins = np.where(hi, n - b, b)
+        nyq = (2 * b == n)                             # Nyquist: real part doubles
+        half = n // 2 + 1
+        H = jnp.zeros((half,) + dp.shape[1:], dp.dtype)
+        vals = jnp.where(jnp.asarray(hi)[:, None, None], jnp.conj(dp), dp)
+        # Nyquist bin receives Delta_m + conj(Delta_m) = 2 Re Delta_m.
+        vals = jnp.where(jnp.asarray(nyq)[:, None, None],
+                         2.0 * jnp.real(vals).astype(dp.dtype), vals)
+        H = H.at[jnp.asarray(bins)].add(vals)
+        H = jnp.moveaxis(H, 0, 1)                      # (R, half, K)
+        s = jnp.fft.irfft(H, n=n, axis=1) * n
+        return jnp.real(s)
+
+    def _anal_fft_uniform(self, maps: jnp.ndarray) -> jnp.ndarray:
+        """FFT stage of map2alm on a uniform grid.  maps: (R, n_phi, K) real
+        -> Delta^S (M, R, K) complex (sample weights applied).
+        Paper eq. 14."""
+        g = self.grid
+        n = g.max_n_phi
+        F = jnp.fft.rfft(maps, axis=1)                 # (R, n//2+1, K)
+        M = self.m_max + 1
+        ms = np.arange(M)
+        b = ms % n
+        hi = b > n // 2
+        bins = np.where(hi, n - b, b)
+        Fm = F[:, jnp.asarray(bins), :]                # (R, M, K)
+        Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
+        Fm = jnp.moveaxis(Fm, 1, 0)                    # (M, R, K)
+        w = jnp.asarray(self.grid.weights)[None, :, None]
+        return Fm * self._phase(-1.0)[..., None] * w
+
+    # -- bucketed (true ragged-HEALPix) FFT stage, CPU validation path ------
+
+    def _synth_fft_ragged(self, delta: jnp.ndarray) -> np.ndarray:
+        """Per-bucket FFTs for variable n_phi (true HEALPix).  Host loop over
+        the distinct ring lengths; returns a padded (R, n_phi_max, K) array
+        with each ring's samples in [:n_phi(r)]."""
+        g = self.grid
+        dp = np.asarray(delta * self._phase(+1.0)[..., None])
+        R = g.n_rings
+        K = dp.shape[-1]
+        out = np.zeros((R, g.max_n_phi, K))
+        ms = np.arange(self.m_max + 1)
+        for n in np.unique(g.n_phi):
+            rows = np.where(g.n_phi == n)[0]
+            # alias fold all m into n bins (full complex spectrum)
+            G = np.zeros((len(rows), int(n), K), dtype=np.complex128)
+            d = dp[:, rows, :]                          # (M, rows, K)
+            for mval in ms:                             # host loop, small n_side only
+                G[:, mval % n, :] += d[mval]
+                if mval > 0:
+                    G[:, (-mval) % n, :] += np.conj(d[mval])
+            s = np.fft.ifft(G, axis=1) * n
+            out[rows, : int(n), :] = s.real
+        return out
+
+    def _anal_fft_ragged(self, maps: np.ndarray) -> np.ndarray:
+        g = self.grid
+        R = g.n_rings
+        K = maps.shape[-1]
+        M = self.m_max + 1
+        delta = np.zeros((M, R, K), dtype=np.complex128)
+        ms = np.arange(M)
+        for n in np.unique(g.n_phi):
+            rows = np.where(g.n_phi == n)[0]
+            F = np.fft.fft(maps[rows, : int(n), :], axis=1)  # (rows, n, K)
+            bins = ms % n
+            delta[:, rows, :] = np.moveaxis(F[:, bins, :], 1, 0)
+        ph = np.asarray(self._phase(-1.0))[..., None]
+        w = g.weights[None, :, None]
+        return delta * ph * w
+
+    # -- Legendre stage -----------------------------------------------------
+
+    def _delta_from_alm(self, alm: jnp.ndarray) -> jnp.ndarray:
+        """(M, L, K) complex alm -> (M, R, K) complex Delta^A."""
+        g = self.grid
+        dt = jnp.dtype(self.dtype)
+        if not self.fold:
+            d_re, d_im = legendre.delta_from_alm(
+                jnp.real(alm), jnp.imag(alm), self._m_all, g.cos_theta,
+                g.sin_theta, self._log_mu, l_max=self.l_max, dtype=dt)
+            return d_re + 1j * d_im
+        nh = self.n_north
+        ere, eim, ore_, oim = legendre.delta_from_alm_folded(
+            jnp.real(alm), jnp.imag(alm), self._m_all, g.cos_theta[:nh],
+            g.sin_theta[:nh], self._log_mu, l_max=self.l_max, dtype=dt)
+        north = (ere + ore_) + 1j * (eim + oim)               # (M, nh, K)
+        ns = nh - 1 if self.has_equator else nh
+        south = (ere - ore_)[:, :ns] + 1j * (eim - oim)[:, :ns]
+        return jnp.concatenate([north, south[:, ::-1]], axis=1)
+
+    def _alm_from_delta(self, delta_w: jnp.ndarray) -> jnp.ndarray:
+        """(M, R, K) weighted Delta^S -> (M, L, K) complex alm.
+
+        ``delta_w`` must already include the quadrature weights (the FFT
+        stage applies them)."""
+        g = self.grid
+        dt = jnp.dtype(self.dtype)
+        if not self.fold:
+            ones = np.ones(g.n_rings)  # weights pre-applied
+            a_re, a_im = legendre.alm_from_delta(
+                jnp.real(delta_w), jnp.imag(delta_w), self._m_all,
+                g.cos_theta, g.sin_theta, ones, self._log_mu,
+                l_max=self.l_max, dtype=dt)
+            return a_re + 1j * a_im
+        nh = self.n_north
+        north = delta_w[:, :nh]
+        ns = nh - 1 if self.has_equator else nh
+        south = delta_w[:, nh:][:, ::-1]                      # mirror order
+        pad = north[:, ns:nh] * 0.0                           # equator slot
+        south_p = jnp.concatenate([south, pad], axis=1) if self.has_equator else south
+        s_e = north + south_p
+        s_o = north - south_p
+        # (equator ring: P_lm(0) = 0 for odd l+m, so its s_o value is inert)
+        a_re, a_im = legendre.alm_from_delta_folded(
+            jnp.real(s_e), jnp.imag(s_e), jnp.real(s_o), jnp.imag(s_o),
+            self._m_all, g.cos_theta[:nh], g.sin_theta[:nh], self._log_mu,
+            l_max=self.l_max, dtype=dt)
+        return a_re + 1j * a_im
+
+    # -- public API ----------------------------------------------------------
+
+    def alm2map(self, alm: jnp.ndarray) -> jnp.ndarray:
+        """Inverse SHT (synthesis).  alm (M, L, K) -> maps (R, n_phi, K).
+
+        For ragged grids the output is padded; samples beyond n_phi(r) are 0.
+        """
+        assert alm.shape[:2] == (self.m_max + 1, self.l_max + 1), alm.shape
+        delta = self._delta_from_alm(alm)
+        if self.grid.uniform:
+            return self._synth_fft_uniform(delta)
+        return jnp.asarray(self._synth_fft_ragged(delta))
+
+    def map2alm(self, maps: jnp.ndarray, iters: int = 0) -> jnp.ndarray:
+        """Direct SHT (analysis).  maps (R, n_phi, K) -> alm (M, L, K).
+
+        ``iters`` > 0 applies Jacobi residual refinement (the HEALPix
+        map2alm_iter technique):  a_{n+1} = a_n + A(m - S(a_n)).  Each
+        iteration costs one synthesis + one analysis and drives the
+        approximate-quadrature error of the HEALPix-family grids down by
+        roughly an order of magnitude per pass (exact grids gain nothing).
+        """
+        assert maps.shape[0] == self.grid.n_rings, maps.shape
+        if self.grid.uniform:
+            delta_w = self._anal_fft_uniform(maps)
+        else:
+            delta_w = jnp.asarray(self._anal_fft_ragged(np.asarray(maps)))
+        alm = self._alm_from_delta(delta_w)
+        for _ in range(iters):
+            resid = maps - self.alm2map(alm)
+            alm = alm + self.map2alm(resid, iters=0)
+        return alm

@@ -1,0 +1,479 @@
+"""Pallas TPU kernels for the Legendre-recurrence hot spot (paper §4.2.2).
+
+The paper's GPU algorithm assigns one *ring* per CUDA thread so every thread
+executes the identical l-recurrence (SIMD-uniform), and recomputes beta_lm
+instead of storing it.  The TPU translation (DESIGN.md §2):
+
+  * rings live on the VPU lane/sublane dimensions (8x128 vectors instead of
+    threads);
+  * the l loop is the sequential inner `fori_loop`, with the (mantissa,
+    scale) pair of the rescaled recurrence carried in VMEM scratch across
+    l-panel grid steps;
+  * beta is recomputed from l, m on the fly (2 mults + 1 rsqrt per step) --
+    never materialised in HBM;
+  * m and ring-blocks form the (sequential) Pallas grid; panels fully below
+    the diagonal (l < m) are skipped, preserving the triangular work count;
+  * the direct-transform (analysis) reduction that costs the paper its GPU
+    performance (atomics / host-side reduction, Algorithm 5) is here an
+    accumulation into the output block across sequential grid steps --
+    race-free by construction because the TPU grid is sequential per core.
+
+Two variants per direction:
+
+  * ``vpu``  -- broadcast-FMA accumulation; the faithful analogue of the
+    paper's scalar-per-thread inner loop.  Right for small K (few maps).
+  * ``mxu``  -- P panels are materialised in VMEM (l on the sublane axis)
+    and contracted against a (l, 2K) coefficient panel on the MXU.  This is
+    the beyond-paper optimisation: the paper's Monte-Carlo workload
+    transforms many maps with identical geometry, which becomes a matmul.
+
+Inputs are pre-scaled seeds (pmm mantissa + scale) computed host-side in
+float64; everything inside the kernels is float32.
+
+All kernels are validated in interpret mode against repro.kernels.ref
+(bit-matched algorithm) and against the float64 core engine in tests.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = [
+    "synth_vpu", "synth_mxu", "anal_vpu", "anal_mxu",
+    "SCALE_BITS_F32",
+]
+
+SCALE_BITS_F32 = 64
+_BIG = float(2.0 ** (SCALE_BITS_F32 // 2))        # 2^32
+_INV_BIG2 = float(2.0 ** (-SCALE_BITS_F32))       # 2^-64
+_BIG2 = float(2.0 ** SCALE_BITS_F32)              # 2^64
+
+
+def _f32_step(l, m_f, x, pp, pc, sc, pmm, pms):
+    """One scaled-recurrence step, float32, branch-free.
+
+    l: traced scalar (current multipole); m_f: scalar f32 (this grid step's
+    m); x, pp, pc, pmm: f32 tiles; sc, pms: i32 tiles.
+    Returns (pp', pc', sc', value) with `value` the descaled P_{l,m}.
+    """
+    lf = l.astype(jnp.float32) if hasattr(l, "astype") else jnp.float32(l)
+    # beta recomputed on the fly (paper's GPU choice): guard l<=m+1 lanes.
+    lb = jnp.maximum(lf, m_f + 2.0)
+    bl = jax.lax.rsqrt((lb * lb - m_f * m_f) / (4.0 * lb * lb - 1.0))
+    lb1 = jnp.maximum(lf - 1.0, m_f + 1.0)
+    bl1 = jax.lax.rsqrt((lb1 * lb1 - m_f * m_f) / (4.0 * lb1 * lb1 - 1.0))
+    ratio = bl / bl1
+    p_rec = bl * x * pc - ratio * pp
+    p_first = jnp.sqrt(jnp.maximum(2.0 * m_f + 3.0, 0.0)) * x * pc
+
+    is_seed = lf == m_f
+    is_first = lf == m_f + 1.0
+    before = lf < m_f
+    new_c = jnp.where(before, 0.0,
+            jnp.where(is_seed, pmm,
+            jnp.where(is_first, p_first, p_rec)))
+    new_p = jnp.where(before | is_seed, 0.0, pc)
+    new_s = jnp.where(is_seed, pms, sc)
+
+    grow = (jnp.abs(new_c) > _BIG) & (new_s < 0)
+    new_c = jnp.where(grow, new_c * _INV_BIG2, new_c)
+    new_p = jnp.where(grow, new_p * _INV_BIG2, new_p)
+    new_s = jnp.where(grow, new_s + 1, new_s)
+    shrink = (jnp.abs(new_c) < 1.0 / _BIG) & (jnp.abs(new_p) < 1.0 / _BIG) \
+        & ~before & ~is_seed
+    new_c2 = jnp.where(shrink, new_c * _BIG2, new_c)
+    new_p2 = jnp.where(shrink, new_p * _BIG2, new_p)
+    new_s2 = jnp.where(shrink, new_s - 1, new_s)
+
+    value = jnp.where((new_s2 == 0) & ~before, new_c2, 0.0)
+    return new_p2, new_c2, new_s2, value
+
+
+# =============================================================================
+# Synthesis (inverse transform stage 1): Delta_m(r) = sum_l a_lm P_lm(r)
+# =============================================================================
+
+
+def _synth_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
+                      pp_ref, pc_ref, sc_ref, *, lp_size, n_k2, fold):
+    mi = pl.program_id(0)
+    lp = pl.program_id(2)
+    m = m_vals_ref[mi]
+    m_f = m.astype(jnp.float32)
+    l0 = lp * lp_size
+
+    @pl.when(lp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(l0 + lp_size > m)   # skip panels fully below the diagonal
+    def _work():
+        x = x_ref[...]                       # (8, 128)
+        pmm = pmm_ref[0]                     # (8, 128)
+        pms = pms_ref[0]
+        acc = out_ref[0]                     # (P?, 2K, 8, 128) P=1|2 (fold)
+
+        def body(j, carry):
+            acc, pp, pc, sc = carry
+            l = l0 + j
+            pp, pc, sc, val = _f32_step(l, m_f, x, pp, pc, sc, pmm, pms)
+            av = a_ref[0, j, :]              # (2K,)
+            contrib = av[:, None, None] * val[None, :, :]   # (2K, 8, 128)
+            if fold:
+                par = (l + m) % 2            # 0 even, 1 odd
+                sel = (jnp.arange(2, dtype=jnp.int32) == par)
+                acc = acc + jnp.where(sel[:, None, None, None],
+                                      contrib[None], 0.0)
+            else:
+                acc = acc + contrib[None]
+            return acc, pp, pc, sc
+
+        acc, pp, pc, sc = jax.lax.fori_loop(
+            0, lp_size, body,
+            (acc, pp_ref[...], pc_ref[...], sc_ref[...]))
+        out_ref[0] = acc
+        pp_ref[...] = pp
+        pc_ref[...] = pc
+        sc_ref[...] = sc
+
+
+def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
+              lp_size=128, interpret=True):
+    """VPU synthesis kernel.
+
+    a      : (Mp, L1p, 2K) f32, L1p a multiple of lp_size, rows l<m zero
+    m_vals : (Mp,) i32 (plan m per slot; -1 padding rows never seed)
+    x2d    : (R1, 128) f32 cos(theta), R1 a multiple of 8
+    pmm    : (Mp, R1, 128) f32 seed mantissas;  pms likewise i32 scales
+    returns: (Mp, P, 2K, R1, 128) f32 with P = 2 (even, odd) if fold else 1
+    """
+    Mp, L1p, K2 = a.shape
+    R1 = x2d.shape[0]
+    assert L1p % lp_size == 0 and R1 % 8 == 0
+    n_par = 2 if fold else 1
+    grid = (Mp, R1 // 8, L1p // lp_size)
+    kernel = functools.partial(_synth_vpu_kernel, lp_size=lp_size,
+                               n_k2=K2, fold=fold)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda m, rb, lp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 8, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, 8, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, lp_size, K2), lambda m, rb, lp, *_refs: (m, lp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_par, K2, 8, 128),
+                                   lambda m, rb, lp, *_refs: (m, 0, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, n_par, K2, R1, 128), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(m_vals, x2d, pmm, pms, a)
+
+
+def _synth_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
+                      pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size, fold):
+    mi = pl.program_id(0)
+    lp = pl.program_id(2)
+    m = m_vals_ref[mi]
+    m_f = m.astype(jnp.float32)
+    l0 = lp * lp_size
+
+    @pl.when(lp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(l0 + lp_size > m)
+    def _work():
+        x = x_ref[...]                        # (1, 128)
+        pmm = pmm_ref[0]                      # (1, 128)
+        pms = pms_ref[0]
+
+        def gen(j, carry):
+            pp, pc, sc = carry
+            pp, pc, sc, val = _f32_step(l0 + j, m_f, x, pp, pc, sc, pmm, pms)
+            panel_ref[pl.ds(j, 1), :] = val   # P panel row (l on sublanes)
+            return pp, pc, sc
+
+        pp, pc, sc = jax.lax.fori_loop(
+            0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+        pp_ref[...] = pp
+        pc_ref[...] = pc
+        sc_ref[...] = sc
+
+        panel = panel_ref[...]                # (LP, 128)
+        a_blk = a_ref[0]                      # (LP, 2K)
+        dims = (((0,), (0,)), ((), ()))       # contract over l
+        if fold:
+            ls = l0 + jax.lax.broadcasted_iota(jnp.int32, (lp_size, 1), 0)
+            even = ((ls + m) % 2) == 0
+            a_e = jnp.where(even, a_blk, 0.0)
+            a_o = jnp.where(even, 0.0, a_blk)
+            ce = jax.lax.dot_general(panel, a_e, dims,
+                                     preferred_element_type=jnp.float32)
+            co = jax.lax.dot_general(panel, a_o, dims,
+                                     preferred_element_type=jnp.float32)
+            out_ref[0, 0] += ce               # (128, 2K)
+            out_ref[0, 1] += co
+        else:
+            c = jax.lax.dot_general(panel, a_blk, dims,
+                                    preferred_element_type=jnp.float32)
+            out_ref[0, 0] += c
+
+
+def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
+              lp_size=128, interpret=True):
+    """MXU synthesis kernel (multi-map panel matmul).
+
+    Layouts as synth_vpu except rings advance 128 at a time and the output
+    is (Mp, P, R1*?, ...) -- concretely (Mp, P, R, 2K) with R = R1 * 128.
+    """
+    Mp, L1p, K2 = a.shape
+    R1 = x2d.shape[0]
+    R = R1 * 128
+    assert L1p % lp_size == 0
+    n_par = 2 if fold else 1
+    grid = (Mp, R1, L1p // lp_size)
+    x_flat = x2d.reshape(R1, 128)
+    pmm_f = pmm.reshape(Mp, R1, 128)
+    pms_f = pms.reshape(Mp, R1, 128)
+    kernel = functools.partial(_synth_mxu_kernel, lp_size=lp_size, fold=fold)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda m, rb, lp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 1, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, 1, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, lp_size, K2), lambda m, rb, lp, *_refs: (m, lp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_par, 128, K2),
+                                   lambda m, rb, lp, *_refs: (m, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, n_par, R, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(m_vals, x_flat, pmm_f, pms_f, a)
+
+
+# =============================================================================
+# Analysis (direct transform stage): a_lm = sum_r Delta_m(r) P_lm(r)
+# =============================================================================
+
+
+def _anal_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref,
+                           out_ref, pp_ref, pc_ref, sc_ref, acc_ref, *,
+                           lp_size, fold):
+    """Analysis VPU kernel.  A separate VMEM accumulator (acc_ref) holds the
+    current panel's rows; it is added into out_ref at the end of the grid
+    step so the out block accumulates across ring blocks (@rb==0 init)."""
+    mi = pl.program_id(0)
+    rb = pl.program_id(1)
+    lp = pl.program_id(2)
+    m = m_vals_ref[mi]
+    m_f = m.astype(jnp.float32)
+    l0 = lp * lp_size
+
+    @pl.when(lp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(l0 + lp_size > m)
+    def _work():
+        x = x_ref[...]
+        pmm = pmm_ref[0]
+        pms = pms_ref[0]
+        dw = dw_ref[0]                          # (P, 2K, 8, 128)
+        acc_ref[...] = jnp.zeros_like(acc_ref)  # (LP, 2K)
+
+        def body(j, carry):
+            pp, pc, sc = carry
+            l = l0 + j
+            pp, pc, sc, val = _f32_step(l, m_f, x, pp, pc, sc, pmm, pms)
+            if fold:
+                par = (l + m) % 2
+                sel = (jnp.arange(2, dtype=jnp.int32) == par)
+                d = jnp.sum(jnp.where(sel[:, None, None, None], dw, 0.0),
+                            axis=0)
+            else:
+                d = dw[0]
+            row = jnp.sum(d * val[None, :, :], axis=(1, 2))   # (2K,)
+            acc_ref[pl.ds(j, 1), :] = row[None, :]
+            return pp, pc, sc
+
+        pp, pc, sc = jax.lax.fori_loop(
+            0, lp_size, body, (pp_ref[...], pc_ref[...], sc_ref[...]))
+        out_ref[0] += acc_ref[...]
+        pp_ref[...] = pp
+        pc_ref[...] = pc
+        sc_ref[...] = sc
+
+
+def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
+             lp_size=128, interpret=True):
+    """VPU analysis kernel.
+
+    dw     : (Mp, P, 2K, R1, 128) weighted Delta (P = 2 (e,o) if fold else 1)
+    returns: (Mp, L1p, 2K) f32
+    """
+    Mp, n_par, K2 = dw.shape[0], dw.shape[1], dw.shape[2]
+    R1 = dw.shape[3]
+    assert l1p % lp_size == 0 and R1 % 8 == 0
+    grid = (Mp, R1 // 8, l1p // lp_size)
+    kernel = functools.partial(_anal_vpu_kernel, lp_size=lp_size,
+                               fold=fold)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda m, rb, lp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 8, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, 8, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, n_par, K2, 8, 128),
+                             lambda m, rb, lp, *_refs: (m, 0, 0, rb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda m, rb, lp, *_refs: (m, lp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+                pltpu.VMEM((lp_size, K2), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, l1p, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(m_vals, x2d, pmm, pms, dw)
+
+
+def _anal_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
+                     pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size, fold):
+    mi = pl.program_id(0)
+    rb = pl.program_id(1)
+    lp = pl.program_id(2)
+    m = m_vals_ref[mi]
+    m_f = m.astype(jnp.float32)
+    l0 = lp * lp_size
+
+    @pl.when(lp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(l0 + lp_size > m)
+    def _work():
+        x = x_ref[...]                          # (1, 128)
+        pmm = pmm_ref[0]
+        pms = pms_ref[0]
+
+        def gen(j, carry):
+            pp, pc, sc = carry
+            pp, pc, sc, val = _f32_step(l0 + j, m_f, x, pp, pc, sc, pmm, pms)
+            panel_ref[pl.ds(j, 1), :] = val
+            return pp, pc, sc
+
+        pp, pc, sc = jax.lax.fori_loop(
+            0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+        pp_ref[...] = pp
+        pc_ref[...] = pc
+        sc_ref[...] = sc
+
+        panel = panel_ref[...]                  # (LP, 128)
+        dims = (((1,), (0,)), ((), ()))         # contract over rings(128)
+        if fold:
+            ls = l0 + jax.lax.broadcasted_iota(jnp.int32, (lp_size, 1), 0)
+            even = ((ls + m) % 2) == 0
+            ce = jax.lax.dot_general(panel, dw_ref[0, 0], dims,
+                                     preferred_element_type=jnp.float32)
+            co = jax.lax.dot_general(panel, dw_ref[0, 1], dims,
+                                     preferred_element_type=jnp.float32)
+            out_ref[0] += jnp.where(even, ce, co)
+        else:
+            c = jax.lax.dot_general(panel, dw_ref[0, 0], dims,
+                                    preferred_element_type=jnp.float32)
+            out_ref[0] += c
+
+
+def anal_mxu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
+             lp_size=128, interpret=True):
+    """MXU analysis kernel.
+
+    dw     : (Mp, P, R, 2K) weighted Delta (ring-major), R = R1 * 128
+    returns: (Mp, L1p, 2K) f32
+    """
+    Mp, n_par, R, K2 = dw.shape
+    R1 = R // 128
+    assert l1p % lp_size == 0 and R % 128 == 0
+    grid = (Mp, R1, l1p // lp_size)
+    kernel = functools.partial(_anal_mxu_kernel, lp_size=lp_size, fold=fold)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda m, rb, lp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 1, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, 1, 128), lambda m, rb, lp, *_refs: (m, rb, 0)),
+                pl.BlockSpec((1, n_par, 128, K2),
+                             lambda m, rb, lp, *_refs: (m, 0, rb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda m, rb, lp, *_refs: (m, lp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((Mp, l1p, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
+    )(m_vals, x2d, pmm, pms, dw)

@@ -1,0 +1,179 @@
+"""Jit'd wrappers around the Pallas Legendre kernels.
+
+Responsibilities:
+  * padding/layout conversion between the engine's (M, R, K) world and the
+    kernels' tiled (Mp, R1, 128 / 2K) world;
+  * seed precomputation (float64 -> scaled f32 mantissas);
+  * variant selection (VPU broadcast-FMA for few maps, MXU panel matmul for
+    many) with env/arg overrides;
+  * `interpret=True` execution on CPU (this container) vs. compiled Mosaic
+    on real TPU backends.
+
+These wrappers are the integration point used by core.dist_sht's
+``stage1="pallas"`` mode and by the benchmarks.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import legendre_pallas as lk
+from repro.kernels import ref as kref
+
+__all__ = ["synth", "anal", "delta_from_alm_auto", "alm_from_delta_auto",
+           "pick_variant", "should_interpret"]
+
+
+def should_interpret() -> bool:
+    """Pallas interpret mode unless running on a real TPU backend."""
+    forced = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if forced is not None:
+        return forced not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def pick_variant(K2: int, variant: str | None = None) -> str:
+    if variant in ("vpu", "mxu"):
+        return variant
+    env = os.environ.get("REPRO_LEGENDRE_VARIANT")
+    if env in ("vpu", "mxu"):
+        return env
+    return "mxu" if K2 >= 16 else "vpu"
+
+
+def _pad_to(n: int, mult: int) -> int:
+    return -(-n // mult) * mult
+
+
+def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
+          lp_size=128, interpret=None):
+    """Kernel-backed synthesis with automatic padding.
+
+    a: (Mp, L1, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
+    Returns (Mp, P, R, 2K) f32 matching ref.synth_ref.
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    Mp, L1, K2 = a.shape
+    R = x.shape[0]
+    var = pick_variant(K2, variant)
+    L1p = _pad_to(L1, lp_size)
+    Rp = _pad_to(R, 1024 if var == "vpu" else 128)
+    a_p = jnp.pad(a, ((0, 0), (0, L1p - L1), (0, 0)))
+    x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
+    pmm_p = jnp.pad(pmm, ((0, 0), (0, Rp - R)))
+    pms_p = jnp.pad(pms, ((0, 0), (0, Rp - R)))
+    R1 = Rp // 128
+    x2d = x_p.reshape(R1, 128)
+    pmm2 = pmm_p.reshape(Mp, R1, 128)
+    pms2 = pms_p.reshape(Mp, R1, 128)
+    if var == "vpu":
+        out = lk.synth_vpu(a_p, jnp.asarray(m_vals, jnp.int32), x2d, pmm2,
+                           pms2, l_max=l_max, fold=fold, lp_size=lp_size,
+                           interpret=interpret)
+        n_par = out.shape[1]
+        out = jnp.moveaxis(out, 2, -1)            # (Mp, P, R1, 128, 2K)
+        out = out.reshape(Mp, n_par, Rp, K2)
+    else:
+        out = lk.synth_mxu(a_p, jnp.asarray(m_vals, jnp.int32), x2d, pmm2,
+                           pms2, l_max=l_max, fold=fold, lp_size=lp_size,
+                           interpret=interpret)
+    return out[:, :, :R, :]
+
+
+def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
+         variant=None, lp_size=128, interpret=None):
+    """Kernel-backed analysis with automatic padding.
+
+    dw: (Mp, P, R, 2K) f32;  returns (Mp, L1, 2K) f32 (L1 = l_max+1).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    Mp, n_par, R, K2 = dw.shape
+    var = pick_variant(K2, variant)
+    L1 = l_max + 1
+    L1p = _pad_to(L1 if l1p is None else l1p, lp_size)
+    Rp = _pad_to(R, 1024 if var == "vpu" else 128)
+    dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
+    x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
+    pmm_p = jnp.pad(pmm, ((0, 0), (0, Rp - R)))
+    pms_p = jnp.pad(pms, ((0, 0), (0, Rp - R)))
+    R1 = Rp // 128
+    x2d = x_p.reshape(R1, 128)
+    pmm2 = pmm_p.reshape(Mp, R1, 128)
+    pms2 = pms_p.reshape(Mp, R1, 128)
+    mv = jnp.asarray(m_vals, jnp.int32)
+    if var == "vpu":
+        dw_k = jnp.moveaxis(dw_p.reshape(Mp, n_par, R1, 128, K2), -1, 2)
+        out = lk.anal_vpu(dw_k, mv, x2d, pmm2, pms2, l_max=l_max, l1p=L1p,
+                          fold=fold, lp_size=lp_size, interpret=interpret)
+    else:
+        out = lk.anal_mxu(dw_p, mv, x2d, pmm2, pms2, l_max=l_max, l1p=L1p,
+                          fold=fold, lp_size=lp_size, interpret=interpret)
+    return out[:, :L1, :]
+
+
+# ---------------------------------------------------------------------------
+# dist_sht stage-1 adapters (the `stage1="pallas"` path)
+# ---------------------------------------------------------------------------
+
+
+def delta_from_alm_auto(a_re, a_im, m_vals, geom, log_mu_all, *, l_max,
+                        fold=False, dtype=jnp.float32, variant=None):
+    """Drop-in for legendre.delta_from_alm(+_folded) backed by the kernels.
+
+    a_re/a_im: (M, L1, K); geom: plan.ring_geometry dict (numpy, static).
+    Returns (d_re, d_im): (M, R_pad, K) in plan slot order (fold handled
+    internally: even/odd parts recombined and re-interleaved).
+    Kernel math is float32; inputs/outputs are cast from/to ``dtype``.
+    """
+    M, L1, K = a_re.shape
+    if fold:
+        sin = geom["sin_theta"][0::2]
+        x = geom["cos_theta"][0::2]
+    else:
+        sin = geom["sin_theta"]
+        x = geom["cos_theta"]
+    pmm, pms = kref.prepare_seeds(m_vals, sin, log_mu_all)
+    a = jnp.concatenate([a_re, a_im], axis=-1).astype(jnp.float32)
+    out = synth(a, m_vals, jnp.asarray(x, jnp.float32), pmm, pms,
+                l_max=l_max, fold=fold, variant=variant)   # (M, P, R', 2K)
+    if fold:
+        e, o = out[:, 0], out[:, 1]                        # (M, R_north, 2K)
+        north, south = e + o, e - o
+        inter = jnp.stack([north, south], axis=2)          # (M, Rn, 2, 2K)
+        out2 = inter.reshape(M, 2 * north.shape[1], 2 * K)
+    else:
+        out2 = out[:, 0]
+    d_re = out2[..., :K].astype(dtype)
+    d_im = out2[..., K:].astype(dtype)
+    return d_re, d_im
+
+
+def alm_from_delta_auto(dw_re, dw_im, m_vals, geom, log_mu_all, *, l_max,
+                        fold=False, dtype=jnp.float32, variant=None):
+    """Drop-in for legendre.alm_from_delta(+_folded) backed by the kernels.
+
+    dw_re/dw_im: (M, R_pad, K) weighted Delta in plan slot order.
+    Returns (a_re, a_im): (M, L1, K).
+    """
+    M, R_pad, K = dw_re.shape
+    dw = jnp.concatenate([dw_re, dw_im], axis=-1).astype(jnp.float32)
+    if fold:
+        n, s = dw[:, 0::2], dw[:, 1::2]
+        dwk = jnp.stack([n + s, n - s], axis=1)            # (M, 2, Rn, 2K)
+        sin = geom["sin_theta"][0::2]
+        x = geom["cos_theta"][0::2]
+    else:
+        dwk = dw[:, None]
+        sin = geom["sin_theta"]
+        x = geom["cos_theta"]
+    pmm, pms = kref.prepare_seeds(m_vals, sin, log_mu_all)
+    out = anal(dwk, m_vals, jnp.asarray(x, jnp.float32), pmm, pms,
+               l_max=l_max, fold=fold, variant=variant)    # (M, L1, 2K)
+    return out[..., :K].astype(dtype), out[..., K:].astype(dtype)

@@ -1,0 +1,103 @@
+"""Pure-jnp oracles for the Pallas Legendre kernels.
+
+Bit-matched algorithm (same float32 scaled recurrence, same seed inputs,
+same accumulation order up to reassociation) so the interpret-mode kernels
+can be checked with tight tolerances; the float64 core engine
+(repro.core.legendre) provides the independent ground truth on top.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.legendre_pallas import _f32_step
+
+__all__ = ["synth_ref", "anal_ref", "prepare_seeds"]
+
+
+def prepare_seeds(m_vals, sin_theta, log_mu_all, scale_bits: int = 64):
+    """Scaled P_mm seeds for the f32 kernels, computed in float64.
+
+    m_vals: (Mp,) int (may include -1 padding -> inert seeds of 0);
+    sin_theta: (R,) f64.  Returns (pmm (Mp, R) f32, pms (Mp, R) i32).
+    """
+    m_vals = jnp.asarray(m_vals)
+    msafe = jnp.maximum(m_vals, 0)
+    lm = jnp.asarray(log_mu_all, jnp.float64)[msafe][:, None]
+    st = jnp.asarray(sin_theta, jnp.float64)[None, :]
+    log_p = lm + msafe.astype(jnp.float64)[:, None] * jnp.log(st)
+    denom = scale_bits * np.log(2.0)
+    scale = jnp.minimum(jnp.round(log_p / denom), 0.0)
+    mant = jnp.exp(log_p - scale * denom)
+    mant = jnp.where((m_vals >= 0)[:, None], mant, 0.0)
+    return mant.astype(jnp.float32), scale.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "fold"))
+def synth_ref(a, m_vals, x, pmm, pms, *, l_max: int, fold: bool = False):
+    """Oracle for synth_{vpu,mxu}.
+
+    a: (Mp, L1p, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
+    Returns (Mp, P, R, 2K) f32 (P = 2 even/odd if fold else 1).
+    """
+    Mp, L1p, K2 = a.shape
+    R = x.shape[0]
+    m = jnp.asarray(m_vals, jnp.int32)[:, None]
+    m_f = m.astype(jnp.float32)
+    xb = jnp.asarray(x, jnp.float32)[None, :]
+    n_par = 2 if fold else 1
+    carry0 = (jnp.zeros((Mp, R), jnp.float32), jnp.zeros((Mp, R), jnp.float32),
+              jnp.zeros((Mp, R), jnp.int32),
+              jnp.zeros((Mp, n_par, R, K2), jnp.float32))
+
+    def body(l, carry):
+        pp, pc, sc, acc = carry
+        pp, pc, sc, val = _f32_step(l, m_f, xb, pp, pc, sc, pmm, pms)
+        av = jax.lax.dynamic_index_in_dim(a, l, axis=1, keepdims=False)
+        contrib = val[:, :, None] * av[:, None, :]       # (Mp, R, 2K)
+        if fold:
+            par = ((l + m) % 2)[..., None]               # (Mp, 1, 1)
+            upd = jnp.stack([jnp.where(par == 0, contrib, 0.0),
+                             jnp.where(par == 1, contrib, 0.0)], axis=1)
+            acc = acc + upd
+        else:
+            acc = acc + contrib[:, None]
+        return pp, pc, sc, acc
+
+    _, _, _, acc = jax.lax.fori_loop(0, min(l_max + 1, L1p), body, carry0)
+    return acc
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "l1p", "fold"))
+def anal_ref(dw, m_vals, x, pmm, pms, *, l_max: int, l1p: int,
+             fold: bool = False):
+    """Oracle for anal_{vpu,mxu}.
+
+    dw: (Mp, P, R, 2K) f32 weighted Delta;  returns (Mp, L1p, 2K) f32.
+    """
+    Mp, n_par, R, K2 = dw.shape
+    m = jnp.asarray(m_vals, jnp.int32)[:, None]
+    m_f = m.astype(jnp.float32)
+    xb = jnp.asarray(x, jnp.float32)[None, :]
+    carry0 = (jnp.zeros((Mp, R), jnp.float32), jnp.zeros((Mp, R), jnp.float32),
+              jnp.zeros((Mp, R), jnp.int32))
+
+    def step(carry, l):
+        pp, pc, sc = carry
+        pp, pc, sc, val = _f32_step(l, m_f, xb, pp, pc, sc, pmm, pms)
+        if fold:
+            par = ((l + m) % 2)[..., None]               # (Mp, 1, 1)
+            d = jnp.where(par == 0, dw[:, 0], dw[:, 1])
+        else:
+            d = dw[:, 0]
+        row = jnp.einsum("mr,mrk->mk", val, d)
+        return (pp, pc, sc), row
+
+    _, rows = jax.lax.scan(step, carry0, jnp.arange(l1p))
+    out = jnp.swapaxes(rows, 0, 1)                        # (Mp, L1p, 2K)
+    lmask = (jnp.arange(l1p) <= l_max)[None, :, None]
+    return jnp.where(lmask, out, 0.0)

@@ -1,0 +1,2 @@
+# Launch layer: production mesh builders, the multi-pod dry-run driver,
+# and the train/serve CLIs.

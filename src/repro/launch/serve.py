@@ -1,0 +1,47 @@
+"""Serving CLI: batched greedy decoding behind the static-slot engine.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
+"""
+
+import argparse
+
+import jax
+import numpy as np
+
+import repro  # noqa: F401
+from repro.configs import registry
+from repro.configs.base import reduced
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import make_bundle
+from repro.serve.serve_loop import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--smoke", action="store_true")
+    a = ap.parse_args()
+
+    cfg = registry.get(a.arch)
+    if a.smoke or jax.device_count() == 1:
+        cfg = reduced(cfg, n_layers=2)
+        mesh = None
+    else:
+        mesh = make_production_mesh()
+    bundle = make_bundle(cfg, mesh)
+    params = bundle.init(jax.random.PRNGKey(0))
+    eng = ServeEngine(bundle, batch=a.batch, max_len=a.max_len)
+    rng = np.random.default_rng(0)
+    for rid in range(a.requests):
+        eng.submit(Request(rid=rid,
+                           prompt=rng.integers(0, cfg.vocab, 5)
+                           .astype(np.int32), max_new=8))
+    done = eng.run(params, max_steps=300)
+    print(f"completed {sum(r.done for r in done)}/{a.requests} requests")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+# LM model zoo substrate: the assigned architectures as config-driven
+# functional JAX models (params = pytrees, explicit dtypes, sharding specs
+# built alongside each parameter tree).

@@ -1,0 +1,241 @@
+"""Shared neural-net building blocks (functional style, explicit dtypes).
+
+Every builder comes in a pair:
+  * ``init_*(key, ...) -> params``  (dict pytree of jnp arrays)
+  * ``spec_*(...) -> specs``        (identically-structured pytree of
+                                     PartitionSpec for pjit sharding)
+The spec tree mirroring the param tree is asserted in tests.
+
+Logical sharding axes are resolved through ``ShardingRules`` so the same
+model code serves the TP profile (heads/ffn/vocab on "model"), the `small`
+profile (attention replicated), FSDP variants, and single-device smoke
+tests (everything None).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = [
+    "ShardingRules", "init_dense", "spec_dense", "init_norm", "spec_norm",
+    "rms_norm", "layer_norm", "apply_rope", "rope_freqs", "init_embedding",
+    "spec_embedding", "dense", "swiglu", "gelu_mlp", "init_mlp", "spec_mlp",
+    "cross_entropy_loss",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical axis -> mesh axis (or None) resolution."""
+    batch: tuple | str | None = ("pod", "data")
+    heads: str | None = "model"        # attention head axis
+    kv_heads: str | None = None        # usually replicated (kv < mesh)
+    d_ff: str | None = "model"         # MLP hidden
+    vocab: str | None = "model"        # embedding/logits vocab axis
+    d_model: str | None = None         # residual axis ("data" under FSDP)
+    experts: str | None = "model"      # MoE expert axis
+    seq: str | None = None             # sequence axis (SP when set)
+    layers: str | None = None          # stacked-layer axis (FSDP variant)
+
+    def ax(self, name: str | None):
+        if name is None:
+            return None
+        return getattr(self, name)
+
+
+def _init_normal(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# -- dense ---------------------------------------------------------------------
+
+
+def init_dense(key, d_in: int, d_out: int, *, bias: bool = False,
+               scale: float | None = None, dtype=jnp.bfloat16):
+    scale = (1.0 / np.sqrt(d_in)) if scale is None else scale
+    p = {"w": _init_normal(key, (d_in, d_out), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def spec_dense(rules: ShardingRules, in_axis: str | None, out_axis: str | None,
+               *, bias: bool = False, layer_stacked: bool = False):
+    lead = (rules.ax("layers"),) if layer_stacked else ()
+    s = {"w": P(*lead, rules.ax(in_axis), rules.ax(out_axis))}
+    if bias:
+        s["b"] = P(*lead, rules.ax(out_axis))
+    return s
+
+
+def dense(p, x, compute_dtype=jnp.bfloat16):
+    y = jnp.einsum("...i,io->...o", x.astype(compute_dtype),
+                   p["w"].astype(compute_dtype))
+    if "b" in p:
+        y = y + p["b"].astype(compute_dtype)
+    return y
+
+
+# -- norms ---------------------------------------------------------------------
+
+
+def init_norm(d: int, *, kind: str = "rmsnorm", dtype=jnp.float32):
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def spec_norm(rules: ShardingRules, *, kind: str = "rmsnorm",
+              layer_stacked: bool = False):
+    lead = (rules.ax("layers"),) if layer_stacked else ()
+    s = {"scale": P(*lead, None)}
+    if kind == "layernorm":
+        s["bias"] = P(*lead, None)
+    return s
+
+
+def rms_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def layer_norm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def apply_norm(p, x, kind: str):
+    return rms_norm(p, x) if kind == "rmsnorm" else layer_norm(p, x)
+
+
+# -- RoPE ------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4):
+    half = head_dim // 2
+    return 1.0 / (theta ** (np.arange(half, dtype=np.float64) * 2.0 / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 1e4):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta), jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- embeddings --------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"table": _init_normal(key, (vocab, d), 0.02, dtype)}
+
+
+def spec_embedding(rules: ShardingRules):
+    return {"table": P(rules.ax("vocab"), rules.ax("d_model"))}
+
+
+# -- MLPs ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, *, act: str = "swiglu",
+             dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {
+            "gate": init_dense(ks[0], d, d_ff, dtype=dtype),
+            "up": init_dense(ks[1], d, d_ff, dtype=dtype),
+            "down": init_dense(ks[2], d_ff, d, dtype=dtype),
+        }
+    return {  # gelu
+        "up": init_dense(ks[0], d, d_ff, dtype=dtype),
+        "down": init_dense(ks[1], d_ff, d, dtype=dtype),
+    }
+
+
+def spec_mlp(rules: ShardingRules, *, act: str = "swiglu",
+             layer_stacked: bool = False):
+    kw = dict(layer_stacked=layer_stacked)
+    if act == "swiglu":
+        return {
+            "gate": spec_dense(rules, "d_model", "d_ff", **kw),
+            "up": spec_dense(rules, "d_model", "d_ff", **kw),
+            "down": spec_dense(rules, "d_ff", "d_model", **kw),
+        }
+    return {
+        "up": spec_dense(rules, "d_model", "d_ff", **kw),
+        "down": spec_dense(rules, "d_ff", "d_model", **kw),
+    }
+
+
+def swiglu(p, x, compute_dtype=jnp.bfloat16):
+    g = dense(p["gate"], x, compute_dtype)
+    u = dense(p["up"], x, compute_dtype)
+    return dense(p["down"], jax.nn.silu(g) * u, compute_dtype)
+
+
+def gelu_mlp(p, x, compute_dtype=jnp.bfloat16):
+    u = dense(p["up"], x, compute_dtype)
+    return dense(p["down"], jax.nn.gelu(u), compute_dtype)
+
+
+def apply_mlp(p, x, act: str, compute_dtype=jnp.bfloat16):
+    return swiglu(p, x, compute_dtype) if act == "swiglu" \
+        else gelu_mlp(p, x, compute_dtype)
+
+
+# -- loss ------------------------------------------------------------------------------
+
+
+def cross_entropy_loss(embedding_table, h, targets, *, n_chunks: int = 8,
+                       compute_dtype=jnp.bfloat16, z_loss: float = 0.0):
+    """Chunked softmax cross entropy against tied-embedding logits.
+
+    h: (B, S, D) final hidden states; targets: (B, S) int32 (-1 = pad).
+    The (B, S, V) logits tensor is never materialised in full: the sequence
+    is processed in ``n_chunks`` pieces (memory high-water-mark control at
+    1M-token batches with 150k vocabularies).
+    """
+    B, S, D = h.shape
+    V = embedding_table.shape[0]
+    n_chunks = max(1, min(n_chunks, S))
+    while S % n_chunks:
+        n_chunks -= 1
+    hs = h.reshape(B, n_chunks, S // n_chunks, D)
+    ts = targets.reshape(B, n_chunks, S // n_chunks)
+    table = embedding_table.astype(compute_dtype)
+
+    def chunk(carry, xs):
+        hc, tc = xs                                  # (B, s, D), (B, s)
+        logits = jnp.einsum("bsd,vd->bsv", hc.astype(compute_dtype),
+                            table).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.maximum(tc, 0)[..., None], axis=-1)[..., 0]
+        valid = (tc >= 0).astype(jnp.float32)
+        nll = (lse - tgt) * valid
+        zl = z_loss * (lse ** 2) * valid if z_loss else 0.0
+        tot, cnt = carry
+        return (tot + jnp.sum(nll + zl), cnt + jnp.sum(valid)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        chunk, (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hs, 1, 0), jnp.moveaxis(ts, 1, 0)))
+    return tot / jnp.maximum(cnt, 1.0)

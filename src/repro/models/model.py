@@ -1,0 +1,150 @@
+"""Model bundles: config -> init / train-loss / prefill / decode + specs.
+
+The single integration surface used by train/serve/launch code.  Every
+entry point is shape-only-safe: `jax.eval_shape(bundle.init, key)` gives
+the parameter ShapeDtypeStructs for the dry-run without allocating.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models import whisper as W
+
+__all__ = ["ModelBundle", "make_bundle", "input_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBundle:
+    cfg: Any
+    rt: T.Runtime
+
+    # -- params ------------------------------------------------------------
+
+    def init(self, key):
+        if self.cfg.is_encoder_decoder:
+            return W.init_whisper(key, self.cfg)
+        return T.init_lm(key, self.cfg)
+
+    def param_specs(self):
+        if self.cfg.is_encoder_decoder:
+            return W.whisper_specs(self.cfg, self.rt.rules)
+        return T.lm_specs(self.cfg, self.rt.rules)
+
+    def param_shardings(self):
+        mesh = self.rt.mesh
+        return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                            self.param_specs(),
+                            is_leaf=lambda v: isinstance(v, P))
+
+    # -- train -------------------------------------------------------------
+
+    def loss_fn(self, params, batch):
+        if self.cfg.is_encoder_decoder:
+            return W.whisper_train(params, batch, self.rt)
+        extra = {k: v for k, v in batch.items() if k != "tokens"} or None
+        return T.forward_train(params, batch["tokens"], self.rt, extra=extra)
+
+    # -- serve -------------------------------------------------------------
+
+    def init_caches(self, batch: int, max_len: int, enc_len: int = 1500):
+        dt = jnp.dtype(self.cfg.compute_dtype)
+        if self.cfg.is_encoder_decoder:
+            return W.init_whisper_caches(self.cfg, batch, max_len, enc_len, dt)
+        return T.init_caches(self.cfg, batch, max_len, dt)
+
+    def cache_specs(self):
+        if self.cfg.is_encoder_decoder:
+            return W.whisper_cache_specs(self.cfg, self.rt.rules)
+        return T.caches_specs(self.cfg, self.rt.rules)
+
+    def prefill_fn(self, params, batch, caches):
+        if self.cfg.is_encoder_decoder:
+            return W.whisper_prefill(params, batch["frames"],
+                                     batch["tokens"], caches, self.rt)
+        return T.prefill(params, batch["tokens"], caches, self.rt)
+
+    def decode_fn(self, params, token, pos, caches):
+        if self.cfg.is_encoder_decoder:
+            return W.whisper_decode_step(params, token, pos, caches, self.rt)
+        return T.decode_step(params, token, pos, caches, self.rt)
+
+
+def make_bundle(cfg, mesh: Optional[Mesh] = None) -> ModelBundle:
+    rules = T.make_rules(cfg, mesh)
+    return ModelBundle(cfg=cfg, rt=T.Runtime(cfg=cfg, mesh=mesh, rules=rules))
+
+
+# =============================================================================
+# input_specs: ShapeDtypeStruct stand-ins for every (arch x shape) cell
+# =============================================================================
+
+
+def input_specs(cfg, shape, mesh: Optional[Mesh] = None):
+    """Shape/dtype stand-ins for a cell's inputs (no device allocation).
+
+    train  : {"tokens": (B, S)} (+ stub frontend embeddings)
+    prefill: {"tokens": (B, S)} (+ frames for enc-dec)
+    decode : (token (B, 1), pos scalar, caches(seq_len))
+    """
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.dtype(jnp.int32)
+    cdt = jnp.dtype(cfg.compute_dtype)
+    batch_axes = tuple(a for a in ("pod", "data")
+                       if mesh is not None and a in mesh.axis_names) or None
+    if batch_axes is not None:
+        nrows = int(np.prod([mesh.shape[a] for a in batch_axes]))
+        if B % nrows != 0:      # e.g. long_500k B=1: DP rows idle by design
+            batch_axes = None
+    tok_sh = (NamedSharding(mesh, P(batch_axes, None))
+              if mesh is not None else None)
+
+    def sds(shp, dt, sh=None):
+        if sh is None and mesh is not None:
+            sh = NamedSharding(mesh, P())
+        return jax.ShapeDtypeStruct(shp, dt, sharding=sh) if sh is not None \
+            else jax.ShapeDtypeStruct(shp, dt)
+
+    if shape.kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            # enc:dec = 1:1 token budget split (DESIGN.md §6)
+            se = sd = S // 2
+            fr_sh = (NamedSharding(mesh, P(batch_axes, None, None))
+                     if mesh is not None else None)
+            return {"frames": sds((B, se, cfg.d_model), cdt, fr_sh),
+                    "tokens": sds((B, sd), i32, tok_sh)}
+        if cfg.frontend == "vision_stub":
+            nv = cfg.n_vision_tokens
+            fr_sh = (NamedSharding(mesh, P(batch_axes, None, None))
+                     if mesh is not None else None)
+            return {"tokens": sds((B, S - nv), i32, tok_sh),
+                    "patch_embeds": sds((B, nv, cfg.d_model), cdt, fr_sh)}
+        return {"tokens": sds((B, S), i32, tok_sh)}
+
+    # decode: one new token against a seq_len-deep cache
+    assert shape.kind == "decode"
+    bundle = make_bundle(cfg, mesh)
+    if batch_axes is None and bundle.rt.rules.batch is not None:
+        rules = dataclasses.replace(bundle.rt.rules, batch=None)
+        bundle = dataclasses.replace(
+            bundle, rt=dataclasses.replace(bundle.rt, rules=rules))
+    caches = jax.eval_shape(
+        lambda: bundle.init_caches(B, S))
+    if mesh is not None:
+        specs = bundle.cache_specs()
+        caches = jax.tree.map(
+            lambda c, s: jax.ShapeDtypeStruct(
+                c.shape, c.dtype, sharding=NamedSharding(mesh, s)),
+            caches, specs)
+    token = sds((B, 1), i32, tok_sh)
+    pos = sds((), i32, NamedSharding(mesh, P()) if mesh is not None else None)
+    return {"token": token, "pos": pos, "caches": caches}

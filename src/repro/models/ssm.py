@@ -1,0 +1,368 @@
+"""Recurrent sequence-mixing blocks: mLSTM, sLSTM (xLSTM) and RG-LRU
+(RecurrentGemma / Griffin).
+
+Training paths avoid O(S^2) work:
+  * mLSTM  -- chunkwise-parallel form (matrix memory; exponential gating in
+    log space for stability), O(S * d^2 / chunk + S * chunk * d);
+  * RG-LRU -- diagonal linear recurrence via jax.lax.associative_scan;
+  * sLSTM  -- inherently sequential scalar memory -> lax.scan over time
+    (the xLSTM paper's own characterisation).
+
+Decode paths carry O(1) state per layer -- the reason these architectures
+run the long_500k cell that dense-attention models cannot (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.models import layers as L
+
+__all__ = [
+    "init_mlstm", "spec_mlstm", "mlstm_train", "mlstm_decode", "mlstm_state",
+    "init_slstm", "spec_slstm", "slstm_train", "slstm_decode", "slstm_state",
+    "init_rglru", "spec_rglru", "rglru_train", "rglru_decode", "rglru_state",
+]
+
+
+# =============================================================================
+# mLSTM (xLSTM matrix-memory block)
+# =============================================================================
+
+
+def init_mlstm(key, d: int, n_heads: int, *, pf: float = 2.0,
+               dtype=jnp.bfloat16):
+    di = int(d * pf)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": L.init_dense(ks[0], d, 2 * di, dtype=dtype),     # x, gate z
+        "wq": L.init_dense(ks[1], di, di, dtype=dtype),
+        "wk": L.init_dense(ks[2], di, di, dtype=dtype),
+        "wv": L.init_dense(ks[3], di, di, dtype=dtype),
+        "wi": L.init_dense(ks[4], di, n_heads, bias=True, dtype=jnp.float32),
+        "wf": L.init_dense(ks[5], di, n_heads, bias=True, dtype=jnp.float32),
+        "norm": L.init_norm(di),
+        "down": L.init_dense(ks[6], di, d, dtype=dtype),
+    }
+
+
+def spec_mlstm(rules: L.ShardingRules, *, layer_stacked=True):
+    kw = dict(layer_stacked=layer_stacked)
+    return {
+        "up": L.spec_dense(rules, "d_model", "d_ff", **kw),
+        "wq": L.spec_dense(rules, "d_ff", None, **kw),
+        "wk": L.spec_dense(rules, "d_ff", None, **kw),
+        "wv": L.spec_dense(rules, "d_ff", None, **kw),
+        "wi": L.spec_dense(rules, "d_ff", None, bias=True, **kw),
+        "wf": L.spec_dense(rules, "d_ff", None, bias=True, **kw),
+        "norm": L.spec_norm(rules, **kw),
+        "down": L.spec_dense(rules, "d_ff", "d_model", **kw),
+    }
+
+
+def _mlstm_gates(p, xi, cdt):
+    """log input/forget gates, (B, S, H) float32."""
+    logi = L.dense(p["wi"], xi, jnp.float32)                  # pre-act
+    logf = jax.nn.log_sigmoid(L.dense(p["wf"], xi, jnp.float32))
+    return logi, logf
+
+
+def mlstm_train(p, x, n_heads: int, *, chunk: int = 64, cdt=jnp.bfloat16,
+                return_state=False, unroll=False):
+    """Chunkwise-parallel mLSTM.  x: (B, S, d) -> (B, S, d)
+    (+ final (C, N, M) state when return_state)."""
+    B, S, d = x.shape
+    u = L.dense(p["up"], x, cdt)
+    xi, z = jnp.split(u, 2, axis=-1)
+    di = xi.shape[-1]
+    H = n_heads
+    hd = di // H
+    q = L.dense(p["wq"], xi, cdt).reshape(B, S, H, hd)
+    k = (L.dense(p["wk"], xi, cdt) / float(np.sqrt(hd))).reshape(B, S, H, hd)
+    v = L.dense(p["wv"], xi, cdt).reshape(B, S, H, hd)
+    logi, logf = _mlstm_gates(p, xi, cdt)                     # (B, S, H)
+
+    chunk = max(1, min(chunk, S))
+    while S % chunk:
+        chunk //= 2
+    n = S // chunk
+    rs = lambda t: t.reshape((B, n, chunk) + t.shape[2:])
+    qc, kc, vc = rs(q), rs(k), rs(v)
+    lic, lfc = rs(logi), rs(logf)
+
+    # log cumulative forget within chunk: F[t] = sum_{s<=t} logf
+    Fc = jnp.cumsum(lfc, axis=2)                               # (B, n, c, H)
+    Ftot = Fc[:, :, -1]                                        # (B, n, H)
+
+    # --- stabilised chunkwise recurrence ---
+    # Per query position t (within a chunk): stabiliser m_t = F_t + G_t with
+    # G_t = max(M_prev, cummax_{s<=t}(li_s - F_s)); every exp() below is then
+    # bounded by 1.  State carries C~ = C_true * exp(-M), M = Ftot + G_end.
+    def chunk_step(carry, xs):
+        Cm, Nm, Mm = carry                    # (B,H,hd,hd), (B,H,hd), (B,H)
+        q_, k_, v_, F_, li_, Ft_ = xs         # F_: (B,c,H) cumulative logf
+        lg = li_ - F_                                          # (B,c,H)
+        G = jnp.maximum(Mm[:, None, :], jax.lax.cummax(lg, axis=1))
+        # inter-chunk term: q_t reads the carried state with exp(Mm - G_t)
+        qf = jnp.exp(Mm[:, None, :] - G)                       # (B,c,H) <= 1
+        qw = (q_.astype(jnp.float32) * qf[..., None])
+        inter = jnp.einsum("bchd,bhde->bche", qw, Cm)
+        inter_n = jnp.einsum("bchd,bhd->bch", qw, Nm)
+        # intra-chunk term: weight(t,s) = exp(lg_s - G_t), causal
+        w = lg[:, None, :, :] - G[:, :, None, :]               # (B,t,s,H)
+        causal = jnp.tril(jnp.ones((w.shape[1], w.shape[1]), bool))
+        w = jnp.where(causal[None, :, :, None], jnp.exp(w), 0.0)
+        s = jnp.einsum("bchd,bkhd->bckh", q_.astype(jnp.float32),
+                       k_.astype(jnp.float32))
+        aw = s * w
+        intra = jnp.einsum("bckh,bkhd->bchd", aw, v_.astype(jnp.float32))
+        intra_n = jnp.sum(aw, axis=2)                          # (B,c,H)
+        num = inter + intra
+        den = inter_n + intra_n
+        norm = jnp.maximum(jnp.abs(den), jnp.exp(-(F_ + G)))
+        out = num / norm[..., None]
+        # state update to end of chunk: M' = Ftot + G_end
+        G_end = G[:, -1]                                       # (B,H)
+        s_state = jnp.exp(Mm - G_end)                          # <= 1
+        kw_ = jnp.exp(lg - G_end[:, None, :])                  # (B,c,H) <= 1
+        kv = jnp.einsum("bchd,bche->bhde",
+                        k_.astype(jnp.float32) * kw_[..., None],
+                        v_.astype(jnp.float32))
+        kn = jnp.sum(k_.astype(jnp.float32) * kw_[..., None], axis=1)
+        Cm2 = Cm * s_state[..., None, None] + kv
+        Nm2 = Nm * s_state[..., None] + kn
+        return (Cm2, Nm2, Ft_ + G_end), out
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    N0 = jnp.zeros((B, H, hd), jnp.float32)
+    M0 = jnp.full((B, H), -1e30, jnp.float32)
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (qc, kc, vc, Fc, lic, Ftot))
+    (Cf, Nf, Mf), outs = jax.lax.scan(chunk_step, (C0, N0, M0), xs,
+                                      unroll=True if unroll else 1)
+    h = jnp.moveaxis(outs, 0, 1).reshape(B, S, di).astype(cdt)
+    h = L.rms_norm(p["norm"], h) * jax.nn.silu(z)
+    y = L.dense(p["down"], h, cdt)
+    if return_state:
+        return y, {"C": Cf, "N": Nf, "M": Mf}
+    return y
+
+
+def mlstm_state(cfg, batch: int, d: int, n_heads: int, pf: float = 2.0,
+                dtype=jnp.float32):
+    di = int(d * pf)
+    hd = di // n_heads
+    return {"C": jnp.zeros((batch, n_heads, hd, hd), dtype),
+            "N": jnp.zeros((batch, n_heads, hd), dtype),
+            "M": jnp.full((batch, n_heads), -1e30, dtype)}
+
+
+def mlstm_decode(p, x, state, n_heads: int, *, cdt=jnp.bfloat16):
+    """One-token step.  x: (B, 1, d)."""
+    B = x.shape[0]
+    u = L.dense(p["up"], x, cdt)
+    xi, z = jnp.split(u, 2, axis=-1)
+    di = xi.shape[-1]
+    hd = di // n_heads
+    q = L.dense(p["wq"], xi, cdt).reshape(B, n_heads, hd)
+    k = (L.dense(p["wk"], xi, cdt) / float(np.sqrt(hd))).reshape(B, n_heads, hd)
+    v = L.dense(p["wv"], xi, cdt).reshape(B, n_heads, hd)
+    logi = L.dense(p["wi"], xi, jnp.float32)[:, 0]             # (B, H)
+    logf = jax.nn.log_sigmoid(L.dense(p["wf"], xi, jnp.float32))[:, 0]
+    m_new = jnp.maximum(state["M"] + logf, logi)
+    sf = jnp.exp(state["M"] + logf - m_new)
+    si = jnp.exp(logi - m_new)
+    C = state["C"] * sf[..., None, None] + si[..., None, None] * \
+        jnp.einsum("bhd,bhe->bhde", k.astype(jnp.float32), v.astype(jnp.float32))
+    N = state["N"] * sf[..., None] + si[..., None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), N)
+    norm = jnp.maximum(jnp.abs(den), jnp.exp(-m_new))
+    out = (num / norm[..., None]).reshape(B, 1, di)
+    h = L.rms_norm(p["norm"], out.astype(cdt)) * jax.nn.silu(z)
+    return L.dense(p["down"], h, cdt), {"C": C, "N": N, "M": m_new}
+
+
+# =============================================================================
+# sLSTM (xLSTM scalar-memory block; sequential scan)
+# =============================================================================
+
+
+def init_slstm(key, d: int, n_heads: int, *, pf: float = 4.0 / 3.0,
+               dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 6)
+    return {
+        "wz": L.init_dense(ks[0], d, d, bias=True, dtype=dtype),
+        "wi": L.init_dense(ks[1], d, d, bias=True, dtype=jnp.float32),
+        "wf": L.init_dense(ks[2], d, d, bias=True, dtype=jnp.float32),
+        "wo": L.init_dense(ks[3], d, d, bias=True, dtype=dtype),
+        "norm": L.init_norm(d),
+        "ffn": L.init_mlp(ks[4], d, int(d * pf), act="swiglu", dtype=dtype),
+    }
+
+
+def spec_slstm(rules: L.ShardingRules, *, layer_stacked=True):
+    kw = dict(bias=True, layer_stacked=layer_stacked)
+    return {
+        "wz": L.spec_dense(rules, "d_model", None, **kw),
+        "wi": L.spec_dense(rules, "d_model", None, **kw),
+        "wf": L.spec_dense(rules, "d_model", None, **kw),
+        "wo": L.spec_dense(rules, "d_model", None, **kw),
+        "norm": L.spec_norm(rules, layer_stacked=layer_stacked),
+        "ffn": L.spec_mlp(rules, layer_stacked=layer_stacked),
+    }
+
+
+def _slstm_scan(z, i_pre, f_pre, state):
+    """Stabilised sLSTM recurrence over time.  All (B, S, d) inputs."""
+    def step(carry, xs):
+        c, n, m = carry
+        z_t, i_t, f_t = xs
+        logf = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(logf + m, i_t)
+        ip = jnp.exp(i_t - m_new)
+        fp = jnp.exp(logf + m - m_new)
+        c2 = fp * c + ip * jnp.tanh(z_t)
+        n2 = fp * n + ip
+        h = c2 / jnp.maximum(n2, 1.0)
+        return (c2, n2, m_new), h
+
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (z, i_pre, f_pre))
+    (c, n, m), hs = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(hs, 0, 1), (c, n, m)
+
+
+def slstm_state(batch: int, d: int, dtype=jnp.float32):
+    return {"c": jnp.zeros((batch, d), dtype), "n": jnp.zeros((batch, d), dtype),
+            "m": jnp.full((batch, d), -1e30, dtype)}
+
+
+def slstm_train(p, x, *, cdt=jnp.bfloat16, return_state=False):
+    B, S, d = x.shape
+    z = L.dense(p["wz"], x, jnp.float32)
+    i_pre = L.dense(p["wi"], x, jnp.float32)
+    f_pre = L.dense(p["wf"], x, jnp.float32)
+    st = slstm_state(B, d)
+    h, (c, n, m) = _slstm_scan(z, i_pre, f_pre, (st["c"], st["n"], st["m"]))
+    h = h.astype(cdt) * jax.nn.sigmoid(L.dense(p["wo"], x, cdt))
+    h = L.rms_norm(p["norm"], h)
+    y = L.swiglu(p["ffn"], h, cdt)
+    if return_state:
+        return y, {"c": c, "n": n, "m": m}
+    return y
+
+
+def slstm_decode(p, x, state, *, cdt=jnp.bfloat16):
+    B = x.shape[0]
+    z = L.dense(p["wz"], x, jnp.float32)[:, 0]
+    i_pre = L.dense(p["wi"], x, jnp.float32)[:, 0]
+    f_pre = L.dense(p["wf"], x, jnp.float32)[:, 0]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + state["m"], i_pre)
+    ip = jnp.exp(i_pre - m_new)
+    fp = jnp.exp(logf + state["m"] - m_new)
+    c2 = fp * state["c"] + ip * jnp.tanh(z)
+    n2 = fp * state["n"] + ip
+    h = (c2 / jnp.maximum(n2, 1.0))[:, None, :].astype(cdt)
+    h = h * jax.nn.sigmoid(L.dense(p["wo"], x, cdt))
+    h = L.rms_norm(p["norm"], h)
+    y = L.swiglu(p["ffn"], h, cdt)
+    return y, {"c": c2, "n": n2, "m": m_new}
+
+
+# =============================================================================
+# RG-LRU (RecurrentGemma recurrent block)
+# =============================================================================
+
+
+def init_rglru(key, d: int, lru_width: int, *, dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 7)
+    w = lru_width
+    # Lambda parameterisation: a = sigmoid(Lambda) ** (8 * r_t)
+    lam0 = np.log(np.exp(np.linspace(0.9, 0.999, w) * 8.0) - 1.0) / 8.0
+    return {
+        "in_x": L.init_dense(ks[0], d, w, dtype=dtype),
+        "in_gate": L.init_dense(ks[1], d, w, dtype=dtype),
+        "wr": L.init_dense(ks[2], w, w, bias=True, dtype=jnp.float32),
+        "wi": L.init_dense(ks[3], w, w, bias=True, dtype=jnp.float32),
+        "lam": jnp.asarray(lam0, jnp.float32),
+        "out": L.init_dense(ks[4], w, d, dtype=dtype),
+        "conv": (jax.random.normal(ks[5], (4, w), jnp.float32) * 0.1
+                 ).astype(dtype),
+    }
+
+
+def spec_rglru(rules: L.ShardingRules, *, layer_stacked=True):
+    kw = dict(layer_stacked=layer_stacked)
+    lead = (rules.ax("layers"),) if layer_stacked else ()
+    return {
+        "in_x": L.spec_dense(rules, "d_model", "d_ff", **kw),
+        "in_gate": L.spec_dense(rules, "d_model", "d_ff", **kw),
+        "wr": L.spec_dense(rules, "d_ff", None, bias=True, **kw),
+        "wi": L.spec_dense(rules, "d_ff", None, bias=True, **kw),
+        "lam": P(*lead, rules.ax("d_ff")),
+        "out": L.spec_dense(rules, "d_ff", "d_model", **kw),
+        "conv": P(*lead, None, rules.ax("d_ff")),
+    }
+
+
+def _causal_conv4(xw, kernel, state=None):
+    """Depthwise causal conv, width 4.  xw: (B, S, w)."""
+    B, S, w = xw.shape
+    if state is None:
+        pad = jnp.zeros((B, 3, w), xw.dtype)
+    else:
+        pad = state                                             # (B, 3, w)
+    xp = jnp.concatenate([pad, xw], axis=1)
+    out = sum(xp[:, 3 - t: 3 - t + S] * kernel[3 - t][None, None, :]
+              for t in range(4))
+    new_state = xp[:, -3:]
+    return out, new_state
+
+
+def rglru_train(p, x, *, cdt=jnp.bfloat16, return_state=False):
+    B, S, d = x.shape
+    xw = L.dense(p["in_x"], x, cdt)
+    gate = jax.nn.gelu(L.dense(p["in_gate"], x, cdt))
+    xw_raw = xw
+    xw, conv_tail = _causal_conv4(xw, p["conv"].astype(cdt))
+    r = jax.nn.sigmoid(L.dense(p["wr"], xw, jnp.float32))
+    i = jax.nn.sigmoid(L.dense(p["wi"], xw, jnp.float32))
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"].astype(jnp.float32))[None, None]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    gated = (i * xw.astype(jnp.float32)) * mult
+    # h_t = a_t * h_{t-1} + gated_t  via associative scan
+    def comb(l, r_):
+        al, bl = l
+        ar, br = r_
+        return al * ar, br + ar * bl
+    aa, hh = jax.lax.associative_scan(comb, (a, gated), axis=1)
+    h = hh.astype(cdt) * gate
+    y = L.dense(p["out"], h, cdt)
+    if return_state:
+        return y, {"h": hh[:, -1], "conv": conv_tail.astype(jnp.float32)}
+    return y
+
+
+def rglru_state(batch: int, lru_width: int, dtype=jnp.float32):
+    return {"h": jnp.zeros((batch, lru_width), dtype),
+            "conv": jnp.zeros((batch, 3, lru_width), jnp.float32)}
+
+
+def rglru_decode(p, x, state, *, cdt=jnp.bfloat16):
+    B = x.shape[0]
+    xw = L.dense(p["in_x"], x, cdt)
+    gate = jax.nn.gelu(L.dense(p["in_gate"], x, cdt))
+    xw, conv_state = _causal_conv4(xw, p["conv"].astype(cdt),
+                                   state["conv"].astype(cdt))
+    r = jax.nn.sigmoid(L.dense(p["wr"], xw, jnp.float32))[:, 0]
+    i = jax.nn.sigmoid(L.dense(p["wi"], xw, jnp.float32))[:, 0]
+    log_a = -8.0 * r * jax.nn.softplus(p["lam"].astype(jnp.float32))[None]
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    h = a * state["h"] + (i * xw[:, 0].astype(jnp.float32)) * mult
+    y = (h[:, None].astype(cdt)) * gate
+    return L.dense(p["out"], y, cdt), {"h": h, "conv": conv_state.astype(jnp.float32)}

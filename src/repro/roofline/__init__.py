@@ -1,0 +1,1 @@
+# Roofline analysis: compiled-artifact cost extraction + 3-term model.

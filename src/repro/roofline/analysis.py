@@ -1,0 +1,209 @@
+"""Three-term roofline analysis from compiled XLA artifacts.
+
+    compute term    = HLO_FLOPs_per_device / peak_FLOP/s
+    memory term     = HLO_bytes_per_device / HBM_bw
+    collective term = wire_bytes_per_device / link_bw
+
+HLO_FLOPs / bytes come from ``compiled.cost_analysis()`` (the compiled
+module is the per-device SPMD program, so they are already per-device).
+Collective bytes are NOT in cost_analysis: we parse the post-optimisation
+HLO text and sum the wire traffic of every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute, using ring-algorithm
+per-device wire-byte formulas.
+
+Hardware model (TPU v5e, per task spec): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+__all__ = ["HW_V5E", "Roofline", "collective_bytes", "analyze_compiled",
+           "parse_hlo_collectives"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Hardware:
+    name: str
+    peak_flops: float        # bf16 FLOP/s per chip
+    hbm_bw: float            # bytes/s per chip
+    link_bw: float           # bytes/s per ICI link
+
+
+HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+# e.g.  %all-reduce.1 = f32[512,128]{1,0} all-reduce(...), replica_groups=...
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_TUPLE_COLL_RE = re.compile(
+    r"=\s*\(([^)]*)\)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUP_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUP_RE2 = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUP_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUP_RE2.search(line)
+    if m:  # replica_groups=[G,S] -> S per group
+        return int(m.group(2))
+    return world
+
+
+def parse_hlo_collectives(hlo_text: str, world: int):
+    """Yield (op_kind, payload_bytes, group_size) per collective op."""
+    out = []
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if m:
+            dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+            out.append((kind, _shape_bytes(dtype, dims),
+                        _group_size(line, world)))
+            continue
+        m = _TUPLE_COLL_RE.search(line)
+        if m:
+            kind = m.group(2)
+            tot = sum(_shape_bytes(d, s)
+                      for d, s in _SHAPE_RE.findall(m.group(1)))
+            # async tuple shapes repeat (operand, result): halve
+            out.append((kind, tot // 2 if "-start" in line else tot,
+                        _group_size(line, world)))
+    return out
+
+
+def collective_bytes(hlo_text: str, world: int) -> dict:
+    """Per-device wire bytes by collective kind (ring-algorithm model)."""
+    per_kind: dict = {}
+    total = 0.0
+    for kind, size, g in parse_hlo_collectives(hlo_text, world):
+        frac = (g - 1) / max(g, 1)
+        if kind == "all-reduce":
+            wire = 2.0 * size * frac          # reduce-scatter + all-gather
+        elif kind in ("all-gather", "reduce-scatter", "all-to-all"):
+            wire = size * frac
+        else:  # collective-permute
+            wire = float(size)
+        per_kind[kind] = per_kind.get(kind, 0.0) + wire
+        per_kind.setdefault(f"{kind}_count", 0)
+        per_kind[f"{kind}_count"] += 1
+        total += wire
+    per_kind["total"] = total
+    return per_kind
+
+
+def _cost_get(cost, key):
+    if cost is None:
+        return 0.0
+    if isinstance(cost, dict):
+        return float(cost.get(key, 0.0))
+    if isinstance(cost, (list, tuple)) and cost:
+        return float(cost[0].get(key, 0.0))
+    return 0.0
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    wire_bytes_per_device: float
+    n_devices: int
+    hw: Hardware = HW_V5E
+    model_flops: float = 0.0           # 6*N*D (or 6*N_active*D) total
+    collectives: Optional[dict] = None
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_device / self.hw.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_device / self.hw.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.wire_bytes_per_device / self.hw.link_bw
+
+    @property
+    def bottleneck(self) -> str:
+        ts = {"compute": self.t_compute, "memory": self.t_memory,
+              "collective": self.t_collective}
+        return max(ts, key=ts.get)
+
+    @property
+    def useful_flops_fraction(self) -> float:
+        tot = self.flops_per_device * self.n_devices
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the dominant-resource bound achieved by useful work:
+        t_useful_compute / max(t_compute, t_memory, t_collective)."""
+        t_bound = max(self.t_compute, self.t_memory, self.t_collective)
+        if t_bound <= 0:
+            return 0.0
+        t_useful = (self.model_flops / max(self.n_devices, 1)) \
+            / self.hw.peak_flops
+        return t_useful / t_bound
+
+    def to_dict(self) -> dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "wire_bytes_per_device": self.wire_bytes_per_device,
+            "n_devices": self.n_devices,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "model_flops": self.model_flops,
+            "useful_flops_fraction": self.useful_flops_fraction,
+            "roofline_fraction": self.roofline_fraction,
+            "collectives": self.collectives,
+        }
+
+
+def analyze_compiled(compiled, *, n_devices: int, model_flops: float = 0.0,
+                     hw: Hardware = HW_V5E) -> Roofline:
+    cost = None
+    try:
+        cost = compiled.cost_analysis()
+    except Exception:
+        pass
+    flops = _cost_get(cost, "flops")
+    byts = _cost_get(cost, "bytes accessed")
+    try:
+        txt = compiled.as_text()
+    except Exception:
+        txt = ""
+    colls = collective_bytes(txt, n_devices)
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=byts,
+        wire_bytes_per_device=colls["total"], n_devices=n_devices, hw=hw,
+        model_flops=model_flops, collectives=colls)

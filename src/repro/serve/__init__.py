@@ -1,0 +1,2 @@
+# Serving substrate: KV/state caches live in repro.models; this package
+# provides the batched prefill/decode loop drivers.

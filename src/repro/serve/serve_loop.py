@@ -1,0 +1,94 @@
+"""Batched serving loop: continuous prefill+decode over a request queue.
+
+Single-program batched serving (static batch slotting): requests occupy
+batch slots; each engine step decodes one token for every active slot.
+Finished slots (EOS or max_len) are refilled from the queue with a prefill.
+This is the standard static-batching TPU serving shape; the decode step is
+the unit the decode_32k / long_500k dry-run cells lower.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray            # (S,) int32
+    max_new: int = 32
+    out_tokens: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Greedy decoding engine over a fixed batch of slots."""
+
+    def __init__(self, bundle, batch: int, max_len: int, eos_id: int = 1):
+        self.bundle = bundle
+        self.batch = batch
+        self.max_len = max_len
+        self.eos_id = eos_id
+        self.caches = bundle.init_caches(batch, max_len)
+        self._decode = jax.jit(bundle.decode_fn)
+        self._queue: List[Request] = []
+        self._slots: List[Optional[Request]] = [None] * batch
+        self.pos = 0
+
+    def submit(self, req: Request):
+        self._queue.append(req)
+
+    def _prefill_slot(self, slot: int, req: Request):
+        """Prefill a single request by replaying its prompt through decode
+        steps (slot-local prefill keeps the static-batch engine simple; the
+        bulk prefill path is exercised by prefill_32k)."""
+        for t in req.prompt[:-1]:
+            tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(int(t))
+            _, self.caches = self._decode(self.bundle_params, tok,
+                                          jnp.int32(self.pos), self.caches)
+            self.pos += 1
+        req._last = int(req.prompt[-1])
+
+    def run(self, params, max_steps: int = 64):
+        """Serve until queue drained or max_steps decode steps."""
+        self.bundle_params = params
+        # fill slots
+        for i in range(self.batch):
+            if self._queue and self._slots[i] is None:
+                self._slots[i] = self._queue.pop(0)
+                self._prefill_slot(i, self._slots[i])
+        for _ in range(max_steps):
+            live = [r for r in self._slots if r is not None and not r.done]
+            if not live:
+                break
+            tok = np.zeros((self.batch, 1), np.int32)
+            for i, r in enumerate(self._slots):
+                if r is not None and not r.done:
+                    tok[i, 0] = getattr(r, "_last", 0)
+            logits, self.caches = self._decode(
+                self.bundle_params, jnp.asarray(tok), jnp.int32(self.pos),
+                self.caches)
+            self.pos += 1
+            nxt = np.asarray(jnp.argmax(logits, axis=-1))
+            for i, r in enumerate(self._slots):
+                if r is None or r.done:
+                    continue
+                t = int(nxt[i])
+                r.out_tokens.append(t)
+                r._last = t
+                if t == self.eos_id or len(r.out_tokens) >= r.max_new \
+                        or self.pos >= self.max_len - 1:
+                    r.done = True
+                    if self._queue:  # refill the slot
+                        self._slots[i] = self._queue.pop(0)
+                        self._prefill_slot(i, self._slots[i])
+                    else:
+                        self._slots[i] = r  # keep for collection
+        return [r for r in self._slots if r is not None]

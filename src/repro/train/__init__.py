@@ -1,0 +1,3 @@
+# Training substrate: optimizer (AdamW + ZeRO sharding), train-step factory
+# (remat, grad-accum, compression), checkpointing, data pipeline, fault
+# tolerance.

@@ -1,0 +1,125 @@
+"""AdamW with ZeRO-1 sharding specs, gradient clipping and schedules.
+
+Implemented directly (no optax dependency).  Optimizer state mirrors the
+parameter tree; its sharding specs extend the param specs by additionally
+sharding the largest replicated axis over the "data" mesh axis when
+``zero1=True`` (the optimizer-state partitioning trick -- each data-parallel
+rank keeps 1/N of the moments, XLA gathers on use).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["AdamWConfig", "init_opt_state", "opt_state_specs", "adamw_update",
+           "cosine_schedule", "clip_by_global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    zero1: bool = True            # shard moments over the data axis
+    moment_dtype: str = "float32"
+
+
+def cosine_schedule(cfg: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1),
+                    0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(np.pi * prog))
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, mdt)
+    return {"mu": jax.tree.map(zeros, params),
+            "nu": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _zero1_spec(spec: P, shape, data_size: int) -> P:
+    """Extend a param spec: shard the largest divisible None-axis over
+    "data" (ZeRO-1 moment partitioning)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    flat = []
+    for e in entries:
+        flat.extend(e if isinstance(e, tuple) else (e,))
+    if "data" in flat:
+        return P(*entries)
+    best, best_size = None, 0
+    for i, (ax, n) in enumerate(zip(entries, shape)):
+        if ax is None and n > best_size and n % data_size == 0:
+            best, best_size = i, n
+    if best is None:
+        return P(*entries)
+    entries[best] = "data"
+    return P(*entries)
+
+
+def opt_state_specs(param_specs, param_shapes, cfg: AdamWConfig,
+                    data_size: int = 16):
+    """Specs for the optimizer state tree (ZeRO-1 over "data" if enabled)."""
+    is_p = lambda v: isinstance(v, P)
+    if not cfg.zero1:
+        mom = param_specs
+    else:
+        mom = jax.tree.map(
+            lambda s, shp: _zero1_spec(s, shp.shape, data_size), param_specs,
+            param_shapes, is_leaf=is_p)
+    return {"mu": mom, "nu": mom, "step": P()}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn2 = sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in leaves)
+    gn = jnp.sqrt(gn2)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gn
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """One AdamW step.  Returns (params', state', metrics)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = cosine_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu2 = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu2 = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = mu2 / bc1
+        vhat = nu2 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:  # decoupled weight decay on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return (p2.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["mu"], state["nu"])
+    params2 = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda v: isinstance(v, tuple))
+    mu2 = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda v: isinstance(v, tuple))
+    nu2 = jax.tree.map(lambda t: t[2], out,
+                       is_leaf=lambda v: isinstance(v, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return params2, {"mu": mu2, "nu": nu2, "step": step}, metrics

@@ -1,0 +1,8 @@
+# NOTE: deliberately NO --xla_force_host_platform_device_count here --
+# smoke tests and benches must see 1 device (the dry-run sets its own flags
+# as the first lines of repro.launch.dryrun).  Multi-device tests spawn
+# subprocesses (see tests/helpers/).
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,42 @@
+"""Subprocess helper: distributed SHT == serial engine on 8 host devices.
+Prints OK lines; exits nonzero on mismatch."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import sys
+import numpy as np, jax, jax.numpy as jnp
+import repro  # noqa
+from repro.core import grids, sht, plan as planlib, dist_sht
+
+key = jax.random.PRNGKey(3)
+lmax = 40
+g = grids.make_grid("gl", l_max=lmax)
+t = sht.SHT(g, l_max=lmax, m_max=lmax)
+alm = sht.random_alm(key, lmax, lmax, K=2)
+maps_ref = np.asarray(t.alm2map(alm))
+alm_ref = np.asarray(t.map2alm(jnp.asarray(maps_ref)))
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+p = planlib.SHTPlan(g, lmax, lmax, 8)
+
+def check(name, fold, comm_dtype, stage1, dtype, tol_s, tol_a):
+    d = dist_sht.DistSHT(p, mesh, ("data", "model"), dtype=dtype, fold=fold,
+                         comm_dtype=comm_dtype, stage1=stage1)
+    packed = np.asarray(p.pack_alm(np.asarray(alm)))
+    if dtype == "float32":
+        packed = packed.astype(np.complex64)
+    maps_plan = d.alm2map(jnp.asarray(packed))
+    maps_grid = np.asarray(p.scatter_map(np.asarray(maps_plan)))
+    err_s = np.max(np.abs(maps_grid - maps_ref)) / np.max(np.abs(maps_ref))
+    mp = p.gather_map(jnp.asarray(maps_ref).astype(d.dtype))
+    alm_out = np.asarray(p.unpack_alm(np.asarray(d.map2alm(mp))))
+    err_a = np.max(np.abs(alm_out - alm_ref)) / np.max(np.abs(alm_ref))
+    ok = err_s < tol_s and err_a < tol_a
+    print(f"{name}: synth={err_s:.2e} anal={err_a:.2e} {'OK' if ok else 'FAIL'}")
+    return ok
+
+ok = True
+ok &= check("f64", False, None, "jnp", "float64", 1e-12, 1e-12)
+ok &= check("f64+fold", True, None, "jnp", "float64", 1e-12, 1e-12)
+ok &= check("f64+bf16comm", False, "bfloat16", "jnp", "float64", 2e-2, 2e-2)
+ok &= check("f32+pallas", False, None, "pallas", "float32", 5e-4, 5e-4)
+ok &= check("f32+pallas+fold", True, None, "pallas", "float32", 5e-4, 5e-4)
+sys.exit(0 if ok else 1)

@@ -1,0 +1,35 @@
+"""Multi-device equivalence tests (subprocess: 8 host-platform devices;
+this process stays single-device per the dry-run isolation rule)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _run(helper):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(_ROOT, "src")
+    r = subprocess.run(
+        [sys.executable, os.path.join(_ROOT, "tests", "helpers", helper)],
+        capture_output=True, text=True, timeout=560, env=env)
+    assert r.returncode == 0, f"{helper} failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout
+
+
+def test_dist_sht_matches_serial():
+    out = _run("dist_sht_check.py")
+    assert out.count("OK") == 5
+
+
+def test_moe_expert_parallel_matches_local():
+    out = _run("moe_dist_check.py")
+    assert "a2a_err" in out
+
+
+def test_ulysses_attention_matches_mea():
+    out = _run("ulysses_check.py")
+    assert "ulysses_err" in out

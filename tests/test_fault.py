@@ -1,0 +1,113 @@
+"""Fault tolerance: restart-from-checkpoint reproduces the uninterrupted
+run bit-for-bit; elastic restore re-places state; serve engine smoke."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro  # noqa: F401
+from repro.configs import registry
+from repro.configs.base import reduced
+from repro.models.model import make_bundle
+from repro.train import checkpoint as C
+from repro.train import data as D
+from repro.train import fault as F
+from repro.train import optimizer as O
+from repro.train import train_loop as TL
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _mk():
+    cfg = reduced(registry.ARCHS["xlstm-125m"], n_layers=2)
+    b = make_bundle(cfg, mesh=None)
+    tcfg = TL.TrainConfig(opt=O.AdamWConfig(lr=1e-3, warmup_steps=1,
+                                            total_steps=50))
+    step = jax.jit(TL.make_train_step(b, tcfg))
+    ds = D.SyntheticLM(vocab=cfg.vocab, seq_len=16, global_batch=2, seed=1)
+
+    def init_state():
+        params = b.init(KEY)
+        return {"params": params, "opt": O.init_opt_state(params, tcfg.opt)}
+
+    losses = []
+
+    def step_fn(state, i):
+        batch = jax.tree.map(jnp.asarray, ds.batch(i))
+        p, o, m = step(state["params"], state["opt"], batch, KEY)
+        losses.append((i, float(m["loss"])))
+        return {"params": p, "opt": o}
+
+    return init_state, step_fn, losses
+
+
+def test_restart_reproduces_trajectory(tmp_path):
+    init_state, step_fn, losses_a = _mk()
+    cfgA = F.RunConfig(total_steps=12, ckpt_dir=str(tmp_path / "a"),
+                       ckpt_every=4)
+    F.run_with_restarts(cfgA, init_state=init_state, step_fn=step_fn)
+
+    init_state, step_fn, losses_b = _mk()
+    cfgB = F.RunConfig(total_steps=12, ckpt_dir=str(tmp_path / "b"),
+                       ckpt_every=4)
+    inj = F.FailureInjector(fail_at=(6, 10))
+    F.run_with_restarts(cfgB, init_state=init_state, step_fn=step_fn,
+                        injector=inj)
+    # same (step, loss) pairs for the last steps despite two injected kills
+    tail_a = dict(losses_a)[11]
+    tail_b = dict(losses_b)[11]
+    assert tail_a == tail_b
+
+
+def test_restart_data_order_preserved(tmp_path):
+    """After a failure the data stream continues at the checkpointed step
+    (stateless batch(step) indexing)."""
+    ds = D.SyntheticLM(vocab=64, seq_len=8, global_batch=2, seed=9)
+    seen = []
+
+    def init_state():
+        return {"x": jnp.zeros(())}
+
+    def step_fn(state, i):
+        seen.append(int(ds.batch(i)["tokens"][0, 0]))
+        return state
+
+    inj = F.FailureInjector(fail_at=(3,))
+    F.run_with_restarts(
+        F.RunConfig(total_steps=6, ckpt_dir=str(tmp_path), ckpt_every=1),
+        init_state=init_state, step_fn=step_fn, injector=inj)
+    uninterrupted = [int(ds.batch(i)["tokens"][0, 0]) for i in range(6)]
+    # the replayed suffix after the kill equals the uninterrupted stream
+    assert seen[-3:] == uninterrupted[-3:]
+
+
+def test_elastic_restore_replaces_arrays(tmp_path):
+    """Restore onto a 'different mesh': here 1 device with a new sharding
+    object -- the arrays land with the requested placement."""
+    state = {"w": jnp.arange(16.0).reshape(4, 4)}
+    C.save(str(tmp_path), 1, state)
+    like = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+                        state)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": jax.NamedSharding(mesh, jax.sharding.PartitionSpec("data"))}
+    back = C.restore(str(tmp_path), 1, like, shardings=sh)
+    assert np.array_equal(np.asarray(back["w"]), np.asarray(state["w"]))
+    assert back["w"].sharding == sh["w"]
+
+
+def test_serve_engine_greedy():
+    from repro.serve.serve_loop import Request, ServeEngine
+    cfg = reduced(registry.ARCHS["qwen2-0.5b"], n_layers=2)
+    b = make_bundle(cfg, mesh=None)
+    params = b.init(KEY)
+    eng = ServeEngine(b, batch=2, max_len=64, eos_id=-123)
+    rng = np.random.default_rng(0)
+    for rid in range(3):
+        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 4)
+                           .astype(np.int32), max_new=4))
+    done = eng.run(params, max_steps=40)
+    finished = [r for r in done if r.done]
+    assert len(finished) >= 2
+    for r in finished:
+        assert len(r.out_tokens) == 4
+        assert all(0 <= t < cfg.vocab for t in r.out_tokens)

@@ -1,0 +1,53 @@
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import grids
+
+
+def test_gl_nodes_match_numpy():
+    for n in (4, 17, 64, 129):
+        x, w = grids._gauss_legendre_nodes(n)
+        xr, wr = np.polynomial.legendre.leggauss(n)
+        assert np.allclose(np.sort(x), np.sort(xr), atol=1e-14)
+        assert np.allclose(np.sort(w), np.sort(wr), atol=1e-13)
+
+
+@pytest.mark.parametrize("kind,kw", [
+    ("gl", dict(l_max=32)),
+    ("healpix_ring", dict(nside=8)),
+    ("healpix", dict(nside=8)),
+])
+def test_grid_invariants(kind, kw):
+    g = grids.make_grid(kind, **kw)
+    g.validate()
+    # weights integrate the constant function exactly: sum w = 4 pi
+    assert abs(g.weights @ g.n_phi - 4 * np.pi) < 1e-8
+    assert g.equator_symmetric
+
+
+def test_healpix_counts():
+    for nside in (1, 2, 4, 16):
+        g = grids.make_grid("healpix", nside=nside)
+        assert g.n_pix == 12 * nside * nside
+        assert g.n_rings == 4 * nside - 1
+        assert g.max_n_phi == 4 * nside
+
+
+def test_healpix_ring_uniform_matches_latitudes():
+    hp = grids.make_grid("healpix", nside=8)
+    hpr = grids.make_grid("healpix_ring", nside=8)
+    assert np.allclose(hp.cos_theta, hpr.cos_theta)
+    # per-ring areas identical
+    assert np.allclose(hp.ring_areas(), hpr.ring_areas())
+
+
+def test_gl_quadrature_exactness():
+    # GL with n rings integrates polynomials up to degree 2n-1 exactly
+    g = grids.make_grid("gl", l_max=16)  # 17 rings
+    x = g.cos_theta
+    w = g.weights * g.n_phi / (2 * np.pi)  # theta-quadrature weights
+    for deg in (0, 5, 20, 33):
+        est = w @ (x ** deg)
+        exact = 0.0 if deg % 2 else 2.0 / (deg + 1)
+        assert abs(est - exact) < 1e-12, deg

@@ -1,0 +1,127 @@
+"""Pallas kernel validation (interpret mode): shape/dtype sweeps vs the
+bit-matched ref.py oracle and the float64 core engine."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import grids, legendre, sht
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+KEY = jax.random.PRNGKey(5)
+
+
+def _setup(l_max, K, m_vals=None):
+    g = grids.make_grid("gl", l_max=l_max)
+    lm = legendre.log_mu(l_max)
+    m_vals = np.arange(l_max + 1) if m_vals is None else np.asarray(m_vals)
+    alm = sht.random_alm(KEY, l_max, l_max, K=K)
+    a_re = np.real(np.asarray(alm))[m_vals.clip(0)]
+    a_im = np.imag(np.asarray(alm))[m_vals.clip(0)]
+    a32 = jnp.concatenate([jnp.asarray(a_re), jnp.asarray(a_im)],
+                          axis=-1).astype(jnp.float32)
+    pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
+    x32 = jnp.asarray(g.cos_theta, jnp.float32)
+    return g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32
+
+
+@pytest.mark.parametrize("l_max,K", [(24, 1), (40, 2), (33, 4)])
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+@pytest.mark.parametrize("fold", [False, True])
+def test_synth_kernel_vs_ref(l_max, K, variant, fold):
+    g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32 = _setup(l_max, K)
+    nh = (g.n_rings + 1) // 2
+    xs = g.cos_theta[:nh] if fold else g.cos_theta
+    sins = g.sin_theta[:nh] if fold else g.sin_theta
+    pmm_f, pms_f = kref.prepare_seeds(m_vals, sins, lm)
+    want = kref.synth_ref(a32, m_vals, jnp.asarray(xs, jnp.float32), pmm_f,
+                          pms_f, l_max=l_max, fold=fold)
+    got = kops.synth(a32, m_vals, jnp.asarray(xs, jnp.float32), pmm_f, pms_f,
+                     l_max=l_max, fold=fold, variant=variant)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=0, atol=2e-6)
+
+
+@pytest.mark.parametrize("l_max,K", [(24, 1), (40, 2)])
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+def test_anal_kernel_vs_ref(l_max, K, variant):
+    g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32 = _setup(l_max, K)
+    rng = np.random.default_rng(0)
+    dw = jnp.asarray(rng.normal(size=(len(m_vals), 1, g.n_rings, 2 * K)),
+                     jnp.float32)
+    want = kref.anal_ref(dw, m_vals, x32, pmm, pms, l_max=l_max, l1p=128)
+    got = kops.anal(dw, m_vals, x32, pmm, pms, l_max=l_max, variant=variant)
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(want[:, : got.shape[1]]),
+                               rtol=0, atol=5e-5)
+
+
+def test_synth_kernel_vs_f64_engine():
+    l_max, K = 40, 2
+    g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32 = _setup(l_max, K)
+    d_re, d_im = legendre.delta_from_alm(a_re, a_im, m_vals, g.cos_theta,
+                                         g.sin_theta, lm, l_max=l_max)
+    truth = np.concatenate([np.asarray(d_re), np.asarray(d_im)], axis=-1)
+    got = np.asarray(kops.synth(a32, m_vals, x32, pmm, pms, l_max=l_max,
+                                variant="mxu"))[:, 0]
+    rel = np.max(np.abs(got - truth)) / np.max(np.abs(truth))
+    assert rel < 5e-5
+
+
+def test_kernel_handles_plan_padding():
+    """-1 m slots (plan padding) must produce exactly zero output."""
+    l_max, K = 20, 1
+    m_vals = np.array([0, 5, -1, 17, -1])
+    g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32 = _setup(l_max, K, m_vals)
+    got = np.asarray(kops.synth(a32, m_vals, x32, pmm, pms, l_max=l_max,
+                                variant="vpu"))
+    assert np.all(got[2] == 0.0) and np.all(got[4] == 0.0)
+    assert np.any(got[1] != 0.0)
+
+
+def test_kernel_f32_rescaling_high_m():
+    """f32 seeds underflow ~m=40 at polar rings; the in-kernel rescaled
+    recurrence must recover the representable values downstream."""
+    l_max = 300
+    g = grids.make_grid("gl", l_max=l_max)
+    lm = legendre.log_mu(l_max)
+    m_vals = np.array([250])
+    a = np.zeros((1, l_max + 1, 2), np.float32)
+    a[0, l_max, 0] = 1.0
+    pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
+    assert int(jnp.min(pms)) < 0          # scaling actually engaged
+    got = np.asarray(kops.synth(jnp.asarray(a), m_vals,
+                                jnp.asarray(g.cos_theta, jnp.float32), pmm,
+                                pms, l_max=l_max, variant="vpu"))[0, 0, :, 0]
+    d_re, _ = legendre.delta_from_alm(
+        a[None, :, :, :1][0], np.zeros((1, l_max + 1, 1)), m_vals,
+        g.cos_theta, g.sin_theta, lm, l_max=l_max)
+    truth = np.asarray(d_re)[0, :, 0]
+    assert np.all(np.isfinite(got))
+    assert np.max(np.abs(got - truth)) < 5e-4 * np.abs(truth).max()
+
+
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+def test_anal_fold_vs_unfold(variant):
+    l_max, K = 32, 1
+    g, lm, m_vals, a_re, a_im, a32, pmm, pms, x32 = _setup(l_max, K)
+    rng = np.random.default_rng(3)
+    R = g.n_rings
+    dw_full = rng.normal(size=(len(m_vals), R, 2 * K)).astype(np.float32)
+    got_u = np.asarray(kops.anal(jnp.asarray(dw_full)[:, None], m_vals, x32,
+                                 pmm, pms, l_max=l_max, variant=variant))
+    # folded: combine mirror pairs
+    nh = (R + 1) // 2
+    n_part = dw_full[:, :nh].copy()
+    s_part = np.zeros_like(n_part)
+    s_part[:, : R - nh] = dw_full[:, nh:][:, ::-1]
+    dw_f = jnp.asarray(np.stack([n_part + s_part, n_part - s_part], axis=1))
+    pmm_n, pms_n = kref.prepare_seeds(m_vals, g.sin_theta[:nh], lm)
+    got_f = np.asarray(kops.anal(dw_f, m_vals,
+                                 jnp.asarray(g.cos_theta[:nh], jnp.float32),
+                                 pmm_n, pms_n, l_max=l_max, fold=True,
+                                 variant=variant))
+    assert np.max(np.abs(got_u - got_f)) < 2e-4 * max(1.0, np.abs(got_u).max())

@@ -1,0 +1,142 @@
+"""Per-architecture smoke tests (reduced configs, CPU, 1 device):
+one forward/train step + prefill/decode, asserting shapes and finiteness;
+plus spec-tree/param-tree structural agreement (the sharding contract)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.configs import registry
+from repro.configs.base import SHAPES, reduced
+from repro.models.model import input_specs, make_bundle
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = sorted(registry.ARCHS)
+
+
+def _batch(cfg, B=2, S=32):
+    if cfg.is_encoder_decoder:
+        return {"frames": jax.random.normal(KEY, (B, S, cfg.d_model),
+                                            jnp.float32),
+                "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+    if cfg.frontend == "vision_stub":
+        return {"tokens": jax.random.randint(KEY, (B, S - 8), 0, cfg.vocab),
+                "patch_embeds": jax.random.normal(KEY, (B, 8, cfg.d_model),
+                                                  jnp.float32)}
+    return {"tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab)}
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_train_step_smoke(name):
+    cfg = reduced(registry.ARCHS[name])
+    b = make_bundle(cfg, mesh=None)
+    params = b.init(KEY)
+    loss = jax.jit(b.loss_fn)(params, _batch(cfg))
+    assert np.isfinite(float(loss))
+    assert loss.shape == ()
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_prefill_decode_smoke(name):
+    cfg = reduced(registry.ARCHS[name])
+    b = make_bundle(cfg, mesh=None)
+    params = b.init(KEY)
+    B = 2
+    caches = b.init_caches(B, 64, enc_len=16) if cfg.is_encoder_decoder \
+        else b.init_caches(B, 64)
+    if cfg.is_encoder_decoder:
+        batch = {"frames": jax.random.normal(KEY, (B, 16, cfg.d_model),
+                                             jnp.float32),
+                 "tokens": jax.random.randint(KEY, (B, 8), 0, cfg.vocab)}
+        plen = 8
+    else:
+        batch = {"tokens": jax.random.randint(KEY, (B, 16), 0, cfg.vocab)}
+        plen = 16
+    logits, caches = jax.jit(b.prefill_fn)(params, batch, caches)
+    assert logits.shape == (B, cfg.vocab)
+    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+    logits2, _ = jax.jit(b.decode_fn)(params, tok, jnp.int32(plen), caches)
+    assert np.all(np.isfinite(np.asarray(logits2)))
+
+
+@pytest.mark.parametrize("name", ALL_ARCHS)
+def test_param_specs_match_param_tree(name):
+    """The sharding contract: specs tree must mirror the params tree."""
+    cfg = reduced(registry.ARCHS[name])
+    b = make_bundle(cfg, mesh=None)
+    shapes = jax.eval_shape(b.init, KEY)
+    specs = b.param_specs()
+    # identical treedefs (specs leaves are PartitionSpec)
+    from jax.sharding import PartitionSpec as P
+    s1 = jax.tree.structure(shapes)
+    s2 = jax.tree.structure(specs, is_leaf=lambda v: isinstance(v, P))
+    assert s1 == s2, f"{name}: spec tree != param tree"
+    # every spec fits its array rank
+    def ok(a, s):
+        assert len(s) <= len(a.shape), (a.shape, s)
+        return None
+    jax.tree.map(ok, shapes, specs, is_leaf=lambda v: isinstance(v, P))
+
+
+@pytest.mark.parametrize("name", ["qwen3-8b", "deepseek-v3-671b",
+                                  "xlstm-125m", "recurrentgemma-9b"])
+def test_cache_specs_match_cache_tree(name):
+    from jax.sharding import PartitionSpec as P
+    cfg = reduced(registry.ARCHS[name])
+    b = make_bundle(cfg, mesh=None)
+    caches = jax.eval_shape(lambda: b.init_caches(2, 32))
+    specs = b.cache_specs()
+    s1 = jax.tree.structure(caches)
+    s2 = jax.tree.structure(specs, is_leaf=lambda v: isinstance(v, P))
+    assert s1 == s2
+
+
+def test_prefill_matches_stepwise_decode():
+    """Prefill-then-decode == token-by-token decode (cache correctness)."""
+    cfg = reduced(registry.ARCHS["qwen3-8b"])
+    b = make_bundle(cfg, mesh=None)
+    params = b.init(KEY)
+    B, S = 1, 8
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab)
+    c1 = b.init_caches(B, 32)
+    logits_p, c1 = jax.jit(b.prefill_fn)(params, {"tokens": toks}, c1)
+    c2 = b.init_caches(B, 32)
+    dec = jax.jit(b.decode_fn)
+    for t in range(S):
+        logits_d, c2 = dec(params, toks[:, t:t + 1], jnp.int32(t), c2)
+    np.testing.assert_allclose(np.asarray(logits_p), np.asarray(logits_d),
+                               rtol=0, atol=2e-4)
+
+
+def test_sliding_window_cache_bounded():
+    cfg = reduced(registry.ARCHS["h2o-danube-3-4b"])
+    assert cfg.sliding_window == 64
+    b = make_bundle(cfg, mesh=None)
+    caches = jax.eval_shape(lambda: b.init_caches(2, 4096))
+    k = caches[0][0]["k"]
+    assert k.shape[2] == 64                 # ring buffer, not 4096
+
+
+def test_mla_cache_is_compressed():
+    cfg = reduced(registry.ARCHS["deepseek-v3-671b"])
+    b = make_bundle(cfg, mesh=None)
+    caches = jax.eval_shape(lambda: b.init_caches(2, 128))
+    leaf = caches[-1][0]
+    assert "ckv" in leaf and leaf["ckv"].shape[-1] == cfg.kv_lora_rank
+    dense_bytes = 2 * cfg.n_heads * cfg.hd
+    mla_bytes = cfg.kv_lora_rank + cfg.qk_rope_dim
+    assert mla_bytes < dense_bytes           # the MLA serving win
+
+
+def test_ssm_state_constant_in_seq_len():
+    cfg = reduced(registry.ARCHS["xlstm-125m"])
+    b = make_bundle(cfg, mesh=None)
+    c1 = jax.eval_shape(lambda: b.init_caches(2, 128))
+    c2 = jax.eval_shape(lambda: b.init_caches(2, 1 << 19))
+    n1 = sum(np.prod(l.shape) for l in jax.tree.leaves(c1))
+    n2 = sum(np.prod(l.shape) for l in jax.tree.leaves(c2))
+    assert n1 == n2                          # O(1) state => long_500k works

@@ -1,0 +1,74 @@
+import numpy as np
+
+import repro  # noqa: F401
+from repro.core import comm_model as CM
+from repro.roofline import analysis as RA
+
+
+HLO = """
+ENTRY main {
+  %p = f32[1024,256]{1,0} parameter(0)
+  %ar = f32[1024,256]{1,0} all-reduce(%p), replica_groups={{0,1,2,3}}, to_apply=%add
+  %ag = bf16[4096,128]{1,0} all-gather(%x), dimensions={0}, replica_groups=[2,256]<=[512]
+  %a2a = f32[512,64]{1,0} all-to-all(%y), dimensions={0}
+  %cp = f32[16,16]{1,0} collective-permute(%z), source_target_pairs={{0,1}}
+  %ars = (f32[8,8]{1,0}, f32[8,8]{1,0}) all-reduce-start(%w), replica_groups={{0,1}}
+  %ard = f32[8,8]{1,0} all-reduce-done(%ars)
+}
+"""
+
+
+def test_collective_parser():
+    ops = RA.parse_hlo_collectives(HLO, world=512)
+    kinds = [k for k, _, _ in ops]
+    assert kinds.count("all-reduce") == 2      # sync + async start
+    assert "all-gather" in kinds and "all-to-all" in kinds
+    assert "collective-permute" in kinds
+    by = {((k, g)): s for k, s, g in ops}
+    assert by[("all-reduce", 4)] == 1024 * 256 * 4
+    assert by[("all-gather", 256)] == 4096 * 128 * 2
+    assert by[("all-reduce", 2)] == 8 * 8 * 4   # async tuple halved
+
+
+def test_collective_wire_model():
+    out = RA.collective_bytes(HLO, world=512)
+    # ring all-reduce: 2 * S * (g-1)/g
+    assert abs(out["all-reduce"] - (2 * 1024 * 256 * 4 * 3 / 4
+                                    + 2 * 8 * 8 * 4 * 1 / 2)) < 1
+    assert out["total"] > 0
+
+
+def test_roofline_terms_and_bottleneck():
+    r = RA.Roofline(flops_per_device=197e12, bytes_per_device=819e9,
+                    wire_bytes_per_device=0.0, n_devices=4,
+                    model_flops=4 * 197e12 / 2)
+    assert abs(r.t_compute - 1.0) < 1e-9
+    assert abs(r.t_memory - 1.0) < 1e-9
+    assert r.useful_flops_fraction == 0.5
+    assert r.roofline_fraction == 0.5
+    r2 = RA.Roofline(1e12, 1e9, 1e12, 4)
+    assert r2.bottleneck == "collective"
+
+
+def test_comm_model_matches_paper_structure():
+    p = CM.MPICH_CLUSTER
+    # Fig. 4 middle/left behaviours: compute ~ 1/nproc, comm ~ flat (large
+    # msgs), so a crossover exists and grows with problem size.
+    t64 = CM.sht_times(4096, 64, p)
+    t512 = CM.sht_times(4096, 512, p)
+    assert t512["compute"] < t64["compute"] / 4
+    assert t512["comm"] >= 0.8 * t64["comm"]
+    c1 = CM.crossover_nproc(1024, p)
+    c2 = CM.crossover_nproc(8192, p)
+    assert c2 >= c1
+    # message-size switch: tiny problems land in the Bruck branch
+    small = CM.message_size(63, 32, 64)
+    assert small < p.bruck_cutoff
+
+
+def test_comm_model_fold_reduces_compute():
+    p = CM.TPU_V5E_ICI
+    a = CM.sht_times(2048, 256, p, fold=False)
+    b = CM.sht_times(2048, 256, p, fold=True)
+    assert b["compute"] < a["compute"]
+    assert b["comm"] == a["comm"]
