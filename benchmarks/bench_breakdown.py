@@ -16,6 +16,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import time
 import numpy as np, jax, jax.numpy as jnp
 import repro
+from repro import compat
 from repro.core import grids, sht, plan as planlib, dist_sht
 
 lmax, K = 256, 2
@@ -44,18 +45,18 @@ import functools
 from jax.sharding import PartitionSpec as P
 spec = P(("procs",))
 
-stage1 = jax.jit(jax.shard_map(lambda ar, ai, m: jnp.concatenate(
+stage1 = jax.jit(compat.shard_map(lambda ar, ai, m: jnp.concatenate(
     d._stage1_synth(ar, ai, m), -1), mesh=mesh,
-    in_specs=(spec, spec, spec), out_specs=spec, check_vma=False))
+    in_specs=(spec, spec, spec), out_specs=spec))
 t_s1, delta = timeit(stage1, a_re, a_im, c["m_flat"])
 
-exch = jax.jit(jax.shard_map(lambda x: d._exchange(x, to_rings=True),
-    mesh=mesh, in_specs=(spec,), out_specs=spec, check_vma=False))
+exch = jax.jit(compat.shard_map(lambda x: d._exchange(x, to_rings=True),
+    mesh=mesh, in_specs=(spec,), out_specs=spec))
 t_comm, exch_out = timeit(exch, delta)
 
-fft = jax.jit(jax.shard_map(lambda x, ph, vl: d._synth_fft(
+fft = jax.jit(compat.shard_map(lambda x, ph, vl: d._synth_fft(
     x[..., :K], x[..., K:], ph, vl), mesh=mesh,
-    in_specs=(spec, spec, spec), out_specs=spec, check_vma=False))
+    in_specs=(spec, spec, spec), out_specs=spec))
 t_fft, _ = timeit(fft, exch_out, c["phi0"], c["valid"])
 
 print(f"CSV breakdown/alm2map/full,{t_full*1e6:.1f},8dev-lmax{lmax}")

@@ -1,62 +1,65 @@
-"""Paper Fig. 15: relative speed-up across problem sizes.
+"""Paper Fig. 15: relative speed-up across problem sizes -- via make_plan.
 
 The paper reports MPI/CUDA vs MPI/OpenMP speed-up per process count.  Our
-measurable analogue on this container: the f32 engine vs the f64 engine
-(the precision/layout transformation that enables the TPU kernels), the
-fold optimisation, and the batched-K amortisation -- each as a ratio at
-several sizes.  Columns: name, us_per_call (optimised path), derived =
-speedup vs baseline.
+measurable analogue on this container: each plan backend vs the float64
+jnp baseline for the full transform (both directions), plus the batched-K
+amortisation (the MXU story at the algorithmic level).  Every engine is
+reached through the unified Plan API -- no hand-wired kernels.
+
+Columns: name, us_per_call (optimised path), derived = speedup vs baseline.
 """
 
 import jax
-import numpy as np
+import jax.numpy as jnp
 
-import repro  # noqa: F401
-from repro.core import grids, legendre, sht
+import repro
+from repro.core import sht
 from benchmarks.common import emit, time_call
 
 KEY = jax.random.PRNGKey(3)
 
 
+def _plan_times(plan, alm, maps):
+    ts = time_call(plan.alm2map, alm, iters=2)
+    ta = time_call(plan.map2alm, maps, iters=2)
+    return ts, ta
+
+
 def main():
-    for l_max in (128, 256):
-        g = grids.make_grid("gl", l_max=l_max)
-        lm = legendre.log_mu(l_max)
-        m_vals = np.arange(l_max + 1)
-        alm = sht.random_alm(KEY, l_max, l_max)
-        a_re = np.real(np.asarray(alm))
-        a_im = np.imag(np.asarray(alm))
+    for l_max in (64, 128):
+        alm64 = sht.random_alm(KEY, l_max, l_max)
+        base = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64",
+                               mode="jnp")
+        maps64 = base.alm2map(alm64)
+        tb_s, tb_a = _plan_times(base, alm64, maps64)
 
-        base = time_call(lambda: legendre.delta_from_alm(
-            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm,
-            l_max=l_max, dtype=np.float64), iters=2)
-        f32 = time_call(lambda: legendre.delta_from_alm(
-            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm,
-            l_max=l_max, dtype=np.float32), iters=2)
-        emit(f"speedup/f32-vs-f64/lmax{l_max}", f32 * 1e6,
-             f"x{base / f32:.2f}")
+        alm32 = alm64.astype(jnp.complex64)
+        maps32 = jnp.asarray(maps64, jnp.float32)
+        for mode in ("jnp", "pallas_vpu", "pallas_mxu"):
+            p = repro.make_plan("gl", l_max=l_max, K=1, dtype="float32",
+                                mode=mode)
+            ts, ta = _plan_times(p, alm32, maps32)
+            emit(f"speedup/{mode}-f32-synth/lmax{l_max}", ts * 1e6,
+                 f"x{tb_s / ts:.2f} vs f64 jnp")
+            emit(f"speedup/{mode}-f32-anal/lmax{l_max}", ta * 1e6,
+                 f"x{tb_a / ta:.2f} vs f64 jnp")
 
-        nh = (g.n_rings + 1) // 2
-        fold = time_call(lambda: legendre.delta_from_alm_folded(
-            a_re, a_im, m_vals, g.cos_theta[:nh], g.sin_theta[:nh], lm,
-            l_max=l_max), iters=2)
-        emit(f"speedup/fold-vs-unfold/lmax{l_max}", fold * 1e6,
-             f"x{base / fold:.2f}")
+        # fold optimisation through the plan layer (synthesis only)
+        pf = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64",
+                             mode="jnp", fold=True)
+        tf_s = time_call(pf.alm2map, alm64, iters=2)
+        emit(f"speedup/fold-vs-unfold/lmax{l_max}", tf_s * 1e6,
+             f"x{tb_s / tf_s:.2f}")
 
-    # batched-K amortisation (the MXU story at the algorithmic level):
-    # per-map time shrinks as K grows because P generation is shared.
+    # batched-K amortisation: per-map time shrinks as K grows because
+    # P_lm generation is shared across the Monte-Carlo batch.
     l_max = 128
-    g = grids.make_grid("gl", l_max=l_max)
-    lm = legendre.log_mu(l_max)
-    m_vals = np.arange(l_max + 1)
     t1 = None
     for K in (1, 4, 16):
         alm = sht.random_alm(KEY, l_max, l_max, K=K)
-        a_re = np.real(np.asarray(alm))
-        a_im = np.imag(np.asarray(alm))
-        t = time_call(lambda: legendre.delta_from_alm(
-            a_re, a_im, m_vals, g.cos_theta, g.sin_theta, lm, l_max=l_max),
-            iters=2)
+        p = repro.make_plan("gl", l_max=l_max, K=K, dtype="float64",
+                            mode="jnp")
+        t = time_call(p.alm2map, alm, iters=2)
         if K == 1:
             t1 = t
         emit(f"speedup/batched-K{K}/lmax{l_max}", t / K * 1e6,

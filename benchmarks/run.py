@@ -11,10 +11,10 @@ import traceback
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_recurrence,
                             bench_scaling_model, bench_fft, bench_speedup,
-                            bench_breakdown)
+                            bench_breakdown, bench_dispatch)
     print("name,us_per_call,derived")
     for mod in (bench_accuracy, bench_recurrence, bench_scaling_model,
-                bench_fft, bench_speedup, bench_breakdown):
+                bench_fft, bench_speedup, bench_breakdown, bench_dispatch):
         try:
             mod.main()
         except Exception as e:  # keep the harness going

@@ -17,8 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-import repro  # noqa: F401
-from repro.core import dist_sht, grids, plan as planlib, sht, spectra
+import repro
+from repro.core import spectra
 
 
 def main():
@@ -31,23 +31,16 @@ def main():
     key = jax.random.PRNGKey(1)
     cl = spectra.cmb_like_cl(a.lmax)
     alm = spectra.alm_from_cl(key, cl, K=a.K)
-    grid = grids.make_grid("gl", l_max=a.lmax)
 
-    n_dev = jax.device_count()
-    if n_dev > 1:
-        mesh = jax.make_mesh((n_dev,), ("procs",))
-        plan = planlib.SHTPlan(grid, a.lmax, a.lmax, n_dev)
-        d = dist_sht.DistSHT(plan, mesh, ("procs",))
-        print(f"distributed transforms: {plan.describe()}")
-        maps = d.alm2map(jnp.asarray(plan.pack_alm(np.asarray(alm))))
-        noise = a.noise * jax.random.normal(key, maps.shape)
-        alm_back = plan.unpack_alm(np.asarray(d.map2alm(maps + noise)))
-    else:
-        t = sht.SHT(grid, l_max=a.lmax, m_max=a.lmax)
-        print(f"serial transforms on {grid.name} ({grid.n_rings} rings)")
-        maps = t.alm2map(alm)
-        noise = a.noise * jax.random.normal(key, maps.shape)
-        alm_back = t.map2alm(maps + noise)
+    # The plan dispatches to the distributed two-stage transform when
+    # multiple devices are visible and it wins the autotune; packing and
+    # unpacking the distribution layout is internal.
+    plan = repro.make_plan("gl", l_max=a.lmax, K=a.K, mode="auto")
+    print(f"transforms on {plan.grid.name} ({plan.grid.n_rings} rings), "
+          f"backends={plan.backends}")
+    maps = plan.alm2map(alm)
+    noise = a.noise * jax.random.normal(key, maps.shape)
+    alm_back = plan.map2alm(maps + noise)
 
     cl_est = np.asarray(spectra.cl_from_alm(jnp.asarray(alm_back))).mean(-1)
     l = np.arange(2, a.lmax + 1)

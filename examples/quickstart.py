@@ -1,18 +1,19 @@
-"""Quickstart: the paper's validation experiment in 30 lines.
+"""Quickstart: the paper's validation experiment through the Plan API.
 
-Synthesises a map from random a_lm (inverse SHT), analyses it back (direct
+Builds a transform plan (autotuned kernel dispatch + cached precompute),
+synthesises a map from random a_lm (inverse SHT), analyses it back (direct
 SHT), and reports the round-trip error D_err (paper eq. 19) -- on the
 exact Gauss-Legendre grid this sits at machine precision.
 
-    PYTHONPATH=src python examples/quickstart.py [--lmax 128]
+    PYTHONPATH=src python examples/quickstart.py [--lmax 128] [--dtype float32]
 """
 
 import argparse
 
 import jax
 
-import repro  # noqa: F401
-from repro.core import grids, sht, spectra
+import repro
+from repro.core import sht, spectra
 
 
 def main():
@@ -20,25 +21,36 @@ def main():
     ap.add_argument("--lmax", type=int, default=128)
     ap.add_argument("--grid", default="gl", choices=["gl", "healpix_ring"])
     ap.add_argument("--K", type=int, default=2, help="simultaneous maps")
+    ap.add_argument("--dtype", default="float64",
+                    choices=["float64", "float32"],
+                    help="float32 enables the Pallas kernel backends")
+    ap.add_argument("--mode", default="auto",
+                    help="auto | model | jnp | pallas_vpu | pallas_mxu | dist")
     a = ap.parse_args()
 
-    if a.grid == "gl":
-        grid = grids.make_grid("gl", l_max=a.lmax)
-    else:
-        grid = grids.make_grid("healpix_ring", nside=max(a.lmax // 2, 1))
-    t = sht.SHT(grid, l_max=a.lmax, m_max=a.lmax)
+    # One entry point: the plan owns precompute, layout and kernel choice.
+    # A second make_plan with this signature returns the same (cached) plan.
+    plan = repro.make_plan(a.grid, l_max=a.lmax,
+                           nside=max(a.lmax // 2, 1),
+                           K=a.K, dtype=a.dtype, mode=a.mode)
 
-    key = jax.random.PRNGKey(0)
-    alm = sht.random_alm(key, a.lmax, a.lmax, K=a.K)   # uniform (-1,1), paper §5
-    maps = t.alm2map(alm)          # inverse SHT (synthesis)
-    alm_back = t.map2alm(maps)     # direct SHT (analysis)
+    alm = sht.random_alm(jax.random.PRNGKey(0), plan.l_max, plan.m_max,
+                         K=a.K)                  # uniform (-1,1), paper §5
+    if a.dtype == "float32":
+        alm = alm.astype("complex64")
+    maps = plan.alm2map(alm)       # inverse SHT (synthesis)
+    alm_back = plan.map2alm(maps)  # direct SHT (analysis)
 
     err = spectra.d_err(alm, alm_back)
-    print(f"grid={grid.name} rings={grid.n_rings} n_pix={grid.n_pix} "
-          f"l_max={a.lmax} K={a.K}")
+    g = plan.grid
+    print(f"grid={g.name} rings={g.n_rings} n_pix={g.n_pix} "
+          f"l_max={plan.l_max} K={a.K} dtype={a.dtype}")
     print(f"round-trip D_err = {err:.3e}"
-          + ("  (exact quadrature: machine precision)" if a.grid == "gl"
-             else "  (approximate quadrature, paper Fig. 8 regime)"))
+          + ("  (exact quadrature: machine precision)"
+             if a.grid == "gl" and a.dtype == "float64"
+             else "  (f32/approximate-quadrature regime)"))
+    print()
+    print(plan.report())
 
 
 if __name__ == "__main__":

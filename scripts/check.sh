@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# CI / local gate: install deps (when the network allows), run tier-1, then
+# a CPU smoke benchmark of the plan-dispatch layer.  Exists so a missing
+# test dependency (the hypothesis-at-collection breakage) or a broken
+# dispatch path can't land silently.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== deps =="
+if python -m pip install -q -e ".[test]" 2>/dev/null; then
+    echo "installed repro-sht[test]"
+else
+    echo "pip unavailable/offline: using baked-in deps (tests degrade gracefully)"
+fi
+
+echo "== tier-1 =="
+PYTHONPATH=src python -m pytest -x -q
+
+echo "== smoke benchmark (plan dispatch, CPU) =="
+PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.bench_dispatch
+
+echo "check.sh: OK"

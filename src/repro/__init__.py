@@ -14,4 +14,17 @@ import jax
 
 jax.config.update("jax_enable_x64", True)
 
-__version__ = "1.0.0"
+__version__ = "1.1.0"
+
+
+def __getattr__(name):
+    """Lazy top-level API: ``repro.make_plan`` / ``repro.Plan``.
+
+    Imported on first use so ``import repro`` stays light (the transform
+    layer pulls in the SHT engine; the Pallas kernels are only imported if
+    a plan actually selects them).
+    """
+    if name in ("make_plan", "Plan", "available_backends"):
+        from repro.core import transform
+        return getattr(transform, name)
+    raise AttributeError(f"module 'repro' has no attribute {name!r}")

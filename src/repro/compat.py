@@ -1,0 +1,45 @@
+"""Version-compatibility shims for the jax API surface this repo uses.
+
+The repo targets the current jax API; older jaxlibs in baked containers
+spell a few things differently.  Centralising the fallbacks here keeps
+every call site on one idiom.
+"""
+
+from __future__ import annotations
+
+import jax
+
+__all__ = ["shard_map", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis, inside shard_map/pmap bodies.
+
+    ``jax.lax.axis_size`` on recent jax; on older releases the same static
+    metadata lives on the axis environment.
+    """
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(axis_name)
+    from jax._src.core import get_axis_env
+    return get_axis_env().axis_size(axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map(..., check_vma=False)`` across jax versions.
+
+    Newer jax exposes ``jax.shard_map`` with a ``check_vma`` flag; older
+    releases have ``jax.experimental.shard_map.shard_map`` with the same
+    flag named ``check_rep``.  We always disable the replication/VMA
+    tracker: the Legendre loop carries are seeded from unvarying constants
+    and become shard-varying inside the loop (see dist_sht).
+    """
+    if hasattr(jax, "shard_map"):
+        try:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False)
+        except TypeError:
+            return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_rep=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, check_rep=False)

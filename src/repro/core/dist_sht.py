@@ -34,6 +34,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.core import legendre
 from repro.core.plan import SHTPlan
 
@@ -246,18 +247,18 @@ class DistSHT:
             return self._stage1_anal(dw_re, dw_im, m_loc)
 
         spec = self._spec_sharded()
-        # check_vma=False: the Legendre loop carries are seeded from
-        # constants (unvarying) and become shard-varying inside the loop;
-        # we opt out of the replication tracker rather than pcast-ing deep
-        # inside the shared recurrence code.
-        synth = jax.jit(jax.shard_map(
+        # The compat shim disables the replication/VMA tracker: the
+        # Legendre loop carries are seeded from constants (unvarying) and
+        # become shard-varying inside the loop; we opt out rather than
+        # pcast-ing deep inside the shared recurrence code.
+        synth = jax.jit(compat.shard_map(
             synth_shard, mesh=self.mesh,
             in_specs=(spec, spec, spec, spec, spec),
-            out_specs=spec, check_vma=False))
-        anal = jax.jit(jax.shard_map(
+            out_specs=spec))
+        anal = jax.jit(compat.shard_map(
             anal_shard, mesh=self.mesh,
             in_specs=(spec, spec, spec, spec),
-            out_specs=(spec, spec), check_vma=False))
+            out_specs=(spec, spec)))
         consts = dict(phi0=phi0_all, w=w_all, valid=valid_all, m_flat=m_flat)
         return synth, anal, consts
 

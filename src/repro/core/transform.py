@@ -1,0 +1,599 @@
+"""Unified transform plans: one entry point for every SHT execution path.
+
+This is the dispatch seam the paper's "dichotomy" demands (§4-5): the
+winning kernel differs between problem sizes *and between the direct and
+inverse transforms*, so ``make_plan`` chooses an execution backend per
+``(grid, l_max, K, dtype)`` signature and per direction, instead of callers
+hand-wiring ``SHT`` / ``legendre_pallas`` / ``DistSHT`` themselves::
+
+    import repro
+    plan = repro.make_plan("gl", l_max=256, K=8, dtype="float32")
+    maps = plan.alm2map(alm)       # inverse  (synthesis)
+    alm2 = plan.map2alm(maps)      # direct   (analysis)
+    print(plan.report())           # chosen kernels, predicted vs measured
+
+Backends
+--------
+``jnp``
+    The pure-jnp engine (`repro.core.sht.SHT`): float64 oracle, runs on any
+    grid (including ragged HEALPix).  The only candidate when
+    ``dtype="float64"`` -- the Pallas kernels compute in float32.
+``pallas_vpu`` / ``pallas_mxu``
+    The Pallas Legendre kernels (`repro.kernels`) for the recurrence stage,
+    with the engine's batched FFT stage.  Uniform grids only.  ``vpu`` is
+    the broadcast-FMA variant (small K); ``mxu`` contracts P panels on the
+    matrix unit (large K, the Monte-Carlo batch workload).
+``dist``
+    The two-stage distributed transform (`repro.core.dist_sht.DistSHT`,
+    paper Algorithm 3) across every visible device.  Dense alm/maps in,
+    dense out -- plan packing/unpacking is handled internally.
+
+Dispatch modes
+--------------
+``mode="model"``  rank backends with the analytic roofline cost model
+                  (`repro.roofline.predict_sht_time`) -- free, deterministic.
+``mode="auto"``   measure each candidate once per direction (one warm-up +
+                  one timed call) and pick the fastest; the decision is
+                  cached by plan signature (memory + optional disk), so the
+                  autotune pass runs once per signature, ever.
+``mode=<backend>`` force one backend for both directions.
+
+Precompute caching
+------------------
+Grid geometry (Gauss-Legendre Newton iteration), ``pmm``/``pms`` recurrence
+seed tables and autotune decisions are cached by plan signature through
+`repro.core.cache` -- in memory always, and on disk under
+``$REPRO_CACHE_DIR`` when ``cache="disk"``.  A second ``make_plan`` with an
+identical signature returns the *same* plan object without recomputing
+anything (asserted by tests/test_transform_plan.py).
+"""
+
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as plancache
+from repro.core import grids as gridlib
+from repro.core import legendre
+from repro.core.grids import RingGrid
+from repro.core.sht import SHT, alm_mask, random_alm
+from repro.roofline import analysis as roofline
+
+__all__ = ["Plan", "make_plan", "available_backends", "clear_plan_cache"]
+
+BACKENDS = ("jnp", "pallas_vpu", "pallas_mxu", "dist")
+
+#: make_plan memoisation: signature key -> Plan.  This is the "second
+#: make_plan is free" tier; the payload caches underneath make a cold
+#: rebuild (new process, cache="disk") cheap too.
+_PLANS: dict[str, "Plan"] = {}
+
+
+def clear_plan_cache() -> None:
+    """Drop memoised plans AND the in-memory precompute tier (test hook)."""
+    _PLANS.clear()
+    plancache.clear_memory()
+
+
+def _pallas_ops():
+    """Import the kernel layer lazily (keeps `import repro` light and lets
+    non-Pallas builds still use the jnp/dist backends)."""
+    from repro.kernels import ops as kops
+    return kops
+
+
+def available_backends(grid: RingGrid, dtype: str,
+                       n_devices: Optional[int] = None) -> list[str]:
+    """Backends eligible for this signature, best-effort ordered.
+
+    float64 restricts to the jnp oracle (the kernels compute in float32);
+    Pallas needs a uniform grid (the batched FFT stage); dist needs >= 2
+    devices.
+    """
+    out = ["jnp"]
+    if dtype == "float32" and grid.uniform:
+        try:
+            _pallas_ops()
+            out += ["pallas_vpu", "pallas_mxu"]
+        except Exception:  # pallas not importable on this build
+            pass
+    n_dev = jax.device_count() if n_devices is None else n_devices
+    if n_dev >= 2 and grid.uniform:
+        out.append("dist")
+    return out
+
+
+def _complex_dtype(dtype: str):
+    return jnp.complex128 if jnp.dtype(dtype) == jnp.float64 else jnp.complex64
+
+
+class Plan:
+    """An executable SHT plan: precompute + layout + kernel choice.
+
+    Construct through :func:`make_plan` (which memoises by signature); the
+    constructor itself does no autotuning and no device work.
+
+    Attributes
+    ----------
+    grid, l_max, m_max, K, dtype, fold : the plan signature.
+    mode : dispatch mode this plan was built with.
+    backends : ``{"synth": name, "anal": name}`` -- the chosen execution
+        backend per direction (the paper's direct/inverse dichotomy made
+        into a data structure).
+    """
+
+    def __init__(self, grid: RingGrid, l_max: int, m_max: int, K: int,
+                 dtype: str, *, mode: str, fold: bool, cache_kind: str,
+                 cache_dir: Optional[str], n_shards: Optional[int],
+                 signature_key: str):
+        self.grid = grid
+        self.l_max = int(l_max)
+        self.m_max = int(m_max)
+        self.K = int(K)
+        self.dtype = str(dtype)
+        self.mode = mode
+        self.fold = bool(fold)
+        self._cache_kind = cache_kind
+        self._cache_dir = cache_dir
+        self._n_shards = n_shards
+        self._signature_key = signature_key
+        self._sht = SHT(grid, l_max=self.l_max, m_max=self.m_max,
+                        dtype=self.dtype, fold=self.fold)
+        self._m_vals = np.arange(self.m_max + 1)
+        self._seeds_cache: Optional[tuple] = None
+        self._dist = None
+        self._compiled: dict = {}
+        self.backends: dict = {}
+        self.candidates: list[str] = []
+        self.predicted_s: dict = {}
+        self.measured_s: dict = {}
+        self.cache_events: dict = {}
+
+    # -- precompute (cached by signature) -----------------------------------
+
+    def _seeds(self):
+        """(pmm, pms, x32) float32 seed tables for the Pallas kernels.
+
+        Fold plans seed northern rings only (half the table).  Built once
+        per plan, persisted by signature when ``cache="disk"``.
+        """
+        if self._seeds_cache is not None:
+            return self._seeds_cache
+        g = self.grid
+        nh = (g.n_rings + 1) // 2
+        sin = g.sin_theta[:nh] if self.fold else g.sin_theta
+        x = g.cos_theta[:nh] if self.fold else g.cos_theta
+
+        def build():
+            from repro.kernels import ref as kref
+            lm = legendre.log_mu(self.m_max)
+            pmm, pms = kref.prepare_seeds(self._m_vals, sin, lm)
+            return {"pmm": np.asarray(pmm), "pms": np.asarray(pms)}
+
+        key = plancache.signature_key(
+            "seeds", sig=self._signature_key, fold=self.fold)
+        payload = plancache.get_or_build(
+            key, build, cache=self._cache_kind, directory=self._cache_dir)
+        self.cache_events.setdefault("seeds", key)
+        self._seeds_cache = (jnp.asarray(payload["pmm"]),
+                             jnp.asarray(payload["pms"]),
+                             jnp.asarray(x, jnp.float32))
+        return self._seeds_cache
+
+    def _dist_engine(self):
+        if self._dist is None:
+            from repro.core.dist_sht import DistSHT
+            from repro.core.plan import SHTPlan
+            n = self._n_shards or jax.device_count()
+            mesh = jax.make_mesh((n,), ("sht",))
+            splan = SHTPlan(self.grid, self.l_max, self.m_max, n)
+            stage1 = "pallas" if self.dtype == "float32" else "jnp"
+            self._dist = DistSHT(splan, mesh, ("sht",), dtype=self.dtype,
+                                 fold=False, stage1=stage1)
+        return self._dist
+
+    # -- per-backend execution ------------------------------------------------
+
+    def _synth_fn(self, backend: str):
+        """Synthesis callable alm -> maps for ``backend`` (jitted when the
+        grid is uniform; compiled executables are cached on the plan)."""
+        key = ("synth", backend)
+        if key in self._compiled:
+            return self._compiled[key]
+        if backend == "jnp":
+            fn = self._sht.alm2map
+            if self.grid.uniform:
+                fn = jax.jit(fn)
+        elif backend in ("pallas_vpu", "pallas_mxu"):
+            fn = self._make_pallas_synth(variant=backend.split("_")[1])
+            fn = jax.jit(fn)
+        elif backend == "dist":
+            d = self._dist_engine()
+            splan = d.plan
+
+            def fn(alm):
+                maps_plan = d.alm2map(splan.pack_alm(alm))
+                return splan.scatter_map(maps_plan)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self._compiled[key] = fn
+        return fn
+
+    def _anal_fn(self, backend: str):
+        """Analysis callable maps -> alm for ``backend``."""
+        key = ("anal", backend)
+        if key in self._compiled:
+            return self._compiled[key]
+        if backend == "jnp":
+            fn = self._sht.map2alm
+            if self.grid.uniform:
+                fn = jax.jit(fn)
+        elif backend in ("pallas_vpu", "pallas_mxu"):
+            fn = self._make_pallas_anal(variant=backend.split("_")[1])
+            fn = jax.jit(fn)
+        elif backend == "dist":
+            d = self._dist_engine()
+            splan = d.plan
+
+            def fn(maps):
+                alm_packed = d.map2alm(splan.gather_map(maps))
+                return splan.unpack_alm(alm_packed)
+        else:
+            raise ValueError(f"unknown backend {backend!r}")
+        self._compiled[key] = fn
+        return fn
+
+    def _make_pallas_synth(self, variant: str):
+        kops = _pallas_ops()
+        K, nh = self.K, (self.grid.n_rings + 1) // 2
+        ns = nh - 1 if self.grid.n_rings % 2 == 1 else nh
+        cdt = _complex_dtype(self.dtype)
+        pmm, pms, x32 = self._seeds()      # eager: built once, closed over
+
+        def fn(alm):
+            a32 = jnp.concatenate(
+                [jnp.real(alm), jnp.imag(alm)], axis=-1).astype(jnp.float32)
+            out = kops.synth(a32, self._m_vals, x32, pmm, pms,
+                             l_max=self.l_max, fold=self.fold,
+                             variant=variant)
+            if self.fold:
+                e, o = out[:, 0], out[:, 1]               # (M, nh, 2K)
+                north = e + o
+                south = (e - o)[:, :ns][:, ::-1]
+                flat = jnp.concatenate([north, south], axis=1)
+            else:
+                flat = out[:, 0]                          # (M, R, 2K)
+            delta = (flat[..., :K] + 1j * flat[..., K:]).astype(cdt)
+            return self._sht._synth_fft_uniform(delta).astype(self.dtype)
+
+        return fn
+
+    def _make_pallas_anal(self, variant: str):
+        kops = _pallas_ops()
+        K, R = self.K, self.grid.n_rings
+        nh = (R + 1) // 2
+        cdt = _complex_dtype(self.dtype)
+        pmm, pms, x32 = self._seeds()      # eager: built once, closed over
+
+        def fn(maps):
+            dwc = self._sht._anal_fft_uniform(maps)       # (M, R, K) complex
+            dw = jnp.concatenate(
+                [jnp.real(dwc), jnp.imag(dwc)], axis=-1).astype(jnp.float32)
+            if self.fold:
+                n_part = dw[:, :nh]
+                s_part = jnp.zeros_like(n_part)
+                s_part = s_part.at[:, : R - nh].set(dw[:, nh:][:, ::-1])
+                dwk = jnp.stack([n_part + s_part, n_part - s_part], axis=1)
+            else:
+                dwk = dw[:, None]                         # (M, 1, R, 2K)
+            out = kops.anal(dwk, self._m_vals, x32, pmm, pms,
+                            l_max=self.l_max, fold=self.fold, variant=variant)
+            alm = (out[..., :K] + 1j * out[..., K:]).astype(cdt)
+            mask = jnp.asarray(alm_mask(self.l_max, self.m_max))[..., None]
+            return jnp.where(mask, alm, 0.0)
+
+        return fn
+
+    # -- dispatch -------------------------------------------------------------
+
+    def _predict_all(self, hw=None) -> dict:
+        """Cost-model prediction per candidate per direction (seconds)."""
+        g = self.grid
+        if hw is None:
+            hw = (roofline.HW_HOST if jax.default_backend() == "cpu"
+                  else roofline.HW_V5E)
+        n_dev = self._n_shards or jax.device_count()
+        out = {}
+        for b in self.candidates:
+            out[b] = {
+                d: roofline.predict_sht_time(
+                    b, l_max=self.l_max, m_max=self.m_max,
+                    n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
+                    direction=d, hw=hw,
+                    n_devices=n_dev if b == "dist" else 1)
+                for d in ("synth", "anal")
+            }
+        return out
+
+    def _measure_all(self) -> dict:
+        """One warm-up + one timed call per candidate per direction."""
+        cdt = _complex_dtype(self.dtype)
+        alm = random_alm(jax.random.PRNGKey(0), self.l_max, self.m_max,
+                         K=self.K).astype(cdt)
+        maps = jnp.zeros((self.grid.n_rings, self.grid.max_n_phi, self.K),
+                         jnp.dtype(self.dtype))
+        out: dict = {}
+        for b in self.candidates:
+            out[b] = {}
+            for direction, fn_of, arg in (("synth", self._synth_fn, alm),
+                                          ("anal", self._anal_fn, maps)):
+                try:
+                    fn = fn_of(b)
+                    jax.block_until_ready(fn(arg))          # warm-up/compile
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(arg))
+                    out[b][direction] = time.perf_counter() - t0
+                except Exception as e:  # candidate unusable here: rank last
+                    out[b][direction] = float("inf")
+                    out[b][f"{direction}_error"] = f"{type(e).__name__}: {e}"
+        return out
+
+    def _choose_backends(self) -> None:
+        """Fill ``self.backends`` according to ``self.mode``."""
+        self.predicted_s = self._predict_all()
+        if self.mode in BACKENDS:                   # forced backend
+            self.backends = {"synth": self.mode, "anal": self.mode}
+            return
+        if self.mode == "model":
+            self.backends = {
+                d: min(self.candidates, key=lambda b: self.predicted_s[b][d])
+                for d in ("synth", "anal")}
+            return
+        assert self.mode == "auto", self.mode
+        dkey = plancache.signature_key("decision", sig=self._signature_key)
+        cached = plancache.load_decision(dkey, cache=self._cache_kind,
+                                         directory=self._cache_dir)
+        if cached is not None and all(
+                cached.get(d) in self.candidates for d in ("synth", "anal")):
+            self.backends = {d: cached[d] for d in ("synth", "anal")}
+            self.measured_s = cached.get("measured", {})
+            self.cache_events["decision"] = "hit"
+            return
+        self.measured_s = self._measure_all()
+        self.backends = {
+            d: min(self.candidates, key=lambda b: self.measured_s[b][d])
+            for d in ("synth", "anal")}
+        self.cache_events["decision"] = "autotuned"
+        plancache.save_decision(
+            dkey, {**self.backends, "measured": self.measured_s},
+            cache=self._cache_kind, directory=self._cache_dir)
+
+    # -- public API -----------------------------------------------------------
+
+    def alm2map(self, alm) -> jnp.ndarray:
+        """Inverse SHT (synthesis): alm ``(m_max+1, l_max+1, K)`` complex ->
+        maps ``(n_rings, n_phi, K)`` real, through the chosen backend."""
+        assert alm.shape == (self.m_max + 1, self.l_max + 1, self.K), \
+            (alm.shape, "plan was built for "
+             f"({self.m_max + 1}, {self.l_max + 1}, {self.K})")
+        return self._synth_fn(self.backends["synth"])(jnp.asarray(alm))
+
+    def map2alm(self, maps, iters: int = 0) -> jnp.ndarray:
+        """Direct SHT (analysis): maps -> alm through the chosen backend.
+
+        ``iters > 0`` applies Jacobi residual refinement (one extra
+        synthesis + analysis per pass) -- worthwhile on approximate-
+        quadrature grids (HEALPix family), a no-op improvement on exact
+        Gauss-Legendre grids.
+        """
+        assert maps.shape == (self.grid.n_rings, self.grid.max_n_phi,
+                              self.K), maps.shape
+        maps = jnp.asarray(maps)
+        alm = self._anal_fn(self.backends["anal"])(maps)
+        for _ in range(iters):
+            resid = maps - self.alm2map(alm)
+            alm = alm + self._anal_fn(self.backends["anal"])(resid)
+        return alm
+
+    def memory_footprint(self) -> dict:
+        """Estimated working-set bytes per buffer class."""
+        g = self.grid
+        M, L1, K = self.m_max + 1, self.l_max + 1, self.K
+        csize = 16 if self.dtype == "float64" else 8
+        rsize = 8 if self.dtype == "float64" else 4
+        out = {
+            "alm_bytes": M * L1 * K * csize,
+            "maps_bytes": g.n_rings * g.max_n_phi * K * rsize,
+            "delta_bytes": M * g.n_rings * K * csize,
+            "seed_bytes": (2 * M * g.n_rings * 4
+                           if any(b.startswith("pallas")
+                                  for b in self.backends.values()) else 0),
+        }
+        out["total_bytes"] = sum(out.values())
+        return out
+
+    def describe(self) -> dict:
+        """Structured report: signature, chosen kernels, predicted vs
+        measured seconds per candidate, memory footprint, cache counters.
+
+        Benchmarks and docs consume this dict; ``report()`` pretty-prints
+        it.
+        """
+        w = roofline.sht_work(self.l_max, self.m_max, self.grid.n_rings,
+                              self.grid.max_n_phi, self.K)
+        return {
+            "signature": {
+                "grid": self.grid.name, "n_rings": self.grid.n_rings,
+                "n_phi": self.grid.max_n_phi, "l_max": self.l_max,
+                "m_max": self.m_max, "K": self.K, "dtype": self.dtype,
+                "fold": self.fold, "key": self._signature_key,
+            },
+            "mode": self.mode,
+            "backends": dict(self.backends),
+            "candidates": list(self.candidates),
+            "predicted_s": self.predicted_s,
+            "measured_s": self.measured_s,
+            "work": w,
+            "memory": self.memory_footprint(),
+            "cache": {"events": dict(self.cache_events),
+                      **plancache.stats().to_dict()},
+        }
+
+    def report(self) -> str:
+        """Human-readable ``describe()`` (chosen kernel, predicted vs
+        measured time per direction, memory footprint)."""
+        d = self.describe()
+        s = d["signature"]
+        lines = [
+            f"Plan {s['grid']} l_max={s['l_max']} m_max={s['m_max']} "
+            f"K={s['K']} {s['dtype']} fold={s['fold']} mode={d['mode']}",
+            f"  rings={s['n_rings']} n_phi={s['n_phi']} "
+            f"n_lm={d['work']['n_lm']} "
+            f"flops/dir~{d['work']['total_flops']:.3g}",
+            f"  memory ~{d['memory']['total_bytes'] / 1e6:.2f} MB",
+        ]
+        for direction in ("synth", "anal"):
+            chosen = d["backends"].get(direction, "?")
+            pred = d["predicted_s"].get(chosen, {}).get(direction)
+            meas = d["measured_s"].get(chosen, {}).get(direction) \
+                if d["measured_s"] else None
+            bits = [f"  {direction:5s} -> {chosen}"]
+            if pred is not None:
+                bits.append(f"predicted {pred * 1e6:.1f} us")
+            if meas is not None and np.isfinite(meas):
+                bits.append(f"measured {meas * 1e6:.1f} us")
+            lines.append("  ".join(bits))
+        ev = d["cache"]["events"]
+        lines.append(f"  cache: {ev if ev else 'cold'} "
+                     f"(mem_hits={d['cache']['memory_hits']} "
+                     f"disk_hits={d['cache']['disk_hits']} "
+                     f"builds={d['cache']['builds']})")
+        return "\n".join(lines)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return (f"Plan(grid={self.grid.name!r}, l_max={self.l_max}, "
+                f"K={self.K}, dtype={self.dtype!r}, "
+                f"backends={self.backends})")
+
+
+# ---------------------------------------------------------------------------
+# make_plan
+# ---------------------------------------------------------------------------
+
+
+def _resolve_grid(grid, l_max, nside, cache_kind, cache_dir):
+    """Grid spec -> (RingGrid, signature fields).  String specs go through
+    the geometry cache (the GL Newton iteration is the expensive part)."""
+    if isinstance(grid, RingGrid):
+        return grid, {"grid_cos": grid.cos_theta, "grid_nphi": grid.n_phi,
+                      "grid_w": grid.weights, "grid_name": grid.name}
+    kind = str(grid)
+    # Key each family only on the fields its geometry depends on: GL on
+    # l_max, healpix on nside.  Keying on the irrelevant one would fragment
+    # the cache (and the plan memoisation) for identical grids.
+    spec = {"grid_kind": kind, "grid_l_max": l_max if kind == "gl" else None,
+            "grid_nside": None if kind == "gl" else nside}
+    key = plancache.signature_key("geometry", **spec)
+
+    def build():
+        g = gridlib.make_grid(kind, l_max=l_max, nside=nside)
+        return {"cos_theta": g.cos_theta, "sin_theta": g.sin_theta,
+                "weights": g.weights, "n_phi": g.n_phi, "phi0": g.phi0,
+                "uniform": np.array(g.uniform),
+                "nside": np.array(-1 if g.nside is None else g.nside)}
+
+    p = plancache.get_or_build(key, build, cache=cache_kind,
+                               directory=cache_dir)
+    g = RingGrid(name=kind, cos_theta=p["cos_theta"],
+                 sin_theta=p["sin_theta"], weights=p["weights"],
+                 n_phi=p["n_phi"], phi0=p["phi0"], uniform=bool(p["uniform"]),
+                 nside=None if int(p["nside"]) < 0 else int(p["nside"]))
+    return g, spec
+
+
+def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
+              *, nside: Optional[int] = None, m_max: Optional[int] = None,
+              K: int = 1, dtype: str = "float64", mode: str = "auto",
+              fold: bool = False, cache: str = "auto",
+              cache_dir: Optional[str] = None,
+              n_shards: Optional[int] = None) -> Plan:
+    """Build (or fetch) the transform plan for a problem signature.
+
+    Parameters
+    ----------
+    grid : ``"gl"`` | ``"healpix_ring"`` | ``"healpix"`` | RingGrid
+        Grid spec (cached geometry) or a prebuilt grid instance.
+    l_max, m_max : band limits (``m_max`` defaults to ``l_max``).
+    nside : HEALPix resolution (required for healpix-family string specs).
+    K : number of simultaneous maps the plan is specialised for (the
+        batched Monte-Carlo workload; drives the VPU/MXU choice).
+    dtype : ``"float64"`` (oracle precision, jnp backend only) or
+        ``"float32"`` (performance; enables the Pallas kernels).
+    mode : ``"auto"`` (autotune, cached), ``"model"`` (cost model), or an
+        explicit backend name (``"jnp"``, ``"pallas_vpu"``, ``"pallas_mxu"``,
+        ``"dist"``).
+    fold : use the equator-fold optimisation (symmetric grids only).
+    cache : ``"auto"`` (memory; disk iff $REPRO_CACHE_DIR is set),
+        ``"memory"``, ``"disk"``, or ``"off"``.
+    cache_dir : override the on-disk cache location.
+    n_shards : device count for the ``dist`` backend (default: all).
+
+    Returns the memoised :class:`Plan`: calling ``make_plan`` twice with an
+    identical signature returns the same object and reuses every cached
+    precompute payload.
+    """
+    if isinstance(grid, str) and grid in ("gl",) and l_max is None:
+        raise ValueError("make_plan('gl', ...) requires l_max")
+    if mode not in ("auto", "model") + BACKENDS:
+        raise ValueError(f"unknown mode {mode!r}: expected 'auto', 'model' "
+                         f"or a backend name {BACKENDS}")
+    if cache == "auto":
+        cache_kind = "disk" if (cache_dir or os.environ.get("REPRO_CACHE_DIR")) \
+            else "memory"
+    else:
+        cache_kind = cache
+    assert cache_kind in ("off", "memory", "disk"), cache_kind
+
+    g, grid_sig = _resolve_grid(grid, l_max, nside, cache_kind, cache_dir)
+    if l_max is None:
+        # derive a safe band limit from the grid (HEALPix rule of thumb)
+        l_max = 2 * g.nside if g.nside else g.n_rings - 1
+    m_max = l_max if m_max is None else m_max
+    assert m_max <= l_max, (m_max, l_max)
+    assert dtype in ("float64", "float32"), dtype
+    if fold:
+        assert g.equator_symmetric, "fold requires a symmetric grid"
+
+    # cache policy is part of the memoisation key: a plan built with
+    # cache="off" must not shadow a later request for disk persistence.
+    sig_key = plancache.signature_key(
+        "plan", l_max=l_max, m_max=m_max, K=K, dtype=dtype, mode=mode,
+        fold=fold, n_shards=n_shards, cache_kind=cache_kind,
+        cache_dir=cache_dir, **grid_sig)
+    if sig_key in _PLANS:
+        plancache.stats().memory_hits += 1
+        return _PLANS[sig_key]
+
+    plan = Plan(g, l_max, m_max, K, dtype, mode=mode, fold=fold,
+                cache_kind=cache_kind, cache_dir=cache_dir,
+                n_shards=n_shards, signature_key=sig_key)
+    cand = available_backends(g, dtype, n_shards)
+    if mode in BACKENDS and mode not in cand:
+        # explicit request overrides the eligibility policy (e.g. pallas
+        # under float64: runs in f32 internally) -- but not impossibility.
+        if mode.startswith("pallas") and g.uniform:
+            cand = cand + [mode]
+        else:
+            raise ValueError(
+                f"backend {mode!r} unavailable for this signature "
+                f"(candidates: {cand})")
+    plan.candidates = cand
+    plan._choose_backends()
+    _PLANS[sig_key] = plan
+    return plan

@@ -1,3 +1,23 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernel layer for the Legendre-recurrence hot spot.
+
+``legendre_pallas`` holds the kernels (VPU broadcast-FMA and MXU panel
+matmul variants, paper §4.2.2 translated to TPU), ``ops`` the jit'd
+padding/layout wrappers and the ``stage1="pallas"`` adapters used by
+``DistSHT``, and ``ref`` the bit-matched jnp oracles the kernels are
+validated against.
+
+Callers normally do not import this package directly: ``repro.make_plan``
+dispatches into it when a plan selects a ``pallas_*`` backend.  The import
+is kept lazy/fallible so builds without Pallas can still use the jnp and
+dist backends (``PALLAS_AVAILABLE`` reports the outcome).
+"""
+
+try:
+    from repro.kernels import ops  # noqa: F401
+    from repro.kernels.ops import (  # noqa: F401
+        alm_from_delta_auto, anal, delta_from_alm_auto, pick_variant,
+        should_interpret, synth,
+    )
+    PALLAS_AVAILABLE = True
+except Exception:  # pragma: no cover - non-Pallas builds raise Import-,
+    PALLAS_AVAILABLE = False  # Attribute- or jaxlib-mismatch RuntimeErrors

@@ -54,6 +54,10 @@ _BIG = float(2.0 ** (SCALE_BITS_F32 // 2))        # 2^32
 _INV_BIG2 = float(2.0 ** (-SCALE_BITS_F32))       # 2^-64
 _BIG2 = float(2.0 ** SCALE_BITS_F32)              # 2^64
 
+# jax renamed TPUCompilerParams -> CompilerParams across releases; accept both.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
 
 def _f32_step(l, m_f, x, pp, pc, sc, pmm, pms):
     """One scaled-recurrence step, float32, branch-free.
@@ -184,7 +188,7 @@ def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, n_par, K2, R1, 128), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(m_vals, x2d, pmm, pms, a)
 
@@ -281,7 +285,7 @@ def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, n_par, R, K2), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(m_vals, x_flat, pmm_f, pms_f, a)
 
@@ -381,7 +385,7 @@ def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, l1p, K2), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(m_vals, x2d, pmm, pms, dw)
 
@@ -474,6 +478,6 @@ def anal_mxu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
         ),
         out_shape=jax.ShapeDtypeStruct((Mp, l1p, K2), jnp.float32),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(m_vals, x2d, pmm, pms, dw)

@@ -1,1 +1,7 @@
-# Roofline analysis: compiled-artifact cost extraction + 3-term model.
+# Roofline analysis: compiled-artifact cost extraction + 3-term model,
+# plus the analytic SHT cost model that drives make_plan's dispatch.
+from repro.roofline.analysis import (  # noqa: F401
+    BACKEND_MODELS, BackendModel, HW_HOST, HW_V5E, Hardware, Roofline,
+    analyze_compiled, collective_bytes, parse_hlo_collectives,
+    predict_sht_time, sht_work,
+)

@@ -23,8 +23,9 @@ from typing import Optional
 
 import numpy as np
 
-__all__ = ["HW_V5E", "Roofline", "collective_bytes", "analyze_compiled",
-           "parse_hlo_collectives"]
+__all__ = ["HW_V5E", "HW_HOST", "Roofline", "collective_bytes",
+           "analyze_compiled", "parse_hlo_collectives",
+           "sht_work", "predict_sht_time", "BACKEND_MODELS", "BackendModel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -36,6 +37,109 @@ class Hardware:
 
 
 HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
+
+#: Crude single-host CPU model (this container's baseline).  Used by the
+#: ``mode="model"`` dispatch when no accelerator is attached; the absolute
+#: numbers matter less than the *relative* per-backend ranking.
+HW_HOST = Hardware("host-cpu", 2e11, 5e10, 1e10)
+
+
+# ---------------------------------------------------------------------------
+# Analytic SHT cost model (drives repro.make_plan's ``mode="model"`` dispatch)
+# ---------------------------------------------------------------------------
+
+
+def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
+             K: int) -> dict:
+    """Operation counts of one transform direction (paper §3 complexity).
+
+    Returns a dict with:
+      ``recurrence_flops`` -- P_lm generation, O(R * n_lm), K-independent
+                              (the paper's on-the-fly beta recomputation:
+                              ~10 flops per (l, m, ring) step);
+      ``accum_flops``      -- the a_lm / Delta_m contraction, 4K flops per
+                              (l, m, ring) (complex FMA) -- this is the part
+                              an MXU can take as a matmul;
+      ``fft_flops``        -- R batched real FFTs of length n_phi;
+      ``bytes``            -- HBM traffic lower bound (alm + maps + Delta).
+    """
+    n_lm = (m_max + 1) * (l_max + 1) - m_max * (m_max + 1) // 2
+    rec = 10.0 * n_lm * n_rings
+    acc = 4.0 * n_lm * n_rings * K
+    fft = 5.0 * n_rings * n_phi * float(np.log2(max(n_phi, 2))) * K
+    byts = (16.0 * (m_max + 1) * (l_max + 1) * K      # alm (complex)
+            + 8.0 * n_rings * n_phi * K               # maps
+            + 16.0 * (m_max + 1) * n_rings * K)       # Delta (complex)
+    return {"n_lm": n_lm, "recurrence_flops": rec, "accum_flops": acc,
+            "fft_flops": fft, "bytes": byts,
+            "total_flops": rec + acc + fft}
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendModel:
+    """Effective-throughput model of one execution backend.
+
+    ``vector_eff``/``matrix_eff`` are fractions of ``Hardware.peak_flops``
+    achieved on vector (VPU/scalar) and matrix (MXU) work; ``matrix_eff = 0``
+    means the accumulation runs on the vector unit too.  ``anal_penalty``
+    models the paper's direct/inverse dichotomy (§5): the analysis direction
+    pays extra for its ring reduction (the paper's Algorithm 5 atomics; our
+    sequential-grid accumulation), so the same backend may win synthesis and
+    lose analysis.
+    """
+
+    name: str
+    vector_eff: float
+    matrix_eff: float = 0.0
+    anal_penalty: float = 1.0
+
+
+BACKEND_MODELS = {
+    # float64 un-fused HLO ops: correct but memory-bound.
+    "jnp": BackendModel("jnp", vector_eff=0.01, anal_penalty=1.0),
+    # broadcast-FMA kernel: good vector efficiency, no MXU use.
+    "pallas_vpu": BackendModel("pallas_vpu", vector_eff=0.08,
+                               anal_penalty=1.3),
+    # panel matmul: accumulation on the MXU, recurrence still vector work.
+    "pallas_mxu": BackendModel("pallas_mxu", vector_eff=0.06, matrix_eff=0.4,
+                               anal_penalty=1.2),
+    # dist = best local kernel / n_devices + one all_to_all on the wire.
+    "dist": BackendModel("dist", vector_eff=0.06, matrix_eff=0.4,
+                         anal_penalty=1.2),
+}
+
+
+def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
+                     n_phi: int, K: int, direction: str = "synth",
+                     hw: Hardware = HW_V5E, n_devices: int = 1) -> float:
+    """Predicted seconds for one transform on ``backend`` (3-term model).
+
+    compute = recurrence/vector + accumulation/(matrix or vector) + fft;
+    memory = bytes / HBM bw;  collective (dist only) = all_to_all wire
+    bytes / link bw.  The terms are summed (no overlap assumed -- the
+    paper's kernels are serial stages), and ``anal_penalty`` is applied for
+    ``direction="anal"``.
+    """
+    if backend not in BACKEND_MODELS:
+        raise ValueError(f"unknown backend {backend!r}")
+    m = BACKEND_MODELS[backend]
+    w = sht_work(l_max, m_max, n_rings, n_phi, K)
+    vec_rate = hw.peak_flops * m.vector_eff
+    t = w["recurrence_flops"] / vec_rate + w["fft_flops"] / vec_rate
+    if m.matrix_eff > 0:
+        t += w["accum_flops"] / (hw.peak_flops * m.matrix_eff)
+    else:
+        t += w["accum_flops"] / vec_rate
+    t += w["bytes"] / hw.hbm_bw
+    if backend == "dist" and n_devices > 1:
+        t /= n_devices
+        # one tiled all_to_all of the (M, R, 2K) Delta block per transform
+        wire = 16.0 * (m_max + 1) * n_rings * K / n_devices \
+            * (n_devices - 1) / n_devices
+        t += wire / hw.link_bw
+    if direction == "anal":
+        t *= m.anal_penalty
+    return float(t)
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -1,0 +1,92 @@
+"""hypothesis compatibility shim.
+
+Re-exports the real ``hypothesis`` when installed.  When it is missing
+(containers where we cannot pip install), provides a deterministic
+mini-runner implementing the tiny subset these tests use --
+``@settings(max_examples=..., deadline=...)``, ``@given(**strategies)``,
+``st.integers(lo, hi)`` and ``st.sampled_from(values)`` -- so the property
+tests still execute with seeded pseudo-random + boundary examples instead
+of being skipped wholesale.
+
+The fallback is intentionally simple: no shrinking, no example database.
+Draws are seeded per-test (crc32 of the test name), so failures reproduce.
+Install the real ``hypothesis`` (``pip install -e ".[test]"``) to get full
+property-based testing.
+"""
+
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import functools
+    import inspect
+    import zlib
+
+    import numpy as np
+
+    _DEFAULT_MAX_EXAMPLES = 10
+
+    class _Strategy:
+        def draw(self, rng, i):
+            raise NotImplementedError
+
+    class _Integers(_Strategy):
+        def __init__(self, lo, hi):
+            self.lo, self.hi = int(lo), int(hi)
+
+        def draw(self, rng, i):
+            if i == 0:
+                return self.lo
+            if i == 1:
+                return self.hi
+            return int(rng.integers(self.lo, self.hi + 1))
+
+    class _SampledFrom(_Strategy):
+        def __init__(self, values):
+            self.values = list(values)
+
+        def draw(self, rng, i):
+            if i < len(self.values):          # cycle through all values first
+                return self.values[i]
+            return self.values[int(rng.integers(len(self.values)))]
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(values):
+            return _SampledFrom(values)
+
+    def given(**strats):
+        def deco(fn):
+            @functools.wraps(fn)
+            def wrapper(*args, **kwargs):
+                n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = {k: s.draw(rng, i) for k, s in strats.items()}
+                    try:
+                        fn(*args, **kwargs, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"falsifying example ({fn.__name__}): {drawn}"
+                        ) from e
+            # hide the property parameters from pytest's fixture resolution
+            # (functools.wraps exposes them via __wrapped__)
+            del wrapper.__wrapped__
+            wrapper.__signature__ = inspect.Signature()
+            return wrapper
+        return deco
+
+    def settings(max_examples=_DEFAULT_MAX_EXAMPLES, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -6,3 +6,6 @@ import os
 import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+# tests/ itself, for the _hypothesis_compat shim (real hypothesis when
+# installed, deterministic fallback runner otherwise)
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

@@ -1,0 +1,190 @@
+"""The unified Plan API: dispatch, precompute caching, describe()."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import cache as plancache
+from repro.core import grids, sht, spectra, transform
+
+LMAX, K = 24, 2
+KEY = jax.random.PRNGKey(7)
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    """Each test sees empty plan/precompute caches and zeroed counters."""
+    transform.clear_plan_cache()
+    plancache.reset_stats()
+    yield
+    transform.clear_plan_cache()
+    plancache.reset_stats()
+
+
+def _oracle_pair():
+    alm = sht.random_alm(KEY, LMAX, LMAX, K=K)
+    oracle = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64",
+                             mode="jnp")
+    maps = np.asarray(oracle.alm2map(alm))
+    return alm, maps, np.asarray(oracle.map2alm(jnp.asarray(maps)))
+
+
+# -- plan-signature cache ----------------------------------------------------
+
+
+def test_make_plan_is_memoised():
+    p1 = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="model")
+    builds = plancache.stats().builds
+    p2 = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="model")
+    assert p2 is p1
+    assert plancache.stats().builds == builds       # no recompute at all
+
+
+def test_signature_distinguishes_problems():
+    p1 = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="model")
+    p2 = repro.make_plan("gl", l_max=LMAX, K=K + 1, dtype="float64",
+                         mode="model")
+    p3 = repro.make_plan("gl", l_max=LMAX + 8, K=K, dtype="float64",
+                         mode="model")
+    assert p1 is not p2 and p1 is not p3 and p2 is not p3
+
+
+def test_disk_cache_skips_recompute(tmp_path):
+    d = str(tmp_path)
+    p1 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32", mode="auto",
+                         cache="disk", cache_dir=d)
+    builds = plancache.stats().builds
+    assert builds > 0
+    # simulate a fresh process: drop every in-memory tier
+    transform.clear_plan_cache()
+    p2 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32", mode="auto",
+                         cache="disk", cache_dir=d)
+    assert p2 is not p1                              # new object...
+    assert plancache.stats().builds == builds        # ...zero rebuilt payloads
+    assert plancache.stats().disk_hits > 0
+    assert p2.backends == p1.backends                # autotune decision reused
+    assert p2.cache_events.get("decision") == "hit"
+
+
+def test_geometry_payload_roundtrip(tmp_path):
+    """A disk-cached GL grid is bit-identical to a fresh one."""
+    d = str(tmp_path)
+    p1 = repro.make_plan("gl", l_max=33, dtype="float64", mode="jnp",
+                         cache="disk", cache_dir=d)
+    transform.clear_plan_cache()
+    p2 = repro.make_plan("gl", l_max=33, dtype="float64", mode="jnp",
+                         cache="disk", cache_dir=d)
+    g_ref = grids.make_grid("gl", l_max=33)
+    for g in (p1.grid, p2.grid):
+        np.testing.assert_array_equal(g.cos_theta, g_ref.cos_theta)
+        np.testing.assert_array_equal(g.weights, g_ref.weights)
+
+
+# -- backend agreement -------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_vpu", "pallas_mxu"])
+@pytest.mark.parametrize("fold", [False, True])
+def test_backends_agree_with_f64_oracle(backend, fold):
+    alm, maps_ref, alm_ref = _oracle_pair()
+    dtype = "float64" if backend == "jnp" else "float32"
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype=dtype, mode=backend,
+                        fold=fold)
+    tol = 1e-12 if dtype == "float64" else 1e-4
+    m = np.asarray(p.alm2map(alm.astype(jnp.complex64)
+                             if dtype == "float32" else alm))
+    assert np.max(np.abs(m - maps_ref)) / np.max(np.abs(maps_ref)) < tol
+    a = np.asarray(p.map2alm(jnp.asarray(maps_ref, p.dtype)))
+    assert np.max(np.abs(a - alm_ref)) / np.max(np.abs(alm_ref)) < tol
+
+
+def test_auto_and_model_modes_roundtrip():
+    for mode in ("auto", "model"):
+        p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float32", mode=mode)
+        assert p.backends["synth"] in p.candidates
+        assert p.backends["anal"] in p.candidates
+        alm = sht.random_alm(KEY, LMAX, LMAX, K=K).astype(jnp.complex64)
+        err = spectra.d_err(alm, p.map2alm(p.alm2map(alm)))
+        assert err < 1e-4, (mode, err)
+
+
+def test_float64_restricted_to_oracle():
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="auto")
+    assert p.candidates == ["jnp"] or "pallas_vpu" not in p.candidates
+    assert p.backends == {"synth": "jnp", "anal": "jnp"}
+
+
+def test_dist_backend_requires_devices():
+    if jax.device_count() >= 2:
+        pytest.skip("multi-device host: dist is legitimately available")
+    with pytest.raises(ValueError):
+        repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="dist")
+
+
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="dist backend needs >= 2 devices (covered by "
+                           "tests/helpers/dist_sht_check.py in a subprocess)")
+def test_dist_backend_agrees():  # pragma: no cover - TPU/multi-device hosts
+    alm, maps_ref, _ = _oracle_pair()
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="dist")
+    m = np.asarray(p.alm2map(alm))
+    assert np.max(np.abs(m - maps_ref)) / np.max(np.abs(maps_ref)) < 1e-10
+
+
+def test_map2alm_iters_refines_on_healpix():
+    p = repro.make_plan("healpix_ring", nside=8, dtype="float64", mode="jnp")
+    alm = sht.random_alm(KEY, p.l_max, p.m_max, K=1)
+    maps = p.alm2map(alm)
+    e0 = spectra.d_err(alm, p.map2alm(maps))
+    e1 = spectra.d_err(alm, p.map2alm(maps, iters=1))
+    assert e1 < e0 / 3                               # Jacobi refinement bites
+
+
+# -- describe() --------------------------------------------------------------
+
+
+def test_describe_well_formed():
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float32", mode="auto")
+    d = p.describe()
+    for key in ("signature", "mode", "backends", "candidates", "predicted_s",
+                "measured_s", "work", "memory", "cache"):
+        assert key in d, key
+    assert d["signature"]["l_max"] == LMAX
+    assert set(d["backends"]) == {"synth", "anal"}
+    for b in d["candidates"]:
+        assert set(d["predicted_s"][b]) == {"synth", "anal"}
+        assert all(t > 0 for t in d["predicted_s"][b].values())
+        for direction in ("synth", "anal"):
+            assert direction in d["measured_s"][b]
+    assert d["memory"]["total_bytes"] > 0
+    assert d["work"]["n_lm"] == (LMAX + 1) * (LMAX + 2) // 2
+    # report() renders every section without blowing up
+    r = p.report()
+    assert "synth ->" in r and "anal" in r and "cache" in r
+
+
+def test_describe_predicted_vs_measured_present_in_auto():
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float32", mode="auto")
+    d = p.describe()
+    chosen = d["backends"]["synth"]
+    assert np.isfinite(d["measured_s"][chosen]["synth"])
+    assert d["measured_s"][chosen]["synth"] > 0
+
+
+def test_plan_shape_validation():
+    p = repro.make_plan("gl", l_max=LMAX, K=K, dtype="float64", mode="jnp")
+    with pytest.raises(AssertionError):
+        p.alm2map(jnp.zeros((LMAX + 1, LMAX + 1, K + 1), jnp.complex128))
+    with pytest.raises(AssertionError):
+        p.map2alm(jnp.zeros((3, 4, K)))
+
+
+def test_available_backends_policy():
+    g = grids.make_grid("gl", l_max=16)
+    assert repro.available_backends(g, "float64", 1) == ["jnp"]
+    f32 = repro.available_backends(g, "float32", 1)
+    assert "pallas_vpu" in f32 and "pallas_mxu" in f32
+    ragged = grids.make_grid("healpix", nside=4)
+    assert repro.available_backends(ragged, "float32", 1) == ["jnp"]
