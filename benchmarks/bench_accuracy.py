@@ -2,50 +2,61 @@
 
 Columns: name, us_per_call (map2alm(alm2map) wall), derived = D_err.
 The GL grid isolates implementation error (machine precision); the
-HEALPix-ring grid reproduces the paper's aliasing-driven error growth as
-l_max approaches the 2*nside sampling limit.
+HEALPix-family grids reproduce the paper's aliasing-driven error growth as
+l_max approaches the 2*nside sampling limit.  True (ragged) HEALPix runs
+through the same plan path as everything else -- the ring-bucket phase
+stage -- including ``iters=1`` Jacobi refinement rows.
+
+Every transform goes through ``repro.make_plan``; no engine hand-wiring.
 """
 
-import jax
+import jax.numpy as jnp
 import numpy as np
 
-import repro  # noqa: F401
-from repro.core import grids, sht, spectra
-from benchmarks.common import emit, time_call
+import repro
+from repro.core import sht, spectra
+from benchmarks.common import emit, smoke, time_call
 
-KEY = jax.random.PRNGKey(0)
+KEY = None  # random_alm's deterministic default
+
+
+def _roundtrip(plan, alm, iters=0):
+    rt = lambda a: plan.map2alm(plan.alm2map(a), iters=iters)
+    dt = time_call(rt, alm, iters=1)
+    return dt, spectra.d_err(alm, rt(alm))
 
 
 def main():
-    for l_max in (32, 64, 128, 256):
-        t = sht.SHT(grids.make_grid("gl", l_max=l_max), l_max=l_max,
-                    m_max=l_max)
+    gl_sizes = (32,) if smoke() else (32, 64, 128, 256)
+    for l_max in gl_sizes:
+        plan = repro.make_plan("gl", l_max=l_max, dtype="float64", mode="jnp")
         alm = sht.random_alm(KEY, l_max, l_max)
-        rt = lambda a: t.map2alm(t.alm2map(a))
-        dt = time_call(rt, alm, iters=1)
-        err = spectra.d_err(alm, rt(alm))
+        dt, err = _roundtrip(plan, alm)
         emit(f"accuracy/gl/f64/lmax{l_max}", dt * 1e6, f"{err:.3e}")
 
-    for nside in (16, 32, 64):
+    nsides = (8,) if smoke() else (16, 32, 64)
+    for nside in nsides:
         # at the sampling limit (l_max = 2 nside) and well-resolved (nside)
         for l_max in (2 * nside, nside):
-            g = grids.make_grid("healpix_ring", nside=nside)
-            t = sht.SHT(g, l_max=l_max, m_max=l_max)
-            alm = sht.random_alm(KEY, l_max, l_max)
-            rt = lambda a: t.map2alm(t.alm2map(a))
-            dt = time_call(rt, alm, iters=1)
-            err = spectra.d_err(alm, rt(alm))
-            emit(f"accuracy/healpix_ring/nside{nside}/lmax{l_max}",
-                 dt * 1e6, f"{err:.3e}")
+            for kind in ("healpix_ring", "healpix"):
+                plan = repro.make_plan(kind, nside=nside, l_max=l_max,
+                                       dtype="float64", mode="jnp")
+                alm = sht.random_alm(KEY, l_max, l_max)
+                dt, err = _roundtrip(plan, alm)
+                emit(f"accuracy/{kind}/nside{nside}/lmax{l_max}",
+                     dt * 1e6, f"{err:.3e}")
+        # Jacobi refinement on the approximate-quadrature (ragged) grid
+        plan = repro.make_plan("healpix", nside=nside, dtype="float64",
+                               mode="jnp")
+        alm = sht.random_alm(KEY, plan.l_max, plan.m_max)
+        dt, err = _roundtrip(plan, alm, iters=1)
+        emit(f"accuracy/healpix/nside{nside}/iters1", dt * 1e6, f"{err:.3e}")
 
     # f32 engine (kernel-precision) error at fixed size
-    l_max = 128
-    g = grids.make_grid("gl", l_max=l_max)
-    t32 = sht.SHT(g, l_max=l_max, m_max=l_max, dtype="float32")
+    l_max = 32 if smoke() else 128
+    plan = repro.make_plan("gl", l_max=l_max, dtype="float32", mode="jnp")
     alm = sht.random_alm(KEY, l_max, l_max).astype(np.complex64)
-    rt = lambda a: t32.map2alm(t32.alm2map(a))
-    dt = time_call(rt, alm, iters=1)
-    err = spectra.d_err(alm, rt(alm))
+    dt, err = _roundtrip(plan, alm)
     emit(f"accuracy/gl/f32/lmax{l_max}", dt * 1e6, f"{err:.3e}")
 
 

@@ -2,7 +2,10 @@
 recurrence / communication / FFT stages, under MPI-style sharding.
 
 Runs in a SUBPROCESS with 8 host devices (this process stays 1-device).
-Each stage is timed by jitting it in isolation with the same shardings.
+The transforms are reached through ``repro.make_plan(..., mode="dist")``;
+each stage is then timed by jitting it in isolation with the same
+shardings.  Includes a true-HEALPix (ragged) breakdown: its FFT stage is
+the bucket engine with bucket-aware ring sharding.
 Columns: name, us_per_call, derived = stage.
 """
 
@@ -17,57 +20,65 @@ import time
 import numpy as np, jax, jax.numpy as jnp
 import repro
 from repro import compat
-from repro.core import grids, sht, plan as planlib, dist_sht
+from repro.core import sht
+from jax.sharding import PartitionSpec as P
 
-lmax, K = 256, 2
-g = grids.make_grid("gl", l_max=lmax)
-mesh = jax.make_mesh((8,), ("procs",))
-p = planlib.SHTPlan(g, lmax, lmax, 8)
-d = dist_sht.DistSHT(p, mesh, ("procs",))
-alm = sht.random_alm(jax.random.PRNGKey(0), lmax, lmax, K=K)
-packed = jnp.asarray(p.pack_alm(np.asarray(alm)))
+SMOKE = bool(os.environ.get("REPRO_BENCH_SMOKE"))
+K = 2
+REPS = 1 if SMOKE else 3
 
 def timeit(f, *a):
     out = f(*a); jax.block_until_ready(out)
     ts = []
-    for _ in range(3):
+    for _ in range(REPS):
         t0 = time.perf_counter(); out = f(*a); jax.block_until_ready(out)
         ts.append(time.perf_counter() - t0)
     return float(np.median(ts)), out
 
-# full transform
-t_full, maps = timeit(d.alm2map, packed)
-# stage timings via the internal builders
-synth, anal, c = d._build(K)
-a_re, a_im = jnp.real(packed), jnp.imag(packed)
+def breakdown(tag, plan):
+    d = plan._dist_engine()
+    p = d.plan
+    alm = sht.random_alm(jax.random.PRNGKey(0), plan.l_max, plan.m_max, K=K)
+    t_full, maps = timeit(plan.alm2map, alm)
+    print(f"CSV breakdown/{tag}/alm2map/full,{t_full*1e6:.1f},"
+          f"8dev-lmax{plan.l_max}")
 
-import functools
-from jax.sharding import PartitionSpec as P
-spec = P(("procs",))
+    packed = jnp.asarray(p.pack_alm(np.asarray(alm)))
+    synth, anal, c = d._build(K)
+    a_re, a_im = jnp.real(packed), jnp.imag(packed)
+    spec = P(d.axis_names)
 
-stage1 = jax.jit(compat.shard_map(lambda ar, ai, m: jnp.concatenate(
-    d._stage1_synth(ar, ai, m), -1), mesh=mesh,
-    in_specs=(spec, spec, spec), out_specs=spec))
-t_s1, delta = timeit(stage1, a_re, a_im, c["m_flat"])
+    stage1 = jax.jit(compat.shard_map(lambda ar, ai, m: jnp.concatenate(
+        d._stage1_synth(ar, ai, m), -1), mesh=d.mesh,
+        in_specs=(spec, spec, spec), out_specs=spec))
+    t_s1, delta = timeit(stage1, a_re, a_im, c["m_flat"])
 
-exch = jax.jit(compat.shard_map(lambda x: d._exchange(x, to_rings=True),
-    mesh=mesh, in_specs=(spec,), out_specs=spec))
-t_comm, exch_out = timeit(exch, delta)
+    exch = jax.jit(compat.shard_map(lambda x: d._exchange(x, to_rings=True),
+        mesh=d.mesh, in_specs=(spec,), out_specs=spec))
+    t_comm, exch_out = timeit(exch, delta)
 
-fft = jax.jit(compat.shard_map(lambda x, ph, vl: d._synth_fft(
-    x[..., :K], x[..., K:], ph, vl), mesh=mesh,
-    in_specs=(spec, spec, spec), out_specs=spec))
-t_fft, _ = timeit(fft, exch_out, c["phi0"], c["valid"])
+    nops = len(c["synth_ops"])
+    fft = jax.jit(compat.shard_map(lambda x, ph, vl, *ops: d._synth_fft(
+        x[..., :K], x[..., K:], ph, vl, ops), mesh=d.mesh,
+        in_specs=(spec,) * (3 + nops), out_specs=spec))
+    t_fft, _ = timeit(fft, exch_out, c["phi0"], c["valid"], *c["synth_ops"])
 
-print(f"CSV breakdown/alm2map/full,{t_full*1e6:.1f},8dev-lmax{lmax}")
-print(f"CSV breakdown/alm2map/recurrence,{t_s1*1e6:.1f},stage1")
-print(f"CSV breakdown/alm2map/all_to_all,{t_comm*1e6:.1f},comm")
-print(f"CSV breakdown/alm2map/fft,{t_fft*1e6:.1f},stage2")
+    kind = plan.phase.describe()["kind"]
+    print(f"CSV breakdown/{tag}/alm2map/recurrence,{t_s1*1e6:.1f},stage1")
+    print(f"CSV breakdown/{tag}/alm2map/all_to_all,{t_comm*1e6:.1f},comm")
+    print(f"CSV breakdown/{tag}/alm2map/fft,{t_fft*1e6:.1f},{kind}-phase")
 
-# direct transform breakdown (mirror)
-maps_plan = jnp.asarray(p.gather_map(np.zeros((g.n_rings, g.max_n_phi, K))))
-t_full_a, _ = timeit(d.map2alm, maps_plan)
-print(f"CSV breakdown/map2alm/full,{t_full_a*1e6:.1f},8dev-lmax{lmax}")
+    t_full_a, _ = timeit(plan.map2alm, maps)
+    print(f"CSV breakdown/{tag}/map2alm/full,{t_full_a*1e6:.1f},"
+          f"8dev-lmax{plan.l_max}")
+
+lmax = 64 if SMOKE else 256
+breakdown("gl", repro.make_plan("gl", l_max=lmax, K=K, dtype="float64",
+                                mode="dist", n_shards=8))
+nside = 8 if SMOKE else 32
+breakdown("healpix", repro.make_plan("healpix", nside=nside, K=K,
+                                     dtype="float64", mode="dist",
+                                     n_shards=8))
 '''
 
 

@@ -20,7 +20,7 @@ import numpy as np
 import repro  # noqa: F401
 from repro.core import grids, legendre, sht
 from repro.kernels import ops as kops, ref as kref
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, smoke, time_call
 
 KEY = jax.random.PRNGKey(1)
 
@@ -31,7 +31,8 @@ def _flops(l_max, R, K):
 
 
 def main():
-    for l_max, K in ((128, 1), (256, 1), (256, 8)):
+    sizes = ((64, 1),) if smoke() else ((128, 1), (256, 1), (256, 8))
+    for l_max, K in sizes:
         g = grids.make_grid("gl", l_max=l_max)
         lm = legendre.log_mu(l_max)
         m_vals = np.arange(l_max + 1)
@@ -66,7 +67,9 @@ def main():
              f"{fl / dt / 1e9:.2f}")
 
     # kernels (interpret mode): small sizes only
-    for l_max, K, var in ((96, 1, "vpu"), (96, 8, "mxu")):
+    ksizes = ((32, 1, "vpu"),) if smoke() \
+        else ((96, 1, "vpu"), (96, 8, "mxu"))
+    for l_max, K, var in ksizes:
         g = grids.make_grid("gl", l_max=l_max)
         lm = legendre.log_mu(l_max)
         m_vals = np.arange(l_max + 1)

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 import repro
 from repro.core import sht
-from benchmarks.common import emit, time_call
+from benchmarks.common import emit, smoke, time_call
 
 KEY = jax.random.PRNGKey(3)
 
@@ -26,7 +26,7 @@ def _plan_times(plan, alm, maps):
 
 
 def main():
-    for l_max in (64, 128):
+    for l_max in ((32,) if smoke() else (64, 128)):
         alm64 = sht.random_alm(KEY, l_max, l_max)
         base = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64",
                                mode="jnp")
@@ -53,9 +53,9 @@ def main():
 
     # batched-K amortisation: per-map time shrinks as K grows because
     # P_lm generation is shared across the Monte-Carlo batch.
-    l_max = 128
+    l_max = 32 if smoke() else 128
     t1 = None
-    for K in (1, 4, 16):
+    for K in ((1, 4) if smoke() else (1, 4, 16)):
         alm = sht.random_alm(KEY, l_max, l_max, K=K)
         p = repro.make_plan("gl", l_max=l_max, K=K, dtype="float64",
                             mode="jnp")

@@ -1,9 +1,16 @@
-"""Shared benchmark utilities: timing, CSV emission."""
+"""Shared benchmark utilities: timing, CSV emission, smoke-mode gating."""
 
+import os
 import time
 
 import jax
 import numpy as np
+
+
+def smoke() -> bool:
+    """True when REPRO_BENCH_SMOKE=1: one small size, one rep per bench
+    (the scripts/check.sh CI gate)."""
+    return bool(os.environ.get("REPRO_BENCH_SMOKE"))
 
 
 def time_call(fn, *args, warmup=1, iters=3, **kw):

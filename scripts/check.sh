@@ -19,4 +19,20 @@ PYTHONPATH=src python -m pytest -x -q
 echo "== smoke benchmark (plan dispatch, CPU) =="
 PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.bench_dispatch
 
+echo "== ragged-grid smoke (true-HEALPix plan roundtrip) =="
+PYTHONPATH=src python - <<'PY'
+import numpy as np
+import repro
+from repro.core import sht, spectra
+plan = repro.make_plan("healpix", nside=8, dtype="float64", mode="auto")
+alm = sht.random_alm(None, plan.l_max, plan.m_max)
+err = float(spectra.d_err(alm, plan.map2alm(plan.alm2map(alm), iters=1)))
+assert err < 0.05, f"healpix roundtrip regressed: d_err={err}"
+assert plan.describe()["phase"]["kind"] == "bucket"
+print(f"healpix nside=8 roundtrip d_err={err:.2e} backends={plan.backends}")
+PY
+
+echo "== full benchmark set (one-rep smoke) =="
+PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.run
+
 echo "check.sh: OK"

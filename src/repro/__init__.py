@@ -24,7 +24,8 @@ def __getattr__(name):
     layer pulls in the SHT engine; the Pallas kernels are only imported if
     a plan actually selects them).
     """
-    if name in ("make_plan", "Plan", "available_backends"):
+    if name in ("make_plan", "Plan", "available_backends",
+                "backend_eligibility"):
         from repro.core import transform
         return getattr(transform, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro import compat
 from repro.core import legendre
+from repro.core import phase as phaselib
 from repro.core.plan import SHTPlan
 
 __all__ = ["DistSHT"]
@@ -147,50 +148,41 @@ class DistSHT:
             m_loc, nx, ns, self._log_mu, l_max=p.l_max, dtype=dt)
 
     # -- stage 2: FFTs (ring-sharded), plan-slot m ordering ----------------------
+    #
+    # Both directions delegate to the pluggable phase layer
+    # (repro.core.phase): the batched-rfft engine for uniform grids, the
+    # ring-bucket engine for ragged (true HEALPix) ones.  Every shard runs
+    # the same static bucket structure (plan.local_fft_layout); the
+    # per-slot geometry and alias-fold bin maps arrive as *sharded
+    # operands* so one SPMD program serves all shards.
 
-    def _synth_fft(self, d_re, d_im, phi0_loc, w_dummy_loc):
+    def _synth_fft(self, d_re, d_im, phi0_loc, w_dummy_loc, fft_ops=()):
         """(Mp, r_local, K) Delta -> (r_local, n_phi, K) samples."""
         p = self.plan
-        n = p.grid.max_n_phi
         cdt = _complex_dtype(self.dtype)
-        m_flat = p.m_flat                                  # static (Mp,)
-        msafe = np.maximum(m_flat, 0)
         delta = (d_re + 1j * d_im).astype(cdt)
-        phase = jnp.exp(1j * jnp.asarray(msafe, self.dtype)[:, None]
-                        * phi0_loc[None, :]).astype(cdt)
-        dp = delta * phase[..., None]
-        dp = jnp.where(jnp.asarray(m_flat >= 0)[:, None, None], dp, 0.0)
-        b = msafe % n
-        hi = b > n // 2
-        bins = np.where(hi, n - b, b)
-        nyq = 2 * b == n
-        half = n // 2 + 1
-        vals = jnp.where(jnp.asarray(hi)[:, None, None], jnp.conj(dp), dp)
-        vals = jnp.where(jnp.asarray(nyq)[:, None, None],
-                         2.0 * jnp.real(vals).astype(cdt), vals)
-        H = jnp.zeros((half,) + dp.shape[1:], cdt)
-        H = H.at[jnp.asarray(bins)].add(vals)
-        H = jnp.moveaxis(H, 0, 1)                          # (r_local, half, K)
-        s = jnp.fft.irfft(H, n=n, axis=1) * n
-        return s.astype(self.dtype) * w_dummy_loc[:, None, None]
+        if p.grid.uniform:
+            return phaselib.uniform_synth(
+                delta, p.m_flat, p.grid.max_n_phi, phi0_loc,
+                dtype=self.dtype, scale_rows=w_dummy_loc)
+        n_loc, pos_loc, neg_loc = fft_ops
+        return phaselib.bucket_synth(
+            delta, p.local_fft_layout, pos_loc.T, neg_loc.T, n_loc,
+            phi0_loc, p.m_flat, out_width=p.grid.max_n_phi,
+            dtype=self.dtype, scale_rows=w_dummy_loc)
 
-    def _anal_fft(self, maps_loc, phi0_loc, w_loc):
+    def _anal_fft(self, maps_loc, phi0_loc, w_loc, fft_ops=()):
         """(r_local, n_phi, K) samples -> weighted Delta^S (Mp, r_local, K)."""
         p = self.plan
-        n = p.grid.max_n_phi
-        cdt = _complex_dtype(self.dtype)
-        m_flat = p.m_flat
-        msafe = np.maximum(m_flat, 0)
-        F = jnp.fft.rfft(maps_loc.astype(self.dtype), axis=1)  # (r_local, half, K)
-        b = msafe % n
-        hi = b > n // 2
-        bins = np.where(hi, n - b, b)
-        Fm = F[:, jnp.asarray(bins), :]
-        Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
-        Fm = jnp.moveaxis(Fm, 1, 0).astype(cdt)                # (Mp, r_local, K)
-        phase = jnp.exp(-1j * jnp.asarray(msafe, self.dtype)[:, None]
-                        * phi0_loc[None, :]).astype(cdt)
-        dw = Fm * phase[..., None] * w_loc[None, :, None]
+        if p.grid.uniform:
+            dw = phaselib.uniform_anal(
+                maps_loc, p.m_flat, p.grid.max_n_phi, phi0_loc, w_loc,
+                dtype=self.dtype)
+        else:
+            n_loc, pos_loc = fft_ops
+            dw = phaselib.bucket_anal(
+                maps_loc, p.local_fft_layout, pos_loc.T, n_loc, phi0_loc,
+                w_loc, p.m_flat, dtype=self.dtype)
         return jnp.real(dw).astype(self.dtype), jnp.imag(dw).astype(self.dtype)
 
     # -- collective ---------------------------------------------------------------
@@ -231,16 +223,25 @@ class DistSHT:
         w_all = jnp.asarray(geom["weights"], self.dtype)
         valid_all = jnp.asarray(geom["valid"].astype(np.float64), self.dtype)
         m_flat = jnp.asarray(p.m_flat, jnp.int32)
+        # ragged grids: per-slot FFT geometry + precomputed alias-fold bin
+        # maps ride along as ring-sharded operands (plan.fft_bin_maps)
+        if p.grid.uniform:
+            synth_ops = anal_ops = ()
+        else:
+            pos_all, neg_all = p.fft_bin_maps            # (R_pad, Mp) int32
+            n_all = jnp.asarray(geom["n_phi"], jnp.int32)
+            synth_ops = (n_all, jnp.asarray(pos_all), jnp.asarray(neg_all))
+            anal_ops = (n_all, jnp.asarray(pos_all))
 
-        def synth_shard(a_re, a_im, m_loc, phi0_loc, valid_loc):
+        def synth_shard(a_re, a_im, m_loc, phi0_loc, valid_loc, *fft_ops):
             d_re, d_im = self._stage1_synth(a_re, a_im, m_loc)
             packed = jnp.concatenate([d_re, d_im], axis=-1)     # (m_local, R_pad, 2K)
             packed = self._exchange(packed, to_rings=True)       # (Mp, r_local, 2K)
             d_re, d_im = packed[..., :K], packed[..., K:]
-            return self._synth_fft(d_re, d_im, phi0_loc, valid_loc)
+            return self._synth_fft(d_re, d_im, phi0_loc, valid_loc, fft_ops)
 
-        def anal_shard(maps_loc, m_loc, phi0_loc, w_loc):
-            dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc)
+        def anal_shard(maps_loc, m_loc, phi0_loc, w_loc, *fft_ops):
+            dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc, fft_ops)
             packed = jnp.concatenate([dw_re, dw_im], axis=-1)    # (Mp, r_local, 2K)
             packed = self._exchange(packed, to_rings=False)      # (m_local, R_pad, 2K)
             dw_re, dw_im = packed[..., :K], packed[..., K:]
@@ -253,13 +254,14 @@ class DistSHT:
         # pcast-ing deep inside the shared recurrence code.
         synth = jax.jit(compat.shard_map(
             synth_shard, mesh=self.mesh,
-            in_specs=(spec, spec, spec, spec, spec),
+            in_specs=(spec,) * (5 + len(synth_ops)),
             out_specs=spec))
         anal = jax.jit(compat.shard_map(
             anal_shard, mesh=self.mesh,
-            in_specs=(spec, spec, spec, spec),
+            in_specs=(spec,) * (4 + len(anal_ops)),
             out_specs=(spec, spec)))
-        consts = dict(phi0=phi0_all, w=w_all, valid=valid_all, m_flat=m_flat)
+        consts = dict(phi0=phi0_all, w=w_all, valid=valid_all, m_flat=m_flat,
+                      synth_ops=synth_ops, anal_ops=anal_ops)
         return synth, anal, consts
 
     def alm2map(self, alm_packed):
@@ -272,14 +274,15 @@ class DistSHT:
         synth, _, c = self._build(K)
         a_re = jnp.real(alm_packed).astype(self.dtype)
         a_im = jnp.imag(alm_packed).astype(self.dtype)
-        return synth(a_re, a_im, c["m_flat"], c["phi0"], c["valid"])
+        return synth(a_re, a_im, c["m_flat"], c["phi0"], c["valid"],
+                     *c["synth_ops"])
 
     def map2alm(self, maps_plan):
         """maps (R_pad, n_phi, K) in plan ring order -> packed alm (Mp, L, K)."""
         K = maps_plan.shape[-1]
         _, anal, c = self._build(K)
         a_re, a_im = anal(maps_plan.astype(self.dtype), c["m_flat"],
-                          c["phi0"], c["w"])
+                          c["phi0"], c["w"], *c["anal_ops"])
         return a_re + 1j * a_im
 
     # -- shape-only entry points for the dry-run -----------------------------------
@@ -294,7 +297,7 @@ class DistSHT:
         args = (
             jax.ShapeDtypeStruct((Mp, p.l_max + 1, K), jnp.dtype(self.dtype), sharding=sh),
             jax.ShapeDtypeStruct((Mp, p.l_max + 1, K), jnp.dtype(self.dtype), sharding=sh),
-            c["m_flat"], c["phi0"], c["valid"],
+            c["m_flat"], c["phi0"], c["valid"], *c["synth_ops"],
         )
         return synth.lower(*args), args
 
@@ -305,6 +308,6 @@ class DistSHT:
         args = (
             jax.ShapeDtypeStruct((p.r_pad, p.grid.max_n_phi, K),
                                  jnp.dtype(self.dtype), sharding=sh),
-            c["m_flat"], c["phi0"], c["w"],
+            c["m_flat"], c["phi0"], c["w"], *c["anal_ops"],
         )
         return anal.lower(*args), args

@@ -12,8 +12,10 @@ algorithm possible.  We provide three grid families:
                          variant).  Approximate quadrature, mirroring the
                          paper's HEALPix error behaviour, TPU friendly.
   * ``healpix``       -- true HEALPix ring structure (n_phi = 4i in the
-                         polar caps).  Ragged; used by the bucketed CPU
-                         validation path only.
+                         polar caps).  Ragged; served by the device-resident
+                         ring-bucket phase stage (repro.core.phase) on every
+                         backend, with `ring_buckets` grouping rings by
+                         rounded-up FFT length.
 
 All geometry is computed with numpy in float64 at plan time; nothing here
 touches jax device state.
@@ -28,11 +30,110 @@ import numpy as np
 
 __all__ = [
     "RingGrid",
+    "FFTBucket",
+    "BucketLayout",
+    "ring_buckets",
     "gauss_legendre_grid",
     "healpix_ring_grid",
     "healpix_grid",
     "make_grid",
 ]
+
+
+# ---------------------------------------------------------------------------
+# FFT ring buckets (the ragged-grid phase-stage geometry)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class FFTBucket:
+    """One batched-FFT group of rings.
+
+    ``length`` is the bucket's FFT length B; every member ring's ``n_phi``
+    divides B, which is what makes the padded transform *exact*: a ring's
+    length-n spectrum embeds at stride B/n in the length-B spectrum
+    (synthesis), and zero-padding its n samples to B leaves the DFT bins at
+    stride B/n untouched (analysis).
+    """
+
+    length: int
+    rings: np.ndarray         # grid ring indices served by this bucket
+
+    @property
+    def n_rings(self) -> int:
+        return int(self.rings.shape[0])
+
+
+def ring_buckets(n_phi: np.ndarray,
+                 max_stretch: Optional[float] = None) -> tuple[FFTBucket, ...]:
+    """Group rings by rounded-up FFT length (libsharp-style bucketing).
+
+    Distinct ring lengths are processed in descending order; each length n
+    joins the smallest existing bucket length B with ``B % n == 0`` (exact
+    divisor embedding, see :class:`FFTBucket`), else opens its own bucket.
+    Every bucket length is therefore an actual ring length, so
+    ``B <= max(n_phi)`` always.
+
+    ``max_stretch`` caps ``B / n`` per ring: lower values mean less FFT
+    padding waste but more buckets (``max_stretch=1`` degenerates to one
+    bucket per distinct length).  The default (None) merges maximally --
+    on HEALPix the rings a bucket absorbs are the short polar-cap ones, so
+    the absolute waste stays small while the bucket count roughly halves.
+    """
+    n_phi = np.asarray(n_phi)
+    lengths: list[int] = []           # bucket length per bucket index
+    members: list[list[int]] = []     # distinct n values per bucket index
+    for n in np.unique(n_phi)[::-1].tolist():
+        n = int(n)
+        cands = [i for i, B in enumerate(lengths)
+                 if B % n == 0
+                 and (max_stretch is None or B <= max_stretch * n)]
+        if cands:
+            members[min(cands, key=lambda i: lengths[i])].append(n)
+        else:
+            lengths.append(n)
+            members.append([n])
+    return tuple(
+        FFTBucket(B, np.where(np.isin(n_phi, ns))[0])
+        for B, ns in zip(lengths, members))
+
+
+@dataclasses.dataclass(frozen=True)
+class BucketLayout:
+    """Static slot->bucket structure consumed by the phase stage.
+
+    ``slots[k]`` are the ring (or plan-slot) indices whose FFTs run in
+    bucket k at batched length ``lengths[k]``.  Pure numpy: safe to build at
+    plan time and to close over as static data inside jit/shard_map.
+    """
+
+    lengths: tuple[int, ...]
+    slots: tuple               # of np.ndarray index arrays
+
+    @property
+    def n_buckets(self) -> int:
+        return len(self.lengths)
+
+    @property
+    def fft_lengths(self) -> np.ndarray:
+        """(R,) per-slot FFT length (the slot's bucket length)."""
+        n = sum(len(s) for s in self.slots)
+        out = np.zeros(n, dtype=np.int64)
+        for B, sl in zip(self.lengths, self.slots):
+            out[np.asarray(sl)] = B
+        return out
+
+    def padded_frac(self, n_phi: np.ndarray) -> float:
+        """FFT-length inflation from bucketing: sum(B)/sum(n_phi) - 1."""
+        n_phi = np.asarray(n_phi)
+        tot_b = sum(B * len(sl) for B, sl in zip(self.lengths, self.slots))
+        tot_n = float(np.sum(n_phi))
+        return float(tot_b / tot_n - 1.0) if tot_n else 0.0
+
+    @classmethod
+    def from_buckets(cls, buckets: tuple[FFTBucket, ...]) -> "BucketLayout":
+        return cls(tuple(b.length for b in buckets),
+                   tuple(np.asarray(b.rings) for b in buckets))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +175,27 @@ class RingGrid:
     def ring_areas(self) -> np.ndarray:
         """Total quadrature weight per ring (weight * n_phi)."""
         return self.weights * self.n_phi
+
+    def fft_buckets(self, max_stretch: Optional[float] = None
+                    ) -> tuple["FFTBucket", ...]:
+        """Ring-bucket decomposition of the FFT/phase stage (one bucket for
+        uniform grids; libsharp-style rounded-up groups for ragged ones)."""
+        if self.uniform:
+            return (FFTBucket(self.max_n_phi, np.arange(self.n_rings)),)
+        return ring_buckets(self.n_phi, max_stretch)
+
+    def bucket_lengths(self, max_stretch: Optional[float] = None
+                       ) -> np.ndarray:
+        """(R,) per-ring batched-FFT length under bucketing."""
+        return BucketLayout.from_buckets(
+            self.fft_buckets(max_stretch)).fft_lengths
+
+    def bucket_permutation(self, max_stretch: Optional[float] = None
+                           ) -> np.ndarray:
+        """(R,) ring permutation ordering rings bucket-major (stable within
+        a bucket), so bucket members are contiguous."""
+        return np.concatenate(
+            [b.rings for b in self.fft_buckets(max_stretch)])
 
     def validate(self) -> None:
         assert self.cos_theta.ndim == 1

@@ -1,0 +1,367 @@
+"""Pluggable FFT/phase stage of the spherical harmonic transforms.
+
+Every SHT backend shares the same two-stage structure (paper Alg. 1-2):
+a Legendre stage producing/consuming per-ring Fourier coefficients
+Delta_m(r), and a *phase stage* turning them into ring samples (synthesis,
+eq. 11) or back (analysis, eq. 14).  This module is the single home of
+that phase stage, with two device-resident engines:
+
+``uniform``
+    One batched real FFT over all rings (rfft/irfft of the shared n_phi),
+    with alias folding of m into the half-spectrum.  The production path
+    for Gauss-Legendre and ring-uniform HEALPix grids.
+
+``bucket``
+    The ragged-grid (true HEALPix) engine: rings are grouped by rounded-up
+    FFT length into buckets (`repro.core.grids.ring_buckets`, libsharp
+    style) and each bucket runs ONE batched complex FFT.  Exactness under
+    padding comes from the divisor embedding: ring r with n = n_phi(r)
+    samples lives in a bucket of length B with n | B, so
+
+      synthesis  -- its alias-folded length-n spectrum is scattered at
+                    stride B/n into the length-B spectrum; the length-B
+                    inverse FFT then *periodically repeats* the ring's n
+                    samples, and a mask keeps the first n;
+      analysis   -- its n samples are zero-padded to B; the length-B
+                    forward FFT evaluated at bins (m mod n) * (B/n) equals
+                    the length-n DFT at bins (m mod n) exactly.
+
+    The scatter/gather index maps are pure geometry, precomputed at plan
+    time (`bucket_bin_maps`) and served from the signature-keyed cache.
+
+Both engines are expressed as trace-friendly functions taking the ring
+geometry (phi0, weights, n_phi) and the index maps as *arguments*, so the
+same code serves three callers:
+
+  * the serial engine (`core.sht.SHT`) via the `UniformPhase`/`BucketPhase`
+    classes built by :func:`make_phase` (geometry closed over as numpy
+    constants -- free under jit);
+  * the Pallas backends (`core.transform`), which reuse the serial plan's
+    phase object after their kernel Legendre stage;
+  * the distributed transform (`core.dist_sht`), which passes *sharded*
+    geometry/index-map operands inside shard_map (every shard runs the
+    same bucket structure by construction -- see SHTPlan.local_fft_layout).
+
+Conventions match `core.sht`: delta rows follow ``m_vals`` (entries with
+m < 0 are padding and contribute nothing), maps are ``(R, n_phi_max, K)``
+real with samples beyond a ring's n_phi zeroed, and analysis output has
+the quadrature weights already applied.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cache as plancache
+from repro.core.grids import BucketLayout, RingGrid
+
+__all__ = [
+    "uniform_synth", "uniform_anal", "bucket_synth", "bucket_anal",
+    "bucket_bin_maps", "phase_factors",
+    "PhaseStage", "UniformPhase", "BucketPhase", "make_phase",
+]
+
+
+def _complex_dtype(dtype):
+    return jnp.complex128 if jnp.dtype(dtype) == jnp.float64 else jnp.complex64
+
+
+def phase_factors(m_vals, phi0, sign: float, dtype) -> jnp.ndarray:
+    """e^{sign * i * m * phi0(r)} as (M, R) complex; rows with m < 0 are 0.
+
+    ``phi0`` may be a numpy constant (serial path) or a traced shard-local
+    operand (dist path).
+    """
+    m = np.asarray(m_vals)
+    msafe = np.maximum(m, 0).astype(np.float64)
+    ph = jnp.exp(sign * 1j * msafe[:, None] * jnp.asarray(phi0)[None, :])
+    ph = ph.astype(_complex_dtype(dtype))
+    if np.any(m < 0):
+        ph = jnp.where(jnp.asarray(m >= 0)[:, None], ph, 0.0)
+    return ph
+
+
+# ---------------------------------------------------------------------------
+# uniform engine: one batched real FFT over all rings
+# ---------------------------------------------------------------------------
+
+
+def uniform_synth(delta, m_vals, n: int, phi0, *, dtype,
+                  scale_rows=None) -> jnp.ndarray:
+    """Synthesis phase stage on a uniform grid.
+
+    delta: (M, R, K) complex Delta^A rows following ``m_vals`` ->
+    maps (R, n, K) real.  Alias-folds every m into the rfft half-spectrum
+    (bins past n/2 wrap to the conjugate half; the Nyquist bin doubles its
+    real part).  ``scale_rows`` optionally scales rings on the way out
+    (the dist path's dummy-ring mask).
+    """
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    dp = delta.astype(cdt) * phase_factors(m, phi0, +1.0, dtype)[..., None]
+    b = np.maximum(m, 0) % n
+    hi = b > n // 2                                # conjugate wrap
+    bins = np.where(hi, n - b, b)
+    nyq = 2 * b == n                               # Nyquist: real part doubles
+    half = n // 2 + 1
+    vals = jnp.where(jnp.asarray(hi)[:, None, None], jnp.conj(dp), dp)
+    vals = jnp.where(jnp.asarray(nyq)[:, None, None],
+                     2.0 * jnp.real(vals).astype(cdt), vals)
+    H = jnp.zeros((half,) + dp.shape[1:], cdt)
+    H = H.at[jnp.asarray(bins)].add(vals)
+    H = jnp.moveaxis(H, 0, 1)                      # (R, half, K)
+    s = (jnp.fft.irfft(H, n=n, axis=1) * n).astype(dtype)
+    if scale_rows is not None:
+        s = s * scale_rows[:, None, None]
+    return s
+
+
+def uniform_anal(maps, m_vals, n: int, phi0, weights, *, dtype) -> jnp.ndarray:
+    """Analysis phase stage on a uniform grid.
+
+    maps: (R, n, K) real -> weighted Delta^S (M, R, K) complex, rows
+    following ``m_vals`` (quadrature ``weights`` applied per ring).
+    """
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    F = jnp.fft.rfft(maps.astype(dtype), axis=1)   # (R, n//2+1, K)
+    b = np.maximum(m, 0) % n
+    hi = b > n // 2
+    bins = np.where(hi, n - b, b)
+    Fm = F[:, jnp.asarray(bins), :]                # (R, M, K)
+    Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
+    Fm = jnp.moveaxis(Fm, 1, 0).astype(cdt)        # (M, R, K)
+    w = jnp.asarray(weights).astype(dtype)
+    return Fm * phase_factors(m, phi0, -1.0, dtype)[..., None] \
+        * w[None, :, None]
+
+
+# ---------------------------------------------------------------------------
+# bucket engine: one batched complex FFT per rounded-up ring-length group
+# ---------------------------------------------------------------------------
+
+
+def bucket_bin_maps(m_vals, n_phi, bucket_len):
+    """Alias-fold scatter/gather bin maps for the bucket engine.
+
+    Returns ``(pos, neg)`` int32 arrays of shape (M, R): ring r's +m
+    contribution lands in bin ``(m mod n_r) * (B_r / n_r)`` of its bucket's
+    length-B_r spectrum, the conjugate -m contribution in
+    ``((-m) mod n_r) * (B_r / n_r)``.  Pure numpy -- precomputed at plan
+    time and cached by plan signature.
+    """
+    m = np.maximum(np.asarray(m_vals), 0)[:, None]
+    n = np.asarray(n_phi)[None, :]
+    stride = np.asarray(bucket_len)[None, :] // n  # exact by bucket invariant
+    fold = m % n
+    pos = fold * stride
+    neg = ((n - fold) % n) * stride
+    return pos.astype(np.int32), neg.astype(np.int32)
+
+
+def bucket_synth(delta, layout: BucketLayout, pos, neg, n_phi, phi0, m_vals,
+                 *, out_width: int, dtype, scale_rows=None) -> jnp.ndarray:
+    """Synthesis phase stage on a ragged grid, one batched FFT per bucket.
+
+    delta: (M, R, K) complex -> maps (R, out_width, K) real, padded with
+    zeros beyond each ring's n_phi.  ``pos``/``neg`` are the (M, R) bin
+    maps from :func:`bucket_bin_maps`; ``n_phi``/``phi0`` may be traced
+    shard-local operands (dist) or numpy constants (serial).
+    """
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    dp = delta.astype(cdt) * phase_factors(m, phi0, +1.0, dtype)[..., None]
+    M, R, K = dp.shape
+    # m = 0 must not receive its own conjugate (it would double-count);
+    # padding rows (m < 0) are already zeroed by the phase factor.
+    neg_ok = jnp.asarray(m > 0)[:, None, None]
+    nn = jnp.asarray(n_phi)
+    out = jnp.zeros((R, out_width, K), dtype)
+    for B, sl in zip(layout.lengths, layout.slots):
+        sl = np.asarray(sl)
+        Rb = sl.shape[0]
+        if Rb == 0:
+            continue
+        dp_b = dp[:, sl, :]                         # (M, Rb, K)
+        row = np.arange(Rb, dtype=np.int32)[None, :] * B
+        S = jnp.zeros((Rb * B, K), cdt)
+        S = S.at[jnp.reshape(row + pos[:, sl], (-1,))].add(
+            dp_b.reshape(M * Rb, K))
+        S = S.at[jnp.reshape(row + neg[:, sl], (-1,))].add(
+            jnp.where(neg_ok, jnp.conj(dp_b), 0.0).reshape(M * Rb, K))
+        s = jnp.fft.ifft(S.reshape(Rb, B, K), axis=1) * B
+        # the length-B inverse FFT repeats each ring's n samples B/n times;
+        # keep the first period, zero the padding
+        keep = (jnp.arange(B)[None, :] < nn[sl][:, None]).astype(dtype)
+        samp = jnp.real(s).astype(dtype) * keep[:, :, None]
+        if B < out_width:
+            samp = jnp.pad(samp, ((0, 0), (0, out_width - B), (0, 0)))
+        out = out.at[jnp.asarray(sl)].set(samp)
+    if scale_rows is not None:
+        out = out * scale_rows[:, None, None]
+    return out
+
+
+def bucket_anal(maps, layout: BucketLayout, pos, n_phi, phi0, weights,
+                m_vals, *, dtype) -> jnp.ndarray:
+    """Analysis phase stage on a ragged grid, one batched FFT per bucket.
+
+    maps: (R, W, K) real (padded) -> weighted Delta^S (M, R, K) complex.
+    Samples at or beyond each ring's n_phi are masked before the FFT, so
+    garbage in the padding region cannot alias into the result.
+    """
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    M = m.shape[0]
+    R, W, K = maps.shape
+    maps = maps.astype(dtype)
+    nn = jnp.asarray(n_phi)
+    delta = jnp.zeros((M, R, K), cdt)
+    for B, sl in zip(layout.lengths, layout.slots):
+        sl = np.asarray(sl)
+        if sl.shape[0] == 0:
+            continue
+        x = maps[sl]                                # (Rb, W, K)
+        x = x[:, :B, :] if B <= W else \
+            jnp.pad(x, ((0, 0), (0, B - W), (0, 0)))
+        keep = (jnp.arange(B)[None, :] < nn[sl][:, None]).astype(dtype)
+        F = jnp.fft.fft(x * keep[:, :, None], axis=1)          # (Rb, B, K)
+        idx = jnp.moveaxis(jnp.asarray(pos[:, sl]), 0, 1)      # (Rb, M)
+        Fm = jnp.take_along_axis(F, idx[..., None], axis=1)    # (Rb, M, K)
+        delta = delta.at[:, jnp.asarray(sl), :].set(
+            jnp.moveaxis(Fm, 1, 0).astype(cdt))
+    w = jnp.asarray(weights).astype(dtype)
+    return delta * phase_factors(m, phi0, -1.0, dtype)[..., None] \
+        * w[None, :, None]
+
+
+# ---------------------------------------------------------------------------
+# grid-bound phase-stage objects (the serial/Pallas integration point)
+# ---------------------------------------------------------------------------
+
+
+class PhaseStage:
+    """Common surface of the grid-bound phase engines.
+
+    ``synth``: (M, R, K) complex Delta -> (R, n_phi_max, K) real maps.
+    ``anal``:  (R, n_phi_max, K) real maps -> (M, R, K) weighted Delta.
+    """
+
+    kind: str = "?"
+
+    def synth(self, delta) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def anal(self, maps) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @property
+    def fft_lengths(self) -> np.ndarray:
+        """(R,) per-ring batched FFT length (the cost model's input)."""
+        raise NotImplementedError
+
+    def describe(self) -> dict:
+        raise NotImplementedError
+
+
+class UniformPhase(PhaseStage):
+    """Batched-rfft phase stage for uniform grids."""
+
+    kind = "uniform"
+
+    def __init__(self, grid: RingGrid, m_vals, dtype):
+        assert grid.uniform
+        self.n = grid.max_n_phi
+        self._phi0 = grid.phi0
+        self._weights = grid.weights
+        self._m_vals = np.asarray(m_vals)
+        self._dtype = dtype
+        self._n_rings = grid.n_rings
+        assert self.n >= 2 * int(self._m_vals.max()), \
+            "uniform FFT stage requires n_phi >= 2*m_max"
+
+    def synth(self, delta) -> jnp.ndarray:
+        return uniform_synth(delta, self._m_vals, self.n, self._phi0,
+                             dtype=self._dtype)
+
+    def anal(self, maps) -> jnp.ndarray:
+        return uniform_anal(maps, self._m_vals, self.n, self._phi0,
+                            self._weights, dtype=self._dtype)
+
+    @property
+    def fft_lengths(self) -> np.ndarray:
+        return np.full(self._n_rings, self.n, dtype=np.int64)
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "n_buckets": 1,
+                "bucket_lengths": [self.n], "padded_frac": 0.0}
+
+
+class BucketPhase(PhaseStage):
+    """Ring-bucket phase stage for ragged grids (index maps from the cache)."""
+
+    kind = "bucket"
+
+    def __init__(self, grid: RingGrid, m_vals, dtype, payload: dict):
+        self._grid = grid
+        self._m_vals = np.asarray(m_vals)
+        self._dtype = dtype
+        nb = int(payload["n_buckets"])
+        self.layout = BucketLayout(
+            tuple(int(v) for v in payload["lengths"]),
+            tuple(np.asarray(payload[f"slots_{k}"]) for k in range(nb)))
+        self._pos = np.asarray(payload["pos"])
+        self._neg = np.asarray(payload["neg"])
+
+    def synth(self, delta) -> jnp.ndarray:
+        return bucket_synth(delta, self.layout, self._pos, self._neg,
+                            self._grid.n_phi, self._grid.phi0, self._m_vals,
+                            out_width=self._grid.max_n_phi,
+                            dtype=self._dtype)
+
+    def anal(self, maps) -> jnp.ndarray:
+        return bucket_anal(maps, self.layout, self._pos, self._grid.n_phi,
+                           self._grid.phi0, self._grid.weights, self._m_vals,
+                           dtype=self._dtype)
+
+    @property
+    def fft_lengths(self) -> np.ndarray:
+        return self.layout.fft_lengths
+
+    def describe(self) -> dict:
+        return {"kind": self.kind, "n_buckets": self.layout.n_buckets,
+                "bucket_lengths": list(self.layout.lengths),
+                "padded_frac": self.layout.padded_frac(self._grid.n_phi)}
+
+
+def make_phase(grid: RingGrid, m_max: int, dtype, *, cache: str = "memory",
+               cache_dir: Optional[str] = None,
+               max_stretch: Optional[float] = None) -> PhaseStage:
+    """Build the phase stage for a grid: uniform engine for uniform grids,
+    ring-bucket engine (index maps through the signature-keyed precompute
+    cache) for ragged ones."""
+    m_vals = np.arange(m_max + 1)
+    if grid.uniform:
+        return UniformPhase(grid, m_vals, dtype)
+
+    def build() -> dict:
+        layout = BucketLayout.from_buckets(grid.fft_buckets(max_stretch))
+        pos, neg = bucket_bin_maps(m_vals, grid.n_phi, layout.fft_lengths)
+        payload = {
+            "n_buckets": np.array(layout.n_buckets),
+            "lengths": np.asarray(layout.lengths, dtype=np.int64),
+            "pos": pos, "neg": neg,
+        }
+        for k, sl in enumerate(layout.slots):
+            payload[f"slots_{k}"] = np.asarray(sl)
+        return payload
+
+    key = plancache.signature_key(
+        "phase", grid_nphi=grid.n_phi, grid_phi0=grid.phi0, m_max=m_max,
+        max_stretch=max_stretch)
+    payload = plancache.get_or_build(key, build, cache=cache,
+                                     directory=cache_dir)
+    return BucketPhase(grid, m_vals, dtype, payload)

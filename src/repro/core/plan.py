@@ -12,6 +12,13 @@ arrays consumed by ``dist_sht``:
 * **ring distribution**: rings are dealt to shards as blocks of mirror pairs
   (north_i, south_mirror_i) so each shard can fold about the equator; dummy
   rings (weight 0) pad R to a multiple of the shard count.
+* **bucket-aware dealing (ragged grids)**: for variable-n_phi grids the
+  mirror pairs are dealt *per FFT bucket* (grids.ring_buckets), each
+  bucket's pair list padded to a multiple of the shard count, so every
+  shard owns the same number of rings from every bucket.  That gives each
+  shard balanced Legendre FLOPs *and* balanced FFT work (paper §4.1), and
+  -- crucially for shard_map's single-program model -- an *identical*
+  local slot->bucket structure (`local_fft_layout`) on every shard.
 
 The plan is pure geometry: it never touches jax device state and can be
 built under `jax.eval_shape` / dry-run tracing.
@@ -25,7 +32,7 @@ import functools
 import numpy as np
 
 from repro.core import legendre
-from repro.core.grids import RingGrid
+from repro.core.grids import BucketLayout, RingGrid
 
 __all__ = ["SHTPlan", "minmax_m_order", "Plan", "make_plan"]
 
@@ -130,8 +137,53 @@ class SHTPlan:
     # ---- ring axis -----------------------------------------------------------
 
     @functools.cached_property
+    def _pairs(self) -> np.ndarray:
+        """(n_pairs, 2) mirror pairs (north, south); equator south = -1."""
+        R = self.grid.n_rings
+        out = [(i, R - 1 - i) for i in range(R // 2)]
+        if R % 2 == 1:
+            out.append((R // 2, -1))
+        return np.asarray(out, dtype=np.int64)
+
+    @functools.cached_property
+    def _bucket_deal(self):
+        """Bucket-aware pair dealing for ragged grids.
+
+        Returns ``(bucket_lengths, counts, ring_order)``: pairs are grouped
+        by their FFT bucket (a pair's bucket is its north ring's -- mirrors
+        share n_phi on symmetric grids, asserted), each bucket's pair list
+        is dealt round-robin and padded to ``counts[k]`` pairs per shard,
+        and the plan slot order is shard-major with buckets contiguous
+        inside each shard -- so every shard sees the identical local
+        slot->bucket structure (shard_map runs one program).
+        """
+        buckets = self.grid.fft_buckets()
+        R = self.grid.n_rings
+        ring2b = np.empty(R, dtype=np.int64)
+        for k, b in enumerate(buckets):
+            ring2b[b.rings] = k
+        pairs = self._pairs
+        pb = ring2b[pairs[:, 0]]
+        south = pairs[:, 1]
+        assert np.all((south < 0)
+                      | (ring2b[np.maximum(south, 0)] == pb)), \
+            "mirror pair spans two FFT buckets (grid not symmetric?)"
+        n = self.n_shards
+        per_bucket = [np.where(pb == k)[0] for k in range(len(buckets))]
+        counts = [-(-len(p) // n) for p in per_bucket]
+        order = np.full((n, sum(counts), 2), -1, dtype=np.int64)
+        for k, p in enumerate(per_bucket):
+            off = sum(counts[:k])
+            for j, pair_idx in enumerate(p):
+                order[j % n, off + j // n] = pairs[pair_idx]
+        return [b.length for b in buckets], counts, order.reshape(-1)
+
+    @functools.cached_property
     def n_pairs_pad(self) -> int:
-        """Mirror-pair count padded to a multiple of n_shards."""
+        """Mirror-pair count padded to a multiple of n_shards (ragged
+        grids: padded per bucket, see ``_bucket_deal``)."""
+        if not self.grid.uniform:
+            return self.n_shards * sum(self._bucket_deal[1])
         n_pairs = (self.grid.n_rings + 1) // 2
         return -(-n_pairs // self.n_shards) * self.n_shards
 
@@ -143,8 +195,11 @@ class SHTPlan:
         southern mirror.  An odd equator ring is a pair with a dummy south;
         padding pairs are (dummy, dummy).  Every shard owns r_local/2
         consecutive *pairs*, which is what the fold optimisation and the
-        tiled all_to_all both want.
+        tiled all_to_all both want.  Ragged grids deal pairs bucket-aware
+        (``_bucket_deal``) so FFT work is balanced too.
         """
+        if not self.grid.uniform:
+            return self._bucket_deal[2]
         R = self.grid.n_rings
         out = np.full(2 * self.n_pairs_pad, -1, dtype=np.int64)
         for i in range(R // 2):
@@ -153,6 +208,36 @@ class SHTPlan:
         if R % 2 == 1:
             out[2 * (R // 2)] = R // 2     # equator (dummy south partner)
         return out
+
+    @functools.cached_property
+    def local_fft_layout(self) -> BucketLayout:
+        """Static local-slot -> FFT-bucket structure, identical on every
+        shard (uniform grids: one bucket over all local slots)."""
+        if self.grid.uniform:
+            return BucketLayout((self.grid.max_n_phi,),
+                                (np.arange(self.r_local),))
+        lengths, counts, _ = self._bucket_deal
+        slots, off = [], 0
+        for c in counts:
+            slots.append(np.arange(2 * off, 2 * (off + c)))
+            off += c
+        return BucketLayout(tuple(lengths), tuple(slots))
+
+    @functools.cached_property
+    def slot_fft_len(self) -> np.ndarray:
+        """(R_pad,) batched-FFT length of each plan slot's bucket."""
+        return np.tile(self.local_fft_layout.fft_lengths, self.n_shards)
+
+    @functools.cached_property
+    def fft_bin_maps(self) -> tuple[np.ndarray, np.ndarray]:
+        """(pos, neg) (R_pad, Mp) int32 alias-fold bin maps in plan slot
+        order -- `phase.bucket_bin_maps` over ``m_flat`` and the slot
+        geometry, shaped rings-first so they shard as stage-2 operands."""
+        from repro.core.phase import bucket_bin_maps
+        g = self.ring_geometry
+        pos, neg = bucket_bin_maps(self.m_flat, g["n_phi"],
+                                   self.slot_fft_len)
+        return np.ascontiguousarray(pos.T), np.ascontiguousarray(neg.T)
 
     @property
     def r_pad(self) -> int:
@@ -178,7 +263,10 @@ class SHTPlan:
         sin = np.sqrt(1.0 - cos * cos)
         w = np.where(dummy, 0.0, g.weights[safe])
         phi0 = np.where(dummy, 0.0, g.phi0[safe])
-        nphi = np.where(dummy, g.max_n_phi, g.n_phi[safe])
+        # dummy slots adopt their bucket's FFT length so the bucket engine's
+        # stride arithmetic stays exact (their output is weight-masked away)
+        dummy_n = g.max_n_phi if g.uniform else self.slot_fft_len
+        nphi = np.where(dummy, dummy_n, g.n_phi[safe])
         return {"cos_theta": cos, "sin_theta": sin, "weights": w,
                 "phi0": phi0, "n_phi": nphi, "valid": ~dummy}
 

@@ -14,6 +14,11 @@ This module is the *oracle*: float64 by default, used by every test.  The
 Pallas kernels (repro.kernels) and the distributed transforms
 (repro.core.dist_sht) are validated against it.
 
+The FFT stage is NOT implemented here: it lives in the pluggable phase
+layer (`repro.core.phase`), which picks the batched-uniform engine or the
+ring-bucket engine (true ragged HEALPix) per grid.  The oracle, the Pallas
+backends and the distributed transform all share that one implementation.
+
 Conventions
 -----------
 * Fields are real; only m >= 0 coefficients are stored (a_{l,-m} = (-1)^m
@@ -22,7 +27,8 @@ Conventions
   entries with l < m must be zero.  ``K`` is the number of simultaneous maps
   (the batched/multi-map transform -- the paper's Monte-Carlo target
   workload and our MXU lever).
-* maps layout: ``(R, n_phi_max, K)`` real for uniform grids.
+* maps layout: ``(R, n_phi_max, K)`` real; ragged grids are padded with
+  zeros beyond each ring's n_phi.
 """
 
 from __future__ import annotations
@@ -85,6 +91,10 @@ class SHT:
     m_max: int
     dtype: str = "float64"
     fold: bool = False
+    #: cache policy for the phase stage's precomputed index maps
+    #: ("off" | "memory" | "disk"), and the disk-tier directory override.
+    phase_cache: str = "memory"
+    phase_cache_dir: Optional[str] = None
 
     def __post_init__(self):
         assert self.m_max <= self.l_max
@@ -110,98 +120,16 @@ class SHT:
     def _m_all(self) -> np.ndarray:
         return np.arange(self.m_max + 1)
 
-    # -- FFT stage ----------------------------------------------------------
+    # -- FFT/phase stage (pluggable, shared with Pallas and dist paths) -----
 
-    def _phase(self, sign: float) -> jnp.ndarray:
-        """e^{sign * i * m * phi0(r)} as (M, R) complex."""
-        m = np.arange(self.m_max + 1, dtype=np.float64)[:, None]
-        ph = sign * m * self.grid.phi0[None, :]
-        return jnp.asarray(np.exp(1j * ph))
-
-    def _synth_fft_uniform(self, delta: jnp.ndarray) -> jnp.ndarray:
-        """FFT stage of alm2map on a uniform grid.  delta: (M, R, K) complex
-        -> maps (R, n_phi, K) real.  Paper eq. 11 with alias folding."""
-        g = self.grid
-        n = g.max_n_phi
-        assert n >= 2 * self.m_max, "uniform FFT stage requires n_phi >= 2*m_max"
-        dp = delta * self._phase(+1.0)[..., None]     # apply e^{i m phi0}
-        M = self.m_max + 1
-        # Fold m into rfft bins b = m mod n; bins past n/2 wrap to the
-        # conjugate half.  For n >= 2*m_max+1 this is a plain pad.
-        ms = np.arange(M)
-        b = ms % n
-        hi = b > n // 2                                # conjugate wrap
-        bins = np.where(hi, n - b, b)
-        nyq = (2 * b == n)                             # Nyquist: real part doubles
-        half = n // 2 + 1
-        H = jnp.zeros((half,) + dp.shape[1:], dp.dtype)
-        vals = jnp.where(jnp.asarray(hi)[:, None, None], jnp.conj(dp), dp)
-        # Nyquist bin receives Delta_m + conj(Delta_m) = 2 Re Delta_m.
-        vals = jnp.where(jnp.asarray(nyq)[:, None, None],
-                         2.0 * jnp.real(vals).astype(dp.dtype), vals)
-        H = H.at[jnp.asarray(bins)].add(vals)
-        H = jnp.moveaxis(H, 0, 1)                      # (R, half, K)
-        s = jnp.fft.irfft(H, n=n, axis=1) * n
-        return jnp.real(s)
-
-    def _anal_fft_uniform(self, maps: jnp.ndarray) -> jnp.ndarray:
-        """FFT stage of map2alm on a uniform grid.  maps: (R, n_phi, K) real
-        -> Delta^S (M, R, K) complex (sample weights applied).
-        Paper eq. 14."""
-        g = self.grid
-        n = g.max_n_phi
-        F = jnp.fft.rfft(maps, axis=1)                 # (R, n//2+1, K)
-        M = self.m_max + 1
-        ms = np.arange(M)
-        b = ms % n
-        hi = b > n // 2
-        bins = np.where(hi, n - b, b)
-        Fm = F[:, jnp.asarray(bins), :]                # (R, M, K)
-        Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
-        Fm = jnp.moveaxis(Fm, 1, 0)                    # (M, R, K)
-        w = jnp.asarray(self.grid.weights)[None, :, None]
-        return Fm * self._phase(-1.0)[..., None] * w
-
-    # -- bucketed (true ragged-HEALPix) FFT stage, CPU validation path ------
-
-    def _synth_fft_ragged(self, delta: jnp.ndarray) -> np.ndarray:
-        """Per-bucket FFTs for variable n_phi (true HEALPix).  Host loop over
-        the distinct ring lengths; returns a padded (R, n_phi_max, K) array
-        with each ring's samples in [:n_phi(r)]."""
-        g = self.grid
-        dp = np.asarray(delta * self._phase(+1.0)[..., None])
-        R = g.n_rings
-        K = dp.shape[-1]
-        out = np.zeros((R, g.max_n_phi, K))
-        ms = np.arange(self.m_max + 1)
-        for n in np.unique(g.n_phi):
-            rows = np.where(g.n_phi == n)[0]
-            # alias fold all m into n bins (full complex spectrum)
-            G = np.zeros((len(rows), int(n), K), dtype=np.complex128)
-            d = dp[:, rows, :]                          # (M, rows, K)
-            for mval in ms:                             # host loop, small n_side only
-                G[:, mval % n, :] += d[mval]
-                if mval > 0:
-                    G[:, (-mval) % n, :] += np.conj(d[mval])
-            s = np.fft.ifft(G, axis=1) * n
-            out[rows, : int(n), :] = s.real
-        return out
-
-    def _anal_fft_ragged(self, maps: np.ndarray) -> np.ndarray:
-        g = self.grid
-        R = g.n_rings
-        K = maps.shape[-1]
-        M = self.m_max + 1
-        delta = np.zeros((M, R, K), dtype=np.complex128)
-        ms = np.arange(M)
-        for n in np.unique(g.n_phi):
-            rows = np.where(g.n_phi == n)[0]
-            F = np.fft.fft(maps[rows, : int(n), :], axis=1)  # (rows, n, K)
-            bins = ms % n
-            delta[:, rows, :] = np.moveaxis(F[:, bins, :], 1, 0)
-        ph = np.asarray(self._phase(-1.0))[..., None]
-        w = g.weights[None, :, None]
-        return delta * ph * w
+    @functools.cached_property
+    def phase(self):
+        """The grid's phase stage: batched-uniform or ring-bucket engine
+        (`repro.core.phase.make_phase`), device-resident either way."""
+        from repro.core.phase import make_phase
+        return make_phase(self.grid, self.m_max, self.dtype,
+                          cache=self.phase_cache,
+                          cache_dir=self.phase_cache_dir)
 
     # -- Legendre stage -----------------------------------------------------
 
@@ -261,9 +189,7 @@ class SHT:
         """
         assert alm.shape[:2] == (self.m_max + 1, self.l_max + 1), alm.shape
         delta = self._delta_from_alm(alm)
-        if self.grid.uniform:
-            return self._synth_fft_uniform(delta)
-        return jnp.asarray(self._synth_fft_ragged(delta))
+        return self.phase.synth(delta)
 
     def map2alm(self, maps: jnp.ndarray, iters: int = 0) -> jnp.ndarray:
         """Direct SHT (analysis).  maps (R, n_phi, K) -> alm (M, L, K).
@@ -275,10 +201,7 @@ class SHT:
         roughly an order of magnitude per pass (exact grids gain nothing).
         """
         assert maps.shape[0] == self.grid.n_rings, maps.shape
-        if self.grid.uniform:
-            delta_w = self._anal_fft_uniform(maps)
-        else:
-            delta_w = jnp.asarray(self._anal_fft_ragged(np.asarray(maps)))
+        delta_w = self.phase.anal(jnp.asarray(maps))
         alm = self._alm_from_delta(delta_w)
         for _ in range(iters):
             resid = maps - self.alm2map(alm)

@@ -20,13 +20,19 @@ Backends
     ``dtype="float64"`` -- the Pallas kernels compute in float32.
 ``pallas_vpu`` / ``pallas_mxu``
     The Pallas Legendre kernels (`repro.kernels`) for the recurrence stage,
-    with the engine's batched FFT stage.  Uniform grids only.  ``vpu`` is
-    the broadcast-FMA variant (small K); ``mxu`` contracts P panels on the
-    matrix unit (large K, the Monte-Carlo batch workload).
+    with the shared phase stage (`repro.core.phase`) for the FFTs --
+    batched-uniform or ring-bucket per grid, so ragged HEALPix runs here
+    too.  ``vpu`` is the broadcast-FMA variant (small K); ``mxu`` contracts
+    P panels on the matrix unit (large K, the Monte-Carlo batch workload).
 ``dist``
     The two-stage distributed transform (`repro.core.dist_sht.DistSHT`,
-    paper Algorithm 3) across every visible device.  Dense alm/maps in,
-    dense out -- plan packing/unpacking is handled internally.
+    paper Algorithm 3) across every visible device, with bucket-aware
+    ring-pair sharding on ragged grids.  Dense alm/maps in, dense out --
+    plan packing/unpacking is handled internally.
+
+Backends that are *not* eligible for a signature are reported with the
+reason they were skipped (``describe()["skipped"]`` / the ``report()``
+footer), so dispatch decisions stay debuggable.
 
 Dispatch modes
 --------------
@@ -65,7 +71,8 @@ from repro.core.grids import RingGrid
 from repro.core.sht import SHT, alm_mask, random_alm
 from repro.roofline import analysis as roofline
 
-__all__ = ["Plan", "make_plan", "available_backends", "clear_plan_cache"]
+__all__ = ["Plan", "make_plan", "available_backends", "backend_eligibility",
+           "clear_plan_cache"]
 
 BACKENDS = ("jnp", "pallas_vpu", "pallas_mxu", "dist")
 
@@ -88,25 +95,38 @@ def _pallas_ops():
     return kops
 
 
-def available_backends(grid: RingGrid, dtype: str,
-                       n_devices: Optional[int] = None) -> list[str]:
-    """Backends eligible for this signature, best-effort ordered.
+def backend_eligibility(grid: RingGrid, dtype: str,
+                        n_devices: Optional[int] = None
+                        ) -> dict[str, Optional[str]]:
+    """Why-or-why-not per backend: ``{backend: None | skip_reason}``.
 
     float64 restricts to the jnp oracle (the kernels compute in float32);
-    Pallas needs a uniform grid (the batched FFT stage); dist needs >= 2
-    devices.
+    dist needs >= 2 devices.  Grid raggedness is NOT a restriction: the
+    phase stage (`repro.core.phase`) serves every backend on every grid.
     """
-    out = ["jnp"]
-    if dtype == "float32" and grid.uniform:
+    out: dict[str, Optional[str]] = {b: None for b in BACKENDS}
+    if dtype != "float32":
+        reason = (f"kernels compute in float32 (plan dtype {dtype!r}); "
+                  "force mode='pallas_*' to accept the precision drop")
+        out["pallas_vpu"] = out["pallas_mxu"] = reason
+    else:
         try:
             _pallas_ops()
-            out += ["pallas_vpu", "pallas_mxu"]
-        except Exception:  # pallas not importable on this build
-            pass
+        except Exception as e:  # pallas not importable on this build
+            reason = f"pallas unavailable: {type(e).__name__}: {e}"
+            out["pallas_vpu"] = out["pallas_mxu"] = reason
     n_dev = jax.device_count() if n_devices is None else n_devices
-    if n_dev >= 2 and grid.uniform:
-        out.append("dist")
+    if n_dev < 2:
+        out["dist"] = f"needs >= 2 devices (visible: {n_dev})"
     return out
+
+
+def available_backends(grid: RingGrid, dtype: str,
+                       n_devices: Optional[int] = None) -> list[str]:
+    """Backends eligible for this signature (see `backend_eligibility`
+    for the skip reasons of the rest)."""
+    elig = backend_eligibility(grid, dtype, n_devices)
+    return [b for b in BACKENDS if elig[b] is None]
 
 
 def _complex_dtype(dtype: str):
@@ -144,16 +164,25 @@ class Plan:
         self._n_shards = n_shards
         self._signature_key = signature_key
         self._sht = SHT(grid, l_max=self.l_max, m_max=self.m_max,
-                        dtype=self.dtype, fold=self.fold)
+                        dtype=self.dtype, fold=self.fold,
+                        phase_cache=cache_kind, phase_cache_dir=cache_dir)
         self._m_vals = np.arange(self.m_max + 1)
         self._seeds_cache: Optional[tuple] = None
         self._dist = None
         self._compiled: dict = {}
         self.backends: dict = {}
         self.candidates: list[str] = []
+        self.skipped: dict = {}
         self.predicted_s: dict = {}
         self.measured_s: dict = {}
         self.cache_events: dict = {}
+
+    @property
+    def phase(self):
+        """The plan's FFT/phase stage (`repro.core.phase.PhaseStage`):
+        the uniform batched engine or the ring-bucket engine, shared by
+        every backend of this plan."""
+        return self._sht.phase
 
     # -- precompute (cached by signature) -----------------------------------
 
@@ -201,15 +230,13 @@ class Plan:
     # -- per-backend execution ------------------------------------------------
 
     def _synth_fn(self, backend: str):
-        """Synthesis callable alm -> maps for ``backend`` (jitted when the
-        grid is uniform; compiled executables are cached on the plan)."""
+        """Synthesis callable alm -> maps for ``backend`` (jitted; compiled
+        executables are cached on the plan)."""
         key = ("synth", backend)
         if key in self._compiled:
             return self._compiled[key]
         if backend == "jnp":
-            fn = self._sht.alm2map
-            if self.grid.uniform:
-                fn = jax.jit(fn)
+            fn = jax.jit(self._sht.alm2map)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             fn = self._make_pallas_synth(variant=backend.split("_")[1])
             fn = jax.jit(fn)
@@ -231,9 +258,7 @@ class Plan:
         if key in self._compiled:
             return self._compiled[key]
         if backend == "jnp":
-            fn = self._sht.map2alm
-            if self.grid.uniform:
-                fn = jax.jit(fn)
+            fn = jax.jit(self._sht.map2alm)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             fn = self._make_pallas_anal(variant=backend.split("_")[1])
             fn = jax.jit(fn)
@@ -270,7 +295,7 @@ class Plan:
             else:
                 flat = out[:, 0]                          # (M, R, 2K)
             delta = (flat[..., :K] + 1j * flat[..., K:]).astype(cdt)
-            return self._sht._synth_fft_uniform(delta).astype(self.dtype)
+            return self._sht.phase.synth(delta).astype(self.dtype)
 
         return fn
 
@@ -282,7 +307,7 @@ class Plan:
         pmm, pms, x32 = self._seeds()      # eager: built once, closed over
 
         def fn(maps):
-            dwc = self._sht._anal_fft_uniform(maps)       # (M, R, K) complex
+            dwc = self._sht.phase.anal(maps)              # (M, R, K) complex
             dw = jnp.concatenate(
                 [jnp.real(dwc), jnp.imag(dwc)], axis=-1).astype(jnp.float32)
             if self.fold:
@@ -309,6 +334,7 @@ class Plan:
             hw = (roofline.HW_HOST if jax.default_backend() == "cpu"
                   else roofline.HW_V5E)
         n_dev = self._n_shards or jax.device_count()
+        fl = self._sht.phase.fft_lengths        # per-bucket cost on ragged
         out = {}
         for b in self.candidates:
             out[b] = {
@@ -316,7 +342,8 @@ class Plan:
                     b, l_max=self.l_max, m_max=self.m_max,
                     n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
                     direction=d, hw=hw,
-                    n_devices=n_dev if b == "dist" else 1)
+                    n_devices=n_dev if b == "dist" else 1,
+                    fft_lengths=fl)
                 for d in ("synth", "anal")
             }
         return out
@@ -426,7 +453,8 @@ class Plan:
         it.
         """
         w = roofline.sht_work(self.l_max, self.m_max, self.grid.n_rings,
-                              self.grid.max_n_phi, self.K)
+                              self.grid.max_n_phi, self.K,
+                              fft_lengths=self._sht.phase.fft_lengths)
         return {
             "signature": {
                 "grid": self.grid.name, "n_rings": self.grid.n_rings,
@@ -437,6 +465,8 @@ class Plan:
             "mode": self.mode,
             "backends": dict(self.backends),
             "candidates": list(self.candidates),
+            "skipped": dict(self.skipped),
+            "phase": self._sht.phase.describe(),
             "predicted_s": self.predicted_s,
             "measured_s": self.measured_s,
             "work": w,
@@ -447,7 +477,8 @@ class Plan:
 
     def report(self) -> str:
         """Human-readable ``describe()`` (chosen kernel, predicted vs
-        measured time per direction, memory footprint)."""
+        measured time per direction, memory footprint, and *why* any
+        backend was skipped)."""
         d = self.describe()
         s = d["signature"]
         lines = [
@@ -458,6 +489,12 @@ class Plan:
             f"flops/dir~{d['work']['total_flops']:.3g}",
             f"  memory ~{d['memory']['total_bytes'] / 1e6:.2f} MB",
         ]
+        ph = d["phase"]
+        if ph["kind"] != "uniform":
+            lines.append(
+                f"  phase: {ph['kind']} x{ph['n_buckets']} buckets "
+                f"{ph['bucket_lengths']} (+{ph['padded_frac'] * 100:.1f}% "
+                f"fft padding)")
         for direction in ("synth", "anal"):
             chosen = d["backends"].get(direction, "?")
             pred = d["predicted_s"].get(chosen, {}).get(direction)
@@ -469,6 +506,8 @@ class Plan:
             if meas is not None and np.isfinite(meas):
                 bits.append(f"measured {meas * 1e6:.1f} us")
             lines.append("  ".join(bits))
+        for b, reason in d["skipped"].items():
+            lines.append(f"  skipped {b}: {reason}")
         ev = d["cache"]["events"]
         lines.append(f"  cache: {ev if ev else 'cold'} "
                      f"(mem_hits={d['cache']['memory_hits']} "
@@ -583,17 +622,20 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     plan = Plan(g, l_max, m_max, K, dtype, mode=mode, fold=fold,
                 cache_kind=cache_kind, cache_dir=cache_dir,
                 n_shards=n_shards, signature_key=sig_key)
-    cand = available_backends(g, dtype, n_shards)
+    elig = backend_eligibility(g, dtype, n_shards)
+    cand = [b for b in BACKENDS if elig[b] is None]
     if mode in BACKENDS and mode not in cand:
         # explicit request overrides the eligibility policy (e.g. pallas
         # under float64: runs in f32 internally) -- but not impossibility.
-        if mode.startswith("pallas") and g.uniform:
+        if mode.startswith("pallas") and dtype != "float32":
             cand = cand + [mode]
+            elig[mode] = None
         else:
             raise ValueError(
-                f"backend {mode!r} unavailable for this signature "
-                f"(candidates: {cand})")
+                f"backend {mode!r} unavailable for this signature: "
+                f"{elig[mode]} (candidates: {cand})")
     plan.candidates = cand
+    plan.skipped = {b: r for b, r in elig.items() if r is not None}
     plan._choose_backends()
     _PLANS[sig_key] = plan
     return plan

@@ -50,7 +50,7 @@ HW_HOST = Hardware("host-cpu", 2e11, 5e10, 1e10)
 
 
 def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
-             K: int) -> dict:
+             K: int, fft_lengths=None) -> dict:
     """Operation counts of one transform direction (paper §3 complexity).
 
     Returns a dict with:
@@ -60,15 +60,24 @@ def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
       ``accum_flops``      -- the a_lm / Delta_m contraction, 4K flops per
                               (l, m, ring) (complex FMA) -- this is the part
                               an MXU can take as a matmul;
-      ``fft_flops``        -- R batched real FFTs of length n_phi;
+      ``fft_flops``        -- batched ring FFTs.  With ``fft_lengths``
+                              (the per-ring bucket lengths of a ragged
+                              grid's phase stage) the cost is summed per
+                              bucketed ring instead of assuming one n_phi;
       ``bytes``            -- HBM traffic lower bound (alm + maps + Delta).
     """
     n_lm = (m_max + 1) * (l_max + 1) - m_max * (m_max + 1) // 2
     rec = 10.0 * n_lm * n_rings
     acc = 4.0 * n_lm * n_rings * K
-    fft = 5.0 * n_rings * n_phi * float(np.log2(max(n_phi, 2))) * K
+    if fft_lengths is not None:
+        fl = np.asarray(fft_lengths, dtype=np.float64)
+        fft = 5.0 * float(np.sum(fl * np.log2(np.maximum(fl, 2.0)))) * K
+        maps_elems = float(np.sum(fl)) * K
+    else:
+        fft = 5.0 * n_rings * n_phi * float(np.log2(max(n_phi, 2))) * K
+        maps_elems = float(n_rings * n_phi) * K
     byts = (16.0 * (m_max + 1) * (l_max + 1) * K      # alm (complex)
-            + 8.0 * n_rings * n_phi * K               # maps
+            + 8.0 * maps_elems                        # maps
             + 16.0 * (m_max + 1) * n_rings * K)       # Delta (complex)
     return {"n_lm": n_lm, "recurrence_flops": rec, "accum_flops": acc,
             "fft_flops": fft, "bytes": byts,
@@ -111,19 +120,21 @@ BACKEND_MODELS = {
 
 def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
                      n_phi: int, K: int, direction: str = "synth",
-                     hw: Hardware = HW_V5E, n_devices: int = 1) -> float:
+                     hw: Hardware = HW_V5E, n_devices: int = 1,
+                     fft_lengths=None) -> float:
     """Predicted seconds for one transform on ``backend`` (3-term model).
 
     compute = recurrence/vector + accumulation/(matrix or vector) + fft;
     memory = bytes / HBM bw;  collective (dist only) = all_to_all wire
     bytes / link bw.  The terms are summed (no overlap assumed -- the
     paper's kernels are serial stages), and ``anal_penalty`` is applied for
-    ``direction="anal"``.
+    ``direction="anal"``.  ``fft_lengths`` carries a ragged grid's
+    per-ring bucket lengths into the FFT term (see `sht_work`).
     """
     if backend not in BACKEND_MODELS:
         raise ValueError(f"unknown backend {backend!r}")
     m = BACKEND_MODELS[backend]
-    w = sht_work(l_max, m_max, n_rings, n_phi, K)
+    w = sht_work(l_max, m_max, n_rings, n_phi, K, fft_lengths=fft_lengths)
     vec_rate = hw.peak_flops * m.vector_eff
     t = w["recurrence_flops"] / vec_rate + w["fft_flops"] / vec_rate
     if m.matrix_eff > 0:

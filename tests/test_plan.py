@@ -67,6 +67,34 @@ def test_map_gather_scatter_roundtrip(l_max, n_shards):
     assert np.allclose(p.scatter_map(p.gather_map(maps)), maps)
 
 
+@settings(max_examples=8, deadline=None)
+@given(nside=st.sampled_from([4, 8, 16]), n_shards=st.sampled_from([2, 4, 8]))
+def test_ragged_plan_bucket_aware_dealing(nside, n_shards):
+    """Ragged grids: every ring dealt once, and every shard owns the SAME
+    local slot->bucket structure with balanced per-bucket ring counts
+    (shard_map's single-program requirement + paper §4.1 FFT balance)."""
+    g = grids.make_grid("healpix", nside=nside)
+    p = SHTPlan(g, 2 * nside, 2 * nside, n_shards)
+    ro = p.ring_order
+    real = ro[ro >= 0]
+    assert sorted(real.tolist()) == list(range(g.n_rings))   # coverage
+    assert p.r_pad % n_shards == 0 and p.r_local % 2 == 0
+    lay = p.local_fft_layout
+    assert sum(len(sl) for sl in lay.slots) == p.r_local
+    for s in range(n_shards):
+        loc = ro[s * p.r_local:(s + 1) * p.r_local]
+        for B, sl in zip(lay.lengths, lay.slots):
+            rings = loc[np.asarray(sl)]
+            rings = rings[rings >= 0]
+            # exact divisor embedding holds on every shard's every slot
+            assert np.all(B % g.n_phi[rings] == 0), (s, B)
+    # bin maps are consistent with slot geometry
+    pos, neg = p.fft_bin_maps
+    assert pos.shape == (p.r_pad, p.m_flat.shape[0])
+    blen = p.slot_fft_len
+    assert np.all(pos < blen[:, None]) and np.all(neg < blen[:, None])
+
+
 def test_mirror_pairs_adjacent():
     g = grids.make_grid("healpix_ring", nside=8)   # odd ring count
     p = SHTPlan(g, 16, 16, 4)

@@ -186,5 +186,73 @@ def test_available_backends_policy():
     assert repro.available_backends(g, "float64", 1) == ["jnp"]
     f32 = repro.available_backends(g, "float32", 1)
     assert "pallas_vpu" in f32 and "pallas_mxu" in f32
+    # raggedness is no longer a restriction: the bucket phase stage serves
+    # every backend
     ragged = grids.make_grid("healpix", nside=4)
-    assert repro.available_backends(ragged, "float32", 1) == ["jnp"]
+    assert repro.available_backends(ragged, "float32", 1) == f32
+    assert repro.available_backends(ragged, "float32", 4) == f32 + ["dist"]
+
+
+def test_backend_eligibility_reasons():
+    g = grids.make_grid("gl", l_max=16)
+    elig = transform.backend_eligibility(g, "float64", 1)
+    assert elig["jnp"] is None
+    assert "float32" in elig["pallas_vpu"]
+    assert "devices" in elig["dist"]
+    assert transform.backend_eligibility(g, "float32", 2)["dist"] is None
+
+
+def test_describe_reports_skip_reasons():
+    p = repro.make_plan("healpix", nside=4, K=1, dtype="float64", mode="jnp")
+    d = p.describe()
+    assert "float32" in d["skipped"]["pallas_vpu"]
+    assert all(b not in d["candidates"] for b in d["skipped"])
+    assert d["phase"]["kind"] == "bucket"
+    assert d["phase"]["n_buckets"] >= 2
+    r = p.report()
+    assert "skipped pallas_vpu" in r and "phase: bucket" in r
+
+
+# -- ragged (true HEALPix) grids through the full dispatch stack -------------
+
+
+def _healpix_oracle_pair(nside=4):
+    p = repro.make_plan("healpix", nside=nside, K=K, dtype="float64",
+                        mode="jnp")
+    alm = sht.random_alm(KEY, p.l_max, p.m_max, K=K)
+    maps = np.asarray(p.alm2map(alm))
+    return p, alm, maps, np.asarray(p.map2alm(jnp.asarray(maps)))
+
+
+@pytest.mark.parametrize("backend", ["jnp", "pallas_vpu", "pallas_mxu"])
+def test_healpix_backends_agree_with_f64_oracle(backend):
+    _, alm, maps_ref, alm_ref = _healpix_oracle_pair()
+    dtype = "float64" if backend == "jnp" else "float32"
+    p = repro.make_plan("healpix", nside=4, K=K, dtype=dtype, mode=backend)
+    tol = 1e-12 if dtype == "float64" else 1e-4
+    m = np.asarray(p.alm2map(alm.astype(jnp.complex64)
+                             if dtype == "float32" else alm))
+    assert np.max(np.abs(m - maps_ref)) / np.max(np.abs(maps_ref)) < tol
+    a = np.asarray(p.map2alm(jnp.asarray(maps_ref, p.dtype)))
+    assert np.max(np.abs(a - alm_ref)) / np.max(np.abs(alm_ref)) < tol
+
+
+def test_healpix_auto_mode_roundtrips():
+    p = repro.make_plan("healpix", nside=4, K=K, dtype="float32",
+                        mode="auto")
+    assert p.backends["synth"] in p.candidates
+    alm = sht.random_alm(KEY, p.l_max, p.m_max, K=K).astype(jnp.complex64)
+    err = spectra.d_err(alm, p.map2alm(p.alm2map(alm)))
+    assert err < 0.1                     # quadrature-level, not precision
+
+
+@pytest.mark.parametrize("kind", ["healpix", "healpix_ring"])
+def test_map2alm_iters_monotone_on_approximate_grids(kind):
+    """Jacobi refinement must reduce the quadrature error monotonically on
+    both HEALPix variants (paper §5 accuracy discussion)."""
+    p = repro.make_plan(kind, nside=8, dtype="float64", mode="jnp")
+    alm = sht.random_alm(KEY, p.l_max, p.m_max, K=1)
+    maps = p.alm2map(alm)
+    errs = [spectra.d_err(alm, p.map2alm(maps, iters=i)) for i in range(3)]
+    assert errs[1] < errs[0] / 3         # first pass bites hard
+    assert errs[2] < errs[1]             # and keeps shrinking
