@@ -10,6 +10,7 @@ stage -- including ``iters=1`` Jacobi refinement rows.
 Every transform goes through ``repro.make_plan``; no engine hand-wiring.
 """
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -17,7 +18,7 @@ import repro
 from repro.core import sht, spectra
 from benchmarks.common import emit, smoke, time_call
 
-KEY = None  # random_alm's deterministic default
+KEY = jax.random.PRNGKey(0)  # explicit: random_alm no longer defaults
 
 
 def _roundtrip(plan, alm, iters=0):
@@ -58,6 +59,26 @@ def main():
     alm = sht.random_alm(KEY, l_max, l_max).astype(np.complex64)
     dt, err = _roundtrip(plan, alm)
     emit(f"accuracy/gl/f32/lmax{l_max}", dt * 1e6, f"{err:.3e}")
+
+    # spin-2 (E/B <-> Q/U) accuracy per backend, alongside the scalar table
+    l_max = 16 if smoke() else 64
+    for backend, dtype in (("jnp", "float64"), ("pallas_vpu", "float32"),
+                           ("pallas_mxu", "float32")):
+        plan = repro.make_plan("gl", l_max=l_max, dtype=dtype, mode=backend,
+                               spin=2)
+        alm = sht.random_alm_spin(KEY, l_max, l_max)
+        if dtype == "float32":
+            alm = alm.astype(np.complex64)
+        dt, err = _roundtrip(plan, alm)
+        emit(f"accuracy/gl/spin2/{backend}/lmax{l_max}", dt * 1e6,
+             f"{err:.3e}")
+    nside = 8 if smoke() else 16
+    plan = repro.make_plan("healpix", nside=nside, l_max=nside,
+                           dtype="float64", mode="jnp", spin=2)
+    alm = sht.random_alm_spin(KEY, plan.l_max, plan.m_max)
+    dt, err = _roundtrip(plan, alm, iters=1)
+    emit(f"accuracy/healpix/spin2/nside{nside}/iters1", dt * 1e6,
+         f"{err:.3e}")
 
 
 if __name__ == "__main__":

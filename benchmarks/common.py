@@ -27,5 +27,11 @@ def time_call(fn, *args, warmup=1, iters=3, **kw):
     return float(np.median(ts))
 
 
+#: every emit() row of the current process, collected so benchmarks/run.py
+#: can write its machine-readable BENCH_<date>.json summary
+ROWS: list = []
+
+
 def emit(name, us_per_call, derived=""):
+    ROWS.append((str(name), float(us_per_call), str(derived)))
     print(f"{name},{us_per_call:.1f},{derived}")

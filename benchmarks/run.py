@@ -2,24 +2,67 @@
 
 Prints ``name,us_per_call,derived`` CSV lines.  Wall times are CPU-host
 times (TPU projections live in the roofline analysis; EXPERIMENTS.md).
+
+After the CSV, a machine-readable ``BENCH_<UTC-date>.json`` summary
+(name -> us_per_call, plus git rev and jax version) is written to the
+current directory so the perf trajectory is trackable across PRs.
 """
 
+import datetime
+import json
+import os
+import subprocess
 import sys
 import traceback
+
+
+def _git_rev() -> str:
+    try:
+        r = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=10,
+            cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+        return r.stdout.strip() or "unknown"
+    except Exception:
+        return "unknown"
+
+
+def write_summary(path=None) -> str:
+    """Dump the collected emit() rows as BENCH_<UTC-date>.json."""
+    import jax
+    from benchmarks import common
+    now = datetime.datetime.now(datetime.timezone.utc)
+    if path is None:
+        path = f"BENCH_{now.strftime('%Y-%m-%d')}.json"
+    payload = {
+        "generated_utc": now.isoformat(timespec="seconds"),
+        "git_rev": _git_rev(),
+        "jax_version": jax.__version__,
+        "smoke": bool(os.environ.get("REPRO_BENCH_SMOKE")),
+        "us_per_call": {name: us for name, us, _ in common.ROWS},
+        "derived": {name: d for name, _, d in common.ROWS if d},
+    }
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
 
 
 def main() -> None:
     from benchmarks import (bench_accuracy, bench_recurrence,
                             bench_scaling_model, bench_fft, bench_speedup,
-                            bench_breakdown, bench_dispatch)
+                            bench_breakdown, bench_dispatch, bench_spin)
     print("name,us_per_call,derived")
     for mod in (bench_accuracy, bench_recurrence, bench_scaling_model,
-                bench_fft, bench_speedup, bench_breakdown, bench_dispatch):
+                bench_fft, bench_speedup, bench_breakdown, bench_dispatch,
+                bench_spin):
         try:
             mod.main()
         except Exception as e:  # keep the harness going
             print(f"{mod.__name__}/ERROR,0.0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+    path = write_summary()
+    print(f"# summary: {path}", file=sys.stderr)
 
 
 if __name__ == '__main__':

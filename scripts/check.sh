@@ -25,12 +25,42 @@ import numpy as np
 import repro
 from repro.core import sht, spectra
 plan = repro.make_plan("healpix", nside=8, dtype="float64", mode="auto")
-alm = sht.random_alm(None, plan.l_max, plan.m_max)
+alm = sht.random_alm(seed=0, l_max=plan.l_max, m_max=plan.m_max)
 err = float(spectra.d_err(alm, plan.map2alm(plan.alm2map(alm), iters=1)))
 assert err < 0.05, f"healpix roundtrip regressed: d_err={err}"
 assert plan.describe()["phase"]["kind"] == "bucket"
 print(f"healpix nside=8 roundtrip d_err={err:.2e} backends={plan.backends}")
 PY
+
+echo "== spin-2 smoke (Q/U roundtrips through make_plan(..., spin=2)) =="
+PYTHONPATH=src python - <<'PY'
+import numpy as np
+import repro
+from repro.core import sht, spectra
+# exact grid: machine precision; pure-E must synthesise with zero B leakage
+plan = repro.make_plan("gl", l_max=32, dtype="float64", mode="auto", spin=2)
+alm = sht.random_alm_spin(seed=0, l_max=32, m_max=32)
+err = float(spectra.d_err(alm, plan.map2alm(plan.alm2map(alm))))
+assert err < 1e-12, f"gl spin-2 roundtrip regressed: d_err={err}"
+alm_e = alm.at[1].set(0.0)
+back = plan.map2alm(plan.alm2map(alm_e))
+leak = float(np.max(np.abs(np.asarray(back[1]))))
+assert leak < 1e-12, f"E->B leakage: {leak}"
+print(f"gl spin-2 roundtrip d_err={err:.2e}  E->B leakage={leak:.2e}")
+# ragged HEALPix spin-2 (quadrature accuracy + Jacobi refinement)
+plan = repro.make_plan("healpix", nside=8, dtype="float64", mode="auto",
+                       spin=2)
+alm = sht.random_alm_spin(seed=1, l_max=plan.l_max, m_max=plan.m_max)
+err = float(spectra.d_err(alm, plan.map2alm(plan.alm2map(alm), iters=1)))
+assert err < 0.05, f"healpix spin-2 roundtrip regressed: d_err={err}"
+print(f"healpix nside=8 spin-2 roundtrip d_err={err:.2e} "
+      f"backends={plan.backends}")
+PY
+
+echo "== spin benchmark (one-rep smoke) =="
+# standalone (also part of benchmarks.run below) so a spin-bench
+# regression fails the gate loudly -- run.py swallows per-module errors
+PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.bench_spin
 
 echo "== full benchmark set (one-rep smoke) =="
 PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.run

@@ -147,6 +147,38 @@ class DistSHT:
             n_re + s_re, n_im + s_im, n_re - s_re, n_im - s_im,
             m_loc, nx, ns, self._log_mu, l_max=p.l_max, dtype=dt)
 
+    # -- spin-2 stage 1 (two stacked Wigner-d recurrences per shard) -------------
+
+    def _stage1_synth_spin(self, e_re, e_im, b_re, b_im, m_loc):
+        """Per-shard spin-2 Legendre synthesis: (E, B) (m_local, L, K) ->
+        (dq_re, dq_im, du_re, du_im), each (m_local, R_pad, K)."""
+        p = self.plan
+        dt = jnp.dtype(self.dtype)
+        g = self._geom
+        if self.stage1 == "pallas":
+            from repro.kernels import ops as kops
+            return kops.delta_from_alm_spin_auto(
+                e_re, e_im, b_re, b_im, m_loc, g, l_max=p.l_max,
+                m_max=p.m_max, dtype=dt)
+        return legendre.delta_from_alm_spin(
+            e_re, e_im, b_re, b_im, m_loc, g["cos_theta"], g["sin_theta"],
+            l_max=p.l_max, m_max=p.m_max, dtype=dt)
+
+    def _stage1_anal_spin(self, dq_re, dq_im, du_re, du_im, m_loc):
+        """Per-shard spin-2 Legendre analysis: weighted (Delta_Q, Delta_U)
+        (m_local, R_pad, K) -> (e_re, e_im, b_re, b_im) (m_local, L, K)."""
+        p = self.plan
+        dt = jnp.dtype(self.dtype)
+        g = self._geom
+        if self.stage1 == "pallas":
+            from repro.kernels import ops as kops
+            return kops.alm_from_delta_spin_auto(
+                dq_re, dq_im, du_re, du_im, m_loc, g, l_max=p.l_max,
+                m_max=p.m_max, dtype=dt)
+        return legendre.alm_from_delta_spin(
+            dq_re, dq_im, du_re, du_im, m_loc, g["cos_theta"],
+            g["sin_theta"], l_max=p.l_max, m_max=p.m_max, dtype=dt)
+
     # -- stage 2: FFTs (ring-sharded), plan-slot m ordering ----------------------
     #
     # Both directions delegate to the pluggable phase layer
@@ -205,18 +237,21 @@ class DistSHT:
 
     # -- public transforms ---------------------------------------------------------
 
-    def _build(self, K: int):
+    def _build(self, K: int, spin: int = 0):
         cache = getattr(self, "_built", None)
         if cache is None:
             cache = {}
             object.__setattr__(self, "_built", cache)
-        if K in cache:
-            return cache[K]
-        out = self._build_uncached(K)
-        cache[K] = out
+        key = (spin, K)
+        if key in cache:
+            return cache[key]
+        out = self._build_uncached(K) if spin == 0 \
+            else self._build_spin_uncached(K)
+        cache[key] = out
         return out
 
-    def _build_uncached(self, K: int):
+    def _consts(self):
+        """Static per-slot operands closed over by the shard programs."""
         p = self.plan
         geom = self._geom
         phi0_all = jnp.asarray(geom["phi0"], self.dtype)
@@ -232,6 +267,12 @@ class DistSHT:
             n_all = jnp.asarray(geom["n_phi"], jnp.int32)
             synth_ops = (n_all, jnp.asarray(pos_all), jnp.asarray(neg_all))
             anal_ops = (n_all, jnp.asarray(pos_all))
+        return dict(phi0=phi0_all, w=w_all, valid=valid_all, m_flat=m_flat,
+                    synth_ops=synth_ops, anal_ops=anal_ops)
+
+    def _build_uncached(self, K: int):
+        consts = self._consts()
+        synth_ops, anal_ops = consts["synth_ops"], consts["anal_ops"]
 
         def synth_shard(a_re, a_im, m_loc, phi0_loc, valid_loc, *fft_ops):
             d_re, d_im = self._stage1_synth(a_re, a_im, m_loc)
@@ -260,8 +301,46 @@ class DistSHT:
             anal_shard, mesh=self.mesh,
             in_specs=(spec,) * (4 + len(anal_ops)),
             out_specs=(spec, spec)))
-        consts = dict(phi0=phi0_all, w=w_all, valid=valid_all, m_flat=m_flat,
-                      synth_ops=synth_ops, anal_ops=anal_ops)
+        return synth, anal, consts
+
+    def _build_spin_uncached(self, K: int):
+        """Spin-2 shard programs.  Identical two-stage structure: the
+        (Q, U) / (E, B) component pair is packed into the trailing channel
+        axis (2K complex channels through the phase stage, 4K real
+        channels through the ONE all_to_all), so the exchange count and
+        the bucketed phase stage are untouched."""
+        assert not self.fold, "fold is not supported for spin transforms"
+        consts = self._consts()
+        synth_ops, anal_ops = consts["synth_ops"], consts["anal_ops"]
+
+        def synth_shard(e_re, e_im, b_re, b_im, m_loc, phi0_loc, valid_loc,
+                        *fft_ops):
+            dq_re, dq_im, du_re, du_im = self._stage1_synth_spin(
+                e_re, e_im, b_re, b_im, m_loc)
+            packed = jnp.concatenate([dq_re, du_re, dq_im, du_im],
+                                     axis=-1)             # (m_local, R_pad, 4K)
+            packed = self._exchange(packed, to_rings=True)  # (Mp, r_local, 4K)
+            d_re, d_im = packed[..., :2 * K], packed[..., 2 * K:]
+            return self._synth_fft(d_re, d_im, phi0_loc, valid_loc, fft_ops)
+
+        def anal_shard(maps_loc, m_loc, phi0_loc, w_loc, *fft_ops):
+            # maps_loc: (r_local, n_phi, 2K) = [Q | U] channels
+            dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc, fft_ops)
+            packed = jnp.concatenate([dw_re, dw_im], axis=-1)   # (Mp, r, 4K)
+            packed = self._exchange(packed, to_rings=False)  # (m_local, R_pad, 4K)
+            dq_re, du_re = packed[..., :K], packed[..., K:2 * K]
+            dq_im, du_im = packed[..., 2 * K:3 * K], packed[..., 3 * K:]
+            return self._stage1_anal_spin(dq_re, dq_im, du_re, du_im, m_loc)
+
+        spec = self._spec_sharded()
+        synth = jax.jit(compat.shard_map(
+            synth_shard, mesh=self.mesh,
+            in_specs=(spec,) * (7 + len(synth_ops)),
+            out_specs=spec))
+        anal = jax.jit(compat.shard_map(
+            anal_shard, mesh=self.mesh,
+            in_specs=(spec,) * (4 + len(anal_ops)),
+            out_specs=(spec,) * 4))
         return synth, anal, consts
 
     def alm2map(self, alm_packed):
@@ -284,6 +363,29 @@ class DistSHT:
         a_re, a_im = anal(maps_plan.astype(self.dtype), c["m_flat"],
                           c["phi0"], c["w"], *c["anal_ops"])
         return a_re + 1j * a_im
+
+    def alm2map_spin(self, alm_packed_eb):
+        """Spin-2 synthesis: packed (E, B) alm (2, Mp, L, K) complex ->
+        (Q, U) maps (2, R_pad, n_phi, K) in plan ring order."""
+        K = alm_packed_eb.shape[-1]
+        synth, _, c = self._build(K, spin=2)
+        e, b = alm_packed_eb[0], alm_packed_eb[1]
+        args = [jnp.real(e), jnp.imag(e), jnp.real(b), jnp.imag(b)]
+        args = [a.astype(self.dtype) for a in args]
+        maps2 = synth(*args, c["m_flat"], c["phi0"], c["valid"],
+                      *c["synth_ops"])               # (R_pad, n_phi, 2K)
+        return jnp.stack([maps2[..., :K], maps2[..., K:]], axis=0)
+
+    def map2alm_spin(self, maps_plan_qu):
+        """Spin-2 analysis: (Q, U) maps (2, R_pad, n_phi, K) in plan ring
+        order -> packed (E, B) alm (2, Mp, L, K) complex."""
+        K = maps_plan_qu.shape[-1]
+        _, anal, c = self._build(K, spin=2)
+        maps2 = jnp.concatenate([maps_plan_qu[0], maps_plan_qu[1]],
+                                axis=-1).astype(self.dtype)
+        e_re, e_im, b_re, b_im = anal(maps2, c["m_flat"], c["phi0"],
+                                      c["w"], *c["anal_ops"])
+        return jnp.stack([e_re + 1j * e_im, b_re + 1j * b_im], axis=0)
 
     # -- shape-only entry points for the dry-run -----------------------------------
 

@@ -36,6 +36,7 @@ import numpy as np
 
 __all__ = [
     "log_mu",
+    "log_factorials",
     "scale_bits_for",
     "pmm_scaled",
     "recurrence_step",
@@ -43,6 +44,18 @@ __all__ = [
     "alm_from_delta",
     "delta_from_alm_folded",
     "alm_from_delta_folded",
+    # spin-aware harmonic core (Wigner-d generalisation)
+    "spin_seeds_scaled",
+    "recurrence_step_general",
+    "delta_from_alm_general",
+    "alm_from_delta_general",
+    "spin_pack_alm",
+    "spin_unpack_delta",
+    "spin_pack_delta",
+    "spin_unpack_alm",
+    "delta_from_alm_spin",
+    "alm_from_delta_spin",
+    "HarmonicCore",
 ]
 
 _LN2 = float(np.log(2.0))
@@ -363,3 +376,432 @@ def alm_from_delta_folded(sum_e_re, sum_e_im, sum_o_re, sum_o_im, m_vals,
         jnp.asarray(sum_o_re, dtype), jnp.asarray(sum_o_im, dtype), m, x,
         np.asarray(north_sin, np.float64), log_mu_m,
         l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+
+
+# ===========================================================================
+# Spin-aware harmonic core (the Wigner-d generalisation of the above).
+#
+# The scalar P_lm are the m' = 0 slice of the normalised Wigner-d functions
+#
+#     lam^{(m')}_lm(theta) = (-1)^m sqrt((2l+1)/4pi) d^l_{m,m'}(theta),
+#
+# and spin-s transforms need the m' = -s / m' = +s slices: for polarisation
+# (spin 2, Stokes Q/U <-> E/B) the spin-(+2) harmonics are built from
+# lam^{(-2)} and the spin-(-2) ones from lam^{(+2)} (the lambda^+/- pair of
+# libsharp is just their half-sum/half-difference).  All slices satisfy ONE
+# three-term recurrence in l (fixed m, m'), the standard Wigner-d recursion
+#
+#     lam_l = (a_l x + b_l) lam_{l-1} - c_l lam_{l-2},      l > l0,
+#     l0   = max(m, |m'|),
+#     D_l  = sqrt((l^2 - m^2)(l^2 - m'^2)),
+#     a_l  = l sqrt(4l^2 - 1) / D_l,
+#     b_l  = -m m' sqrt(4l^2 - 1) / ((l-1) D_l),
+#     c_l  = sqrt((2l+1)/(2l-3)) l D_{l-1} / ((l-1) D_l),
+#
+# which reduces exactly to the scalar recurrence at m' = 0 (b_l = 0,
+# a_l = beta_{l,m}, c_l = beta_{l,m}/beta_{l-1,m}) and needs no special
+# "first step" case: c_{l0+1} contains D_{l0} = 0, so the lam_{l0-1} term
+# vanishes by construction.  The (mantissa, scale) rescaling of the scalar
+# engine carries over unchanged.
+#
+# Seeds at l0 (derived from d^j_{j,m'} and the d^2 table via the standard
+# Wigner-d symmetries; signs folded with the (-1)^m of the lam definition):
+#
+#   m >= |m'|:  lam^{(m')}_{m,m} = sqrt((2m+1)/4pi)
+#                 * sqrt((2m)! / ((m+m')!(m-m')!))
+#                 * cos(t/2)^{m+m'} sin(t/2)^{m-m'}          (positive)
+#   m' = +-2, m = 0:  lam^{(+-2)}_{2,0} =  sqrt(5/4pi) sqrt(6)/4 sin^2 t
+#   m' = -2,  m = 1:  lam^{(-2)}_{2,1} =  sqrt(5/4pi) (sin t / 2) (1 - x)
+#   m' = +2,  m = 1:  lam^{(+2)}_{2,1} = -sqrt(5/4pi) (sin t / 2) (1 + x)
+#
+# Spin-2 synthesis / analysis then reuse the whole scalar pipeline through
+# the "+/-" component packing (a^+- = -(E +- iB), Delta_Q +- i Delta_U):
+# two independent recurrences (m' = -2 and m' = +2) stacked along the m-row
+# axis, each accumulating exactly like a scalar transform.
+# ===========================================================================
+
+
+def log_factorials(n_max: int) -> np.ndarray:
+    """log(n!) for n = 0..n_max (host-side float64 cumulative log-sum)."""
+    out = np.zeros(n_max + 1, dtype=np.float64)
+    if n_max >= 1:
+        out[1:] = np.cumsum(np.log(np.arange(1, n_max + 1, dtype=np.float64)))
+    return out
+
+
+def spin_seeds_scaled(m_vals, mprime_vals, grid_x, grid_sin, logfact, *,
+                      dtype, scale_bits: int):
+    """Scaled seeds lam^{(m')}_{l0,m} as (mantissa, scale), l0 = max(m,|m'|).
+
+    ``m_vals``/``mprime_vals``: (Ms,) int (m < 0 rows are padding -> zero
+    seeds); ``grid_x``/``grid_sin``: (R,) float64; ``logfact``: host table
+    from :func:`log_factorials`, length >= 2*max(m)+1.  Trace-friendly
+    (pure jnp), so the distributed path can pass sharded ``m_vals``.
+    Currently |m'| must be 0 or 2 (asserted host-side where possible).
+    """
+    m = jnp.asarray(m_vals, jnp.int32)[:, None]                  # (Ms, 1)
+    mp = jnp.asarray(mprime_vals, jnp.int32)[:, None]
+    x = jnp.asarray(grid_x, jnp.float64)[None, :]                # (1, R)
+    sin_t = jnp.asarray(grid_sin, jnp.float64)[None, :]
+    lf = jnp.asarray(logfact, jnp.float64)
+    mf = m.astype(jnp.float64)
+    mpf = mp.astype(jnp.float64)
+
+    # log cos(t/2), log sin(t/2) from x = cos t (grids never hit the poles)
+    log_c = 0.5 * jnp.log(jnp.maximum((1.0 + x) / 2.0, 1e-300))
+    log_s = 0.5 * jnp.log(jnp.maximum((1.0 - x) / 2.0, 1e-300))
+
+    # --- general m >= |m'| branch (log domain; also the scalar m' = 0 seed)
+    msafe = jnp.maximum(m, 0)
+    idx = lambda v: jnp.clip(v, 0, lf.shape[0] - 1)
+    log_norm = 0.5 * (jnp.log(2.0 * jnp.maximum(mf, 0.0) + 1.0)
+                      - jnp.log(4.0 * jnp.pi))
+    log_ratio = 0.5 * (lf[idx(2 * msafe)] - lf[idx(msafe + mp)]
+                       - lf[idx(msafe - mp)])
+    log_p = (log_norm + log_ratio
+             + (mf + mpf) * log_c + (mf - mpf) * log_s)
+    denom = scale_bits * _LN2
+    scale_g = jnp.minimum(jnp.round(log_p / denom), 0.0)
+    mant_g = jnp.exp(log_p - scale_g * denom)
+
+    # --- |m'| = 2, m < 2 branches (O(1) values, unscaled)
+    c5 = float(np.sqrt(5.0 / (4.0 * np.pi)))
+    v_m0 = c5 * (np.sqrt(6.0) / 4.0) * sin_t * sin_t
+    v_m1 = jnp.where(mp < 0,
+                     c5 * 0.5 * sin_t * (1.0 - x),      # m' = -2
+                     -c5 * 0.5 * sin_t * (1.0 + x))     # m' = +2
+    low = (m < jnp.abs(mp)) & (m >= 0)
+    mant = jnp.where(low, jnp.where(m == 0, v_m0, v_m1), mant_g)
+    scale = jnp.where(low, 0.0, scale_g)
+    mant = jnp.where(m >= 0, mant, 0.0)
+    scale = jnp.where(m >= 0, scale, 0.0)
+    return mant.astype(dtype), scale.astype(jnp.int32)
+
+
+def recurrence_step_general(l, m, mp, x, mant_prev, mant_curr, scale,
+                            seed_mant, seed_scale, *, scale_bits: int, dtype):
+    """One step of the generalised (spin-aware) scaled recurrence.
+
+    Identical contract to :func:`recurrence_step` but seeded at
+    ``l0 = max(m, |m'|)`` and using the Wigner-d coefficients; reduces to
+    the scalar recurrence at ``m' = 0``.  ``mp`` is (Ms, 1) like ``m``.
+    """
+    fdt = dtype
+    lf = jnp.asarray(l, fdt)
+    mf = m.astype(fdt)
+    mpf = mp.astype(fdt)
+    l0 = jnp.maximum(mf, jnp.abs(mpf))
+    ls = jnp.maximum(lf, l0 + 1.0)                    # safe l for coefficients
+    d2 = jnp.maximum((ls * ls - mf * mf) * (ls * ls - mpf * mpf), 1e-30)
+    lm1 = ls - 1.0
+    d2m1 = jnp.maximum((lm1 * lm1 - mf * mf) * (lm1 * lm1 - mpf * mpf), 0.0)
+    s2l = jnp.sqrt(4.0 * ls * ls - 1.0)
+    inv_d = 1.0 / jnp.sqrt(d2)
+    inv_lm1 = 1.0 / jnp.maximum(lm1, 1.0)
+    a = ls * s2l * inv_d
+    b = -(mf * mpf) * s2l * inv_d * inv_lm1
+    c = (jnp.sqrt((2.0 * ls + 1.0) / jnp.maximum(2.0 * ls - 3.0, 1.0))
+         * ls * jnp.sqrt(d2m1) * inv_d * inv_lm1)
+
+    p_rec = (a * x + b) * mant_curr - c * mant_prev
+    is_seed = lf == l0
+    before = lf < l0
+
+    new_curr = jnp.where(before, 0.0,
+               jnp.where(is_seed, seed_mant, p_rec))
+    new_prev = jnp.where(before | is_seed, 0.0, mant_curr)
+    new_scale = jnp.where(is_seed, seed_scale, scale)
+
+    big = jnp.asarray(2.0, fdt) ** (scale_bits // 2)
+    inv_big2 = jnp.asarray(2.0, fdt) ** (-scale_bits)
+    grow = (jnp.abs(new_curr) > big) & (new_scale < 0)
+    new_curr = jnp.where(grow, new_curr * inv_big2, new_curr)
+    new_prev = jnp.where(grow, new_prev * inv_big2, new_prev)
+    new_scale = jnp.where(grow, new_scale + 1, new_scale)
+    small = (jnp.abs(new_curr) < 1.0 / big) & (jnp.abs(new_prev) < 1.0 / big) \
+        & (new_scale > jnp.int32(-32000)) & ~before & ~is_seed
+    big2 = jnp.asarray(2.0, fdt) ** scale_bits
+    new_curr2 = jnp.where(small, new_curr * big2, new_curr)
+    new_prev2 = jnp.where(small, new_prev * big2, new_prev)
+    new_scale2 = jnp.where(small, new_scale - 1, new_scale)
+
+    value = jnp.where((new_scale2 == 0) & ~before, new_curr2, 0.0)
+    return new_prev2, new_curr2, new_scale2, value
+
+
+def _prep_general(m_vals, mprime_vals, grid_x, dtype):
+    m = jnp.asarray(m_vals, jnp.int32)[:, None]
+    mp = jnp.asarray(mprime_vals, jnp.int32)[:, None]
+    x = jnp.asarray(grid_x, dtype)[None, :]
+    return m, mp, x
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits",
+                                             "dtype_name"))
+def _delta_from_alm_general_impl(a_re, a_im, m, mp, x, seed_mant, seed_scale,
+                                 *, l_max, scale_bits, dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]
+    K = a_re.shape[-1]
+    carry0 = (
+        jnp.zeros((M, R), dtype),
+        jnp.zeros((M, R), dtype),
+        jnp.zeros((M, R), jnp.int32),
+        jnp.zeros((M, R, K), dtype),
+        jnp.zeros((M, R, K), dtype),
+    )
+
+    def body(l, carry):
+        mprev, mcurr, sc, dre, dim = carry
+        mprev, mcurr, sc, val = recurrence_step_general(
+            l, m, mp, x, mprev, mcurr, sc, seed_mant, seed_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        are = jax.lax.dynamic_index_in_dim(a_re, l, axis=1, keepdims=False)
+        aim = jax.lax.dynamic_index_in_dim(a_im, l, axis=1, keepdims=False)
+        dre = dre + val[..., None] * are[:, None, :]
+        dim = dim + val[..., None] * aim[:, None, :]
+        return mprev, mcurr, sc, dre, dim
+
+    _, _, _, d_re, d_im = jax.lax.fori_loop(0, l_max + 1, body, carry0)
+    return d_re, d_im
+
+
+@functools.partial(jax.jit, static_argnames=("l_max", "scale_bits",
+                                             "dtype_name"))
+def _alm_from_delta_general_impl(d_re, d_im, m, mp, x, seed_mant, seed_scale,
+                                 *, l_max, scale_bits, dtype_name):
+    dtype = jnp.dtype(dtype_name)
+    M, R = m.shape[0], x.shape[1]
+    carry0 = (jnp.zeros((M, R), dtype), jnp.zeros((M, R), dtype),
+              jnp.zeros((M, R), jnp.int32))
+
+    def step(carry, l):
+        mprev, mcurr, sc = carry
+        mprev, mcurr, sc, val = recurrence_step_general(
+            l, m, mp, x, mprev, mcurr, sc, seed_mant, seed_scale,
+            scale_bits=scale_bits, dtype=dtype)
+        a_re_l = jnp.einsum("mr,mrk->mk", val, d_re)
+        a_im_l = jnp.einsum("mr,mrk->mk", val, d_im)
+        return (mprev, mcurr, sc), (a_re_l, a_im_l)
+
+    _, (a_re, a_im) = jax.lax.scan(step, carry0, jnp.arange(l_max + 1))
+    return jnp.swapaxes(a_re, 0, 1), jnp.swapaxes(a_im, 0, 1)
+
+
+def _seed_tables(m_vals, mprime_vals, grid_x, grid_sin, m_max, dtype, sb):
+    if m_max is None:
+        m_max = int(np.max(np.asarray(m_vals)))
+    logfact = log_factorials(2 * max(int(m_max), 2) + 1)
+    return spin_seeds_scaled(m_vals, mprime_vals, grid_x, grid_sin, logfact,
+                             dtype=dtype, scale_bits=sb)
+
+
+def delta_from_alm_general(a_re, a_im, m_vals, mprime_vals, grid_x, grid_sin,
+                           *, l_max: int, m_max: Optional[int] = None,
+                           dtype=jnp.float64):
+    """Generalised synthesis inner step over lam^{(m')} rows.
+
+    Like :func:`delta_from_alm` but each row carries its own (m, m') pair
+    (m' = 0 rows reproduce the scalar transform through the generalised
+    recurrence).  a_re/a_im: (Ms, l_max+1, K) -> (Ms, R, K).
+    ``m_max`` must be given when ``m_vals`` is traced (distributed path).
+    """
+    dtype = jnp.dtype(dtype)
+    sb = scale_bits_for(dtype)
+    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
+    seed_mant, seed_scale = _seed_tables(m_vals, mprime_vals, grid_x,
+                                         grid_sin, m_max, dtype, sb)
+    return _delta_from_alm_general_impl(
+        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, mp, x,
+        seed_mant, seed_scale, l_max=l_max, scale_bits=sb,
+        dtype_name=dtype.name)
+
+
+def alm_from_delta_general(d_re, d_im, m_vals, mprime_vals, grid_x, grid_sin,
+                           *, l_max: int, m_max: Optional[int] = None,
+                           dtype=jnp.float64):
+    """Generalised analysis inner step (adjoint of the above).
+
+    d_re/d_im: (Ms, R, K) *weighted* Delta -> (Ms, l_max+1, K); rows with
+    l < max(m, |m'|) come out exactly zero.
+    """
+    dtype = jnp.dtype(dtype)
+    sb = scale_bits_for(dtype)
+    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
+    seed_mant, seed_scale = _seed_tables(m_vals, mprime_vals, grid_x,
+                                         grid_sin, m_max, dtype, sb)
+    return _alm_from_delta_general_impl(
+        jnp.asarray(d_re, dtype), jnp.asarray(d_im, dtype), m, mp, x,
+        seed_mant, seed_scale, l_max=l_max, scale_bits=sb,
+        dtype_name=dtype.name)
+
+
+# ---------------------------------------------------------------------------
+# Spin-2 component packing: (E, B) <-> a^+- = -(E +- iB), stacked along the
+# row axis as [m' = -2 rows | m' = +2 rows], and (Delta_Q, Delta_U) <->
+# Delta^+- = Delta_Q +- i Delta_U.  Shared by the f64 engine, the Pallas
+# wrappers and the distributed transform (all dtypes, any trailing dims).
+# ---------------------------------------------------------------------------
+
+
+def spin_pack_alm(e_re, e_im, b_re, b_im):
+    """(E, B) -> stacked a^+- rows: a2 = [-(E+iB) | -(E-iB)], (2M, ...)."""
+    a_p_re = -(e_re - b_im)
+    a_p_im = -(e_im + b_re)
+    a_m_re = -(e_re + b_im)
+    a_m_im = -(e_im - b_re)
+    return (jnp.concatenate([a_p_re, a_m_re], axis=0),
+            jnp.concatenate([a_p_im, a_m_im], axis=0))
+
+
+def spin_unpack_delta(d_re, d_im):
+    """Stacked Delta^+- rows (2M, ...) -> (dq_re, dq_im, du_re, du_im).
+
+    Delta_Q = (Delta^+ + Delta^-)/2,  Delta_U = -i (Delta^+ - Delta^-)/2.
+    """
+    M = d_re.shape[0] // 2
+    dp_re, dm_re = d_re[:M], d_re[M:]
+    dp_im, dm_im = d_im[:M], d_im[M:]
+    dq_re = 0.5 * (dp_re + dm_re)
+    dq_im = 0.5 * (dp_im + dm_im)
+    du_re = 0.5 * (dp_im - dm_im)
+    du_im = -0.5 * (dp_re - dm_re)
+    return dq_re, dq_im, du_re, du_im
+
+
+def spin_pack_delta(dq_re, dq_im, du_re, du_im):
+    """(Delta_Q, Delta_U) -> stacked Delta^+- = Delta_Q +- i Delta_U rows."""
+    dp_re = dq_re - du_im
+    dp_im = dq_im + du_re
+    dm_re = dq_re + du_im
+    dm_im = dq_im - du_re
+    return (jnp.concatenate([dp_re, dm_re], axis=0),
+            jnp.concatenate([dp_im, dm_im], axis=0))
+
+
+def spin_unpack_alm(a_re, a_im):
+    """Stacked a^+- rows (2M, ...) -> (e_re, e_im, b_re, b_im).
+
+    E = -(a^+ + a^-)/2,  B = i (a^+ - a^-)/2.
+    """
+    M = a_re.shape[0] // 2
+    ap_re, am_re = a_re[:M], a_re[M:]
+    ap_im, am_im = a_im[:M], a_im[M:]
+    e_re = -0.5 * (ap_re + am_re)
+    e_im = -0.5 * (ap_im + am_im)
+    b_re = -0.5 * (ap_im - am_im)
+    b_im = 0.5 * (ap_re - am_re)
+    return e_re, e_im, b_re, b_im
+
+
+def _spin_rows(m_vals):
+    """Stack m rows for the two spin recurrences -> (m2, mp2), each (2M,).
+
+    Stays numpy for concrete inputs (so plan layers can treat the result
+    as static); traced ``m_vals`` (the distributed path) stay jnp.
+    """
+    if isinstance(m_vals, (np.ndarray, list, tuple)):
+        m2 = np.concatenate([np.asarray(m_vals, np.int32)] * 2, axis=0)
+        M = m2.shape[0] // 2
+    else:
+        m2 = jnp.concatenate([jnp.asarray(m_vals, jnp.int32)] * 2, axis=0)
+        M = m2.shape[0] // 2
+    mp2 = np.concatenate([np.full(M, -2, np.int32), np.full(M, 2, np.int32)])
+    return m2, mp2
+
+
+def delta_from_alm_spin(e_re, e_im, b_re, b_im, m_vals, grid_x, grid_sin, *,
+                        l_max: int, m_max: Optional[int] = None,
+                        dtype=jnp.float64):
+    """Spin-2 synthesis inner step: (E, B) alm -> (Delta_Q, Delta_U).
+
+    Inputs (M, l_max+1, K) real/imag parts; returns
+    (dq_re, dq_im, du_re, du_im), each (M, R, K).
+    """
+    a2_re, a2_im = spin_pack_alm(e_re, e_im, b_re, b_im)
+    m2, mp2 = _spin_rows(m_vals)
+    d_re, d_im = delta_from_alm_general(
+        a2_re, a2_im, m2, mp2, grid_x, grid_sin, l_max=l_max, m_max=m_max,
+        dtype=dtype)
+    return spin_unpack_delta(d_re, d_im)
+
+
+def alm_from_delta_spin(dq_re, dq_im, du_re, du_im, m_vals, grid_x, grid_sin,
+                        *, l_max: int, m_max: Optional[int] = None,
+                        dtype=jnp.float64):
+    """Spin-2 analysis inner step: weighted (Delta_Q, Delta_U) -> (E, B).
+
+    Inputs (M, R, K); returns (e_re, e_im, b_re, b_im), each (M, L1, K).
+    """
+    d2_re, d2_im = spin_pack_delta(dq_re, dq_im, du_re, du_im)
+    m2, mp2 = _spin_rows(m_vals)
+    a_re, a_im = alm_from_delta_general(
+        d2_re, d2_im, m2, mp2, grid_x, grid_sin, l_max=l_max, m_max=m_max,
+        dtype=dtype)
+    return spin_unpack_alm(a_re, a_im)
+
+
+import dataclasses as _dataclasses
+
+
+@_dataclasses.dataclass(frozen=True)
+class HarmonicCore:
+    """Spin-aware recurrence layer: one surface over the scalar P_lm panels
+    (spin 0) and the spin-weighted lambda pairs (spin 2).
+
+    The serial engine (`core.sht.SHT`), and through it every plan backend,
+    produces/consumes per-ring Fourier coefficients via this object:
+
+      ``delta_from_alm``: complex alm (M, L, K)            [spin 0]
+                          or (2, M, L, K) = (E, B)          [spin 2]
+                       -> Delta (M, R, K) / (2, M, R, K) = (Q, U) rows.
+      ``alm_from_delta``: the adjoint (weighted Delta in).
+
+    Spin 2 runs two generalised Wigner-d recurrences (m' = -2, +2) stacked
+    along the row axis -- exactly 2x the scalar panel work -- and mixes the
+    components host-side (`spin_pack_alm` and friends).
+    """
+
+    m_vals: tuple
+    grid_x: np.ndarray
+    grid_sin: np.ndarray
+    log_mu_all: np.ndarray
+    l_max: int
+    spin: int = 0
+    dtype: str = "float64"
+
+    def __post_init__(self):
+        assert self.spin in (0, 2), f"unsupported spin {self.spin}"
+
+    @property
+    def n_components(self) -> int:
+        return 1 if self.spin == 0 else 2
+
+    def delta_from_alm(self, alm):
+        dt = jnp.dtype(self.dtype)
+        if self.spin == 0:
+            d_re, d_im = delta_from_alm(
+                jnp.real(alm), jnp.imag(alm), self.m_vals, self.grid_x,
+                self.grid_sin, self.log_mu_all, l_max=self.l_max, dtype=dt)
+            return d_re + 1j * d_im
+        e, b = alm[0], alm[1]
+        dq_re, dq_im, du_re, du_im = delta_from_alm_spin(
+            jnp.real(e), jnp.imag(e), jnp.real(b), jnp.imag(b), self.m_vals,
+            self.grid_x, self.grid_sin, l_max=self.l_max, dtype=dt)
+        return jnp.stack([dq_re + 1j * dq_im, du_re + 1j * du_im], axis=0)
+
+    def alm_from_delta(self, delta_w):
+        dt = jnp.dtype(self.dtype)
+        if self.spin == 0:
+            ones = np.ones(np.asarray(self.grid_x).shape[0])
+            a_re, a_im = alm_from_delta(
+                jnp.real(delta_w), jnp.imag(delta_w), self.m_vals,
+                self.grid_x, self.grid_sin, ones, self.log_mu_all,
+                l_max=self.l_max, dtype=dt)
+            return a_re + 1j * a_im
+        dq, du = delta_w[0], delta_w[1]
+        e_re, e_im, b_re, b_im = alm_from_delta_spin(
+            jnp.real(dq), jnp.imag(dq), jnp.real(du), jnp.imag(du),
+            self.m_vals, self.grid_x, self.grid_sin, l_max=self.l_max,
+            dtype=dt)
+        return jnp.stack([e_re + 1j * e_im, b_re + 1j * b_im], axis=0)

@@ -44,14 +44,19 @@ import numpy as np
 from repro.core import legendre
 from repro.core.grids import RingGrid
 
-__all__ = ["SHT", "alm_rect_zeros", "random_alm", "alm_mask"]
+__all__ = ["SHT", "alm_rect_zeros", "random_alm", "random_alm_spin",
+           "alm_mask"]
 
 
-def alm_mask(l_max: int, m_max: int) -> np.ndarray:
-    """(m_max+1, l_max+1) bool mask of valid (m, l) entries (l >= m)."""
+def alm_mask(l_max: int, m_max: int, spin: int = 0) -> np.ndarray:
+    """(m_max+1, l_max+1) bool mask of valid (m, l) entries.
+
+    Valid means ``l >= m`` and ``l >= spin`` (spin-s harmonics start at
+    l = s; for polarisation E/B that is l = 2).
+    """
     m = np.arange(m_max + 1)[:, None]
     l = np.arange(l_max + 1)[None, :]
-    return l >= m
+    return (l >= m) & (l >= spin)
 
 
 def alm_rect_zeros(l_max: int, m_max: int, K: int = 1,
@@ -59,19 +64,46 @@ def alm_rect_zeros(l_max: int, m_max: int, K: int = 1,
     return np.zeros((m_max + 1, l_max + 1, K), dtype=dtype)
 
 
-def random_alm(key, l_max: int, m_max: int, K: int = 1,
-               dtype=jnp.float64) -> jnp.ndarray:
+def _resolve_key(key, seed, caller: str):
+    if (key is None) == (seed is None):
+        raise ValueError(
+            f"{caller} requires exactly one of `key` or `seed=` -- the old "
+            "silent key=None -> PRNGKey(0) fallback has been removed; pass "
+            "jax.random.PRNGKey(...) explicitly or use seed=<int>")
+    return jax.random.PRNGKey(seed) if key is None else key
+
+
+def random_alm(key=None, l_max: int = None, m_max: int = None, K: int = 1,
+               dtype=jnp.float64, *, spin: int = 0,
+               seed=None) -> jnp.ndarray:
     """Random a_lm, uniform in (-1, 1) (paper §5 experimental setup).
 
-    m = 0 entries are real (required for a real field).
+    Exactly one of ``key`` (a jax PRNG key) or ``seed=`` (an int, documented
+    deterministic shorthand) must be given.  m = 0 entries are real
+    (required for a real field); ``spin`` zeroes the l < spin rows.
     """
-    kr, ki = jax.random.split(jax.random.PRNGKey(0) if key is None else key)
+    key = _resolve_key(key, seed, "random_alm")
+    kr, ki = jax.random.split(key)
     shape = (m_max + 1, l_max + 1, K)
     re = jax.random.uniform(kr, shape, dtype, -1.0, 1.0)
     im = jax.random.uniform(ki, shape, dtype, -1.0, 1.0)
     im = im.at[0].set(0.0)  # m = 0 is real
-    mask = jnp.asarray(alm_mask(l_max, m_max))[..., None]
+    mask = jnp.asarray(alm_mask(l_max, m_max, spin))[..., None]
     return jnp.where(mask, re + 1j * im, 0.0)
+
+
+def random_alm_spin(key=None, l_max: int = None, m_max: int = None,
+                    K: int = 1, dtype=jnp.float64, *,
+                    seed=None) -> jnp.ndarray:
+    """Random (E, B) alm pair for spin-2 transforms, shape (2, M, L1, K).
+
+    Same key/seed contract as :func:`random_alm`; rows with l < 2 are zero
+    (no spin-2 harmonics below the spin)."""
+    key = _resolve_key(key, seed, "random_alm_spin")
+    ke, kb = jax.random.split(key)
+    e = random_alm(ke, l_max, m_max, K, dtype, spin=2)
+    b = random_alm(kb, l_max, m_max, K, dtype, spin=2)
+    return jnp.stack([e, b], axis=0)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -131,17 +163,25 @@ class SHT:
                           cache=self.phase_cache,
                           cache_dir=self.phase_cache_dir)
 
-    # -- Legendre stage -----------------------------------------------------
+    # -- Legendre stage (spin-aware harmonic core) --------------------------
+
+    def _harmonic_core(self, spin: int) -> "legendre.HarmonicCore":
+        """The spin-aware recurrence layer bound to this grid/band-limit."""
+        cache = self.__dict__.setdefault("_cores", {})
+        if spin not in cache:
+            g = self.grid
+            cache[spin] = legendre.HarmonicCore(
+                m_vals=self._m_all, grid_x=g.cos_theta, grid_sin=g.sin_theta,
+                log_mu_all=self._log_mu, l_max=self.l_max, spin=spin,
+                dtype=self.dtype)
+        return cache[spin]
 
     def _delta_from_alm(self, alm: jnp.ndarray) -> jnp.ndarray:
         """(M, L, K) complex alm -> (M, R, K) complex Delta^A."""
         g = self.grid
         dt = jnp.dtype(self.dtype)
         if not self.fold:
-            d_re, d_im = legendre.delta_from_alm(
-                jnp.real(alm), jnp.imag(alm), self._m_all, g.cos_theta,
-                g.sin_theta, self._log_mu, l_max=self.l_max, dtype=dt)
-            return d_re + 1j * d_im
+            return self._harmonic_core(0).delta_from_alm(alm)
         nh = self.n_north
         ere, eim, ore_, oim = legendre.delta_from_alm_folded(
             jnp.real(alm), jnp.imag(alm), self._m_all, g.cos_theta[:nh],
@@ -159,12 +199,7 @@ class SHT:
         g = self.grid
         dt = jnp.dtype(self.dtype)
         if not self.fold:
-            ones = np.ones(g.n_rings)  # weights pre-applied
-            a_re, a_im = legendre.alm_from_delta(
-                jnp.real(delta_w), jnp.imag(delta_w), self._m_all,
-                g.cos_theta, g.sin_theta, ones, self._log_mu,
-                l_max=self.l_max, dtype=dt)
-            return a_re + 1j * a_im
+            return self._harmonic_core(0).alm_from_delta(delta_w)
         nh = self.n_north
         north = delta_w[:, :nh]
         ns = nh - 1 if self.has_equator else nh
@@ -206,4 +241,40 @@ class SHT:
         for _ in range(iters):
             resid = maps - self.alm2map(alm)
             alm = alm + self.map2alm(resid, iters=0)
+        return alm
+
+    # -- spin-2 transforms (polarisation: E/B <-> Q/U) -----------------------
+    #
+    # The phase stage is spin-blind (e^{im phi} factors are identical), so
+    # the (Q, U) component pair rides the trailing K channel axis through
+    # the same engine; only the Legendre stage switches to the spin-2
+    # harmonic core (two stacked Wigner-d recurrences, lambda^{+/-} mixing).
+
+    def alm2map_spin(self, alm_eb: jnp.ndarray) -> jnp.ndarray:
+        """Spin-2 synthesis: (E, B) alm (2, M, L, K) -> (Q, U) maps
+        (2, R, n_phi, K)."""
+        assert not self.fold, "fold is not supported for spin transforms"
+        assert alm_eb.shape[:3] == (2, self.m_max + 1, self.l_max + 1), \
+            alm_eb.shape
+        K = alm_eb.shape[-1]
+        delta = self._harmonic_core(2).delta_from_alm(alm_eb)  # (2, M, R, K)
+        d2 = jnp.concatenate([delta[0], delta[1]], axis=-1)    # (M, R, 2K)
+        s = self.phase.synth(d2)                               # (R, nphi, 2K)
+        return jnp.stack([s[..., :K], s[..., K:]], axis=0)
+
+    def map2alm_spin(self, maps_qu: jnp.ndarray, iters: int = 0) -> jnp.ndarray:
+        """Spin-2 analysis: (Q, U) maps (2, R, n_phi, K) -> (E, B) alm
+        (2, M, L, K); ``iters`` as in :meth:`map2alm`."""
+        assert not self.fold, "fold is not supported for spin transforms"
+        assert maps_qu.shape[0] == 2 and \
+            maps_qu.shape[1] == self.grid.n_rings, maps_qu.shape
+        maps_qu = jnp.asarray(maps_qu)
+        K = maps_qu.shape[-1]
+        m2 = jnp.concatenate([maps_qu[0], maps_qu[1]], axis=-1)
+        dw = self.phase.anal(m2)                               # (M, R, 2K)
+        delta_w = jnp.stack([dw[..., :K], dw[..., K:]], axis=0)
+        alm = self._harmonic_core(2).alm_from_delta(delta_w)
+        for _ in range(iters):
+            resid = maps_qu - self.alm2map_spin(alm)
+            alm = alm + self.map2alm_spin(resid, iters=0)
         return alm

@@ -14,7 +14,8 @@ import numpy as np
 
 from repro.core.sht import alm_mask
 
-__all__ = ["d_err", "alm_from_cl", "cl_from_alm", "cmb_like_cl"]
+__all__ = ["d_err", "alm_from_cl", "cl_from_alm", "cmb_like_cl",
+           "cmb_like_cl_pol", "alm_from_cl_pol", "cl_cross_from_alm"]
 
 
 def d_err(a_init, a_out) -> float:
@@ -62,6 +63,83 @@ def alm_from_cl(key, cl: np.ndarray, m_max: int | None = None,
     alm = alm.at[0].set((re[0] * sig[0]).astype(dtype))  # m=0 real, full var
     mask = jnp.asarray(alm_mask(l_max, m_max))[..., None]
     return jnp.where(mask, alm, 0.0)
+
+
+def cmb_like_cl_pol(l_max: int, *, amp: float = 1.0) -> dict:
+    """Toy TT/EE/BB/TE spectra with CMB-like structure (not physical).
+
+    EE is a few percent of TT with peaks shifted half a period (polarisation
+    peaks sit at the temperature troughs), BB is a small fraction of EE
+    (tensor+lensing stand-in), and TE oscillates with |TE| strictly below
+    sqrt(TT*EE) so the (T, E) covariance stays positive definite.
+    EE/BB/TE vanish at l < 2.
+    """
+    l = np.arange(l_max + 1, dtype=np.float64)
+    tt = cmb_like_cl(l_max, amp=amp)
+    ee = 0.04 * cmb_like_cl(l_max, amp=amp, l_peak=160.0)
+    bb = 0.05 * ee * np.exp(-l / 300.0)
+    te = 0.6 * np.sqrt(tt * ee) * np.cos(np.pi * l / 190.0)
+    for c in (ee, bb, te):
+        c[:2] = 0.0
+    return {"tt": tt, "ee": ee, "bb": bb, "te": te}
+
+
+def _unit_alm(key, shape, dtype):
+    """Unit-variance complex alm with the real-field convention
+    (<|a|^2> = 1; m = 0 real with full variance)."""
+    kr, ki = jax.random.split(key)
+    re = jax.random.normal(kr, shape, dtype)
+    im = jax.random.normal(ki, shape, dtype)
+    z = (re + 1j * im) / jnp.sqrt(2.0)
+    return z.at[0].set(re[0].astype(dtype))
+
+
+def alm_from_cl_pol(key, cls: dict, m_max: int | None = None, K: int = 1,
+                    dtype=jnp.float64) -> jnp.ndarray:
+    """Correlated Gaussian (T, E, B) alm from TT/EE/BB/TE spectra.
+
+    ``cls`` as from :func:`cmb_like_cl_pol`.  Returns (3, M, L1, K) complex
+    [T, E, B]: T/E drawn with the standard Cholesky split
+    (a_E = (TE/sqrt(TT)) xi_T + sqrt(EE - TE^2/TT) xi_2), B independent.
+    E/B rows with l < 2 are zero.
+    """
+    tt = np.asarray(cls["tt"], np.float64)
+    ee = np.asarray(cls["ee"], np.float64)
+    bb = np.asarray(cls["bb"], np.float64)
+    te = np.asarray(cls["te"], np.float64)
+    l_max = len(tt) - 1
+    if m_max is None:
+        m_max = l_max
+    shape = (m_max + 1, l_max + 1, K)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x1 = _unit_alm(k1, shape, dtype)
+    x2 = _unit_alm(k2, shape, dtype)
+    x3 = _unit_alm(k3, shape, dtype)
+    s_tt = np.sqrt(tt)
+    c_et = np.divide(te, s_tt, out=np.zeros_like(te), where=s_tt > 0)
+    s_ee = np.sqrt(np.maximum(ee - c_et ** 2, 0.0))
+    row = lambda v: jnp.asarray(v, dtype)[None, :, None]
+    a_t = x1 * row(s_tt)
+    a_e = x1 * row(c_et) + x2 * row(s_ee)
+    a_b = x3 * row(np.sqrt(bb))
+    mask0 = jnp.asarray(alm_mask(l_max, m_max))[..., None]
+    mask2 = jnp.asarray(alm_mask(l_max, m_max, spin=2))[..., None]
+    return jnp.stack([jnp.where(mask0, a_t, 0.0),
+                      jnp.where(mask2, a_e, 0.0),
+                      jnp.where(mask2, a_b, 0.0)], axis=0)
+
+
+def cl_cross_from_alm(alm_x: jnp.ndarray, alm_y: jnp.ndarray) -> jnp.ndarray:
+    """Pseudo cross-spectrum C_l^{XY} from two packed (M, L, K) alm.
+
+    C_l = (Re[a^X_l0 conj(a^Y_l0)] + 2 sum_{m>=1} Re[a^X conj(a^Y)])
+          / (2l + 1).
+    """
+    p = jnp.real(alm_x * jnp.conj(alm_y))                     # (M, L, K)
+    tot = p[0] + 2.0 * jnp.sum(p[1:], axis=0)                 # (L, K)
+    l_max = alm_x.shape[1] - 1
+    l = jnp.arange(l_max + 1, dtype=tot.dtype)[:, None]
+    return tot / (2.0 * l + 1.0)
 
 
 def cl_from_alm(alm: jnp.ndarray) -> jnp.ndarray:

@@ -68,7 +68,7 @@ from repro.core import cache as plancache
 from repro.core import grids as gridlib
 from repro.core import legendre
 from repro.core.grids import RingGrid
-from repro.core.sht import SHT, alm_mask, random_alm
+from repro.core.sht import SHT, alm_mask, random_alm, random_alm_spin
 from repro.roofline import analysis as roofline
 
 __all__ = ["Plan", "make_plan", "available_backends", "backend_eligibility",
@@ -141,17 +141,21 @@ class Plan:
 
     Attributes
     ----------
-    grid, l_max, m_max, K, dtype, fold : the plan signature.
+    grid, l_max, m_max, K, dtype, fold, spin : the plan signature.
     mode : dispatch mode this plan was built with.
     backends : ``{"synth": name, "anal": name}`` -- the chosen execution
         backend per direction (the paper's direct/inverse dichotomy made
         into a data structure).
+
+    A ``spin=2`` plan transforms (E, B) alm pairs ``(2, M, L, K)`` to/from
+    (Q, U) map pairs ``(2, R, n_phi, K)`` -- same K batch axis, same
+    backends, twice the Legendre-panel work (lambda^{+/-} pair).
     """
 
     def __init__(self, grid: RingGrid, l_max: int, m_max: int, K: int,
-                 dtype: str, *, mode: str, fold: bool, cache_kind: str,
-                 cache_dir: Optional[str], n_shards: Optional[int],
-                 signature_key: str):
+                 dtype: str, *, mode: str, fold: bool, spin: int,
+                 cache_kind: str, cache_dir: Optional[str],
+                 n_shards: Optional[int], signature_key: str):
         self.grid = grid
         self.l_max = int(l_max)
         self.m_max = int(m_max)
@@ -159,6 +163,7 @@ class Plan:
         self.dtype = str(dtype)
         self.mode = mode
         self.fold = bool(fold)
+        self.spin = int(spin)
         self._cache_kind = cache_kind
         self._cache_dir = cache_dir
         self._n_shards = n_shards
@@ -168,6 +173,7 @@ class Plan:
                         phase_cache=cache_kind, phase_cache_dir=cache_dir)
         self._m_vals = np.arange(self.m_max + 1)
         self._seeds_cache: Optional[tuple] = None
+        self._seeds_spin_cache: Optional[tuple] = None
         self._dist = None
         self._compiled: dict = {}
         self.backends: dict = {}
@@ -215,6 +221,31 @@ class Plan:
                              jnp.asarray(x, jnp.float32))
         return self._seeds_cache
 
+    def _seeds_spin(self):
+        """Spin-2 float32 seed tables for the Pallas kernels: the stacked
+        (m' = -2 | +2) lambda rows, persisted by signature like `_seeds`."""
+        if self._seeds_spin_cache is not None:
+            return self._seeds_spin_cache
+        from repro.core import legendre as leg
+        g = self.grid
+        m2, mp2 = leg._spin_rows(self._m_vals)
+
+        def build():
+            from repro.kernels import ref as kref
+            pmm, pms = kref.prepare_seeds_spin(
+                m2, mp2, g.cos_theta, g.sin_theta, m_max=self.m_max)
+            return {"pmm": np.asarray(pmm), "pms": np.asarray(pms)}
+
+        key = plancache.signature_key("seeds_spin", sig=self._signature_key)
+        payload = plancache.get_or_build(
+            key, build, cache=self._cache_kind, directory=self._cache_dir)
+        self.cache_events.setdefault("seeds_spin", key)
+        self._seeds_spin_cache = (jnp.asarray(payload["pmm"]),
+                                  jnp.asarray(payload["pms"]),
+                                  jnp.asarray(g.cos_theta, jnp.float32),
+                                  m2, mp2)
+        return self._seeds_spin_cache
+
     def _dist_engine(self):
         if self._dist is None:
             from repro.core.dist_sht import DistSHT
@@ -235,18 +266,30 @@ class Plan:
         key = ("synth", backend)
         if key in self._compiled:
             return self._compiled[key]
+        spin = self.spin != 0
         if backend == "jnp":
-            fn = jax.jit(self._sht.alm2map)
+            fn = jax.jit(self._sht.alm2map_spin if spin
+                         else self._sht.alm2map)
         elif backend in ("pallas_vpu", "pallas_mxu"):
-            fn = self._make_pallas_synth(variant=backend.split("_")[1])
+            variant = backend.split("_")[1]
+            fn = (self._make_pallas_synth_spin(variant=variant) if spin
+                  else self._make_pallas_synth(variant=variant))
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
             splan = d.plan
 
-            def fn(alm):
-                maps_plan = d.alm2map(splan.pack_alm(alm))
-                return splan.scatter_map(maps_plan)
+            if spin:
+                def fn(alm_eb):
+                    packed = jnp.stack([splan.pack_alm(alm_eb[0]),
+                                        splan.pack_alm(alm_eb[1])], axis=0)
+                    mp = d.alm2map_spin(packed)        # (2, R_pad, nphi, K)
+                    return jnp.stack([splan.scatter_map(mp[0]),
+                                      splan.scatter_map(mp[1])], axis=0)
+            else:
+                def fn(alm):
+                    maps_plan = d.alm2map(splan.pack_alm(alm))
+                    return splan.scatter_map(maps_plan)
         else:
             raise ValueError(f"unknown backend {backend!r}")
         self._compiled[key] = fn
@@ -257,18 +300,30 @@ class Plan:
         key = ("anal", backend)
         if key in self._compiled:
             return self._compiled[key]
+        spin = self.spin != 0
         if backend == "jnp":
-            fn = jax.jit(self._sht.map2alm)
+            fn = jax.jit(self._sht.map2alm_spin if spin
+                         else self._sht.map2alm)
         elif backend in ("pallas_vpu", "pallas_mxu"):
-            fn = self._make_pallas_anal(variant=backend.split("_")[1])
+            variant = backend.split("_")[1]
+            fn = (self._make_pallas_anal_spin(variant=variant) if spin
+                  else self._make_pallas_anal(variant=variant))
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
             splan = d.plan
 
-            def fn(maps):
-                alm_packed = d.map2alm(splan.gather_map(maps))
-                return splan.unpack_alm(alm_packed)
+            if spin:
+                def fn(maps_qu):
+                    packed = jnp.stack([splan.gather_map(maps_qu[0]),
+                                        splan.gather_map(maps_qu[1])], axis=0)
+                    alm_p = d.map2alm_spin(packed)     # (2, Mp, L, K)
+                    return jnp.stack([splan.unpack_alm(alm_p[0]),
+                                      splan.unpack_alm(alm_p[1])], axis=0)
+            else:
+                def fn(maps):
+                    alm_packed = d.map2alm(splan.gather_map(maps))
+                    return splan.unpack_alm(alm_packed)
         else:
             raise ValueError(f"unknown backend {backend!r}")
         self._compiled[key] = fn
@@ -325,6 +380,60 @@ class Plan:
 
         return fn
 
+    def _make_pallas_synth_spin(self, variant: str):
+        """Spin-2 kernel synthesis: stacked lambda^{(m' = -+2)} rows through
+        the same kernels, component mixing host-side, shared phase stage."""
+        from repro.core import legendre as leg
+        kops = _pallas_ops()
+        K = self.K
+        cdt = _complex_dtype(self.dtype)
+        pmm, pms, x32, m2, mp2 = self._seeds_spin()
+
+        def fn(alm_eb):
+            e, b = alm_eb[0], alm_eb[1]
+            a2_re, a2_im = leg.spin_pack_alm(
+                jnp.real(e), jnp.imag(e), jnp.real(b), jnp.imag(b))
+            a32 = jnp.concatenate([a2_re, a2_im], axis=-1).astype(jnp.float32)
+            out = kops.synth(a32, m2, x32, pmm, pms, l_max=self.l_max,
+                             fold=False, variant=variant, mp_vals=mp2)
+            flat = out[:, 0]                          # (2M, R, 2K)
+            dq_re, dq_im, du_re, du_im = leg.spin_unpack_delta(
+                flat[..., :K], flat[..., K:])
+            delta = jnp.concatenate(
+                [dq_re + 1j * dq_im, du_re + 1j * du_im],
+                axis=-1).astype(cdt)                  # (M, R, 2K)
+            s = self._sht.phase.synth(delta).astype(self.dtype)
+            return jnp.stack([s[..., :K], s[..., K:]], axis=0)
+
+        return fn
+
+    def _make_pallas_anal_spin(self, variant: str):
+        from repro.core import legendre as leg
+        kops = _pallas_ops()
+        K = self.K
+        cdt = _complex_dtype(self.dtype)
+        pmm, pms, x32, m2, mp2 = self._seeds_spin()
+
+        def fn(maps_qu):
+            m2d = jnp.concatenate([maps_qu[0], maps_qu[1]], axis=-1)
+            dwc = self._sht.phase.anal(m2d)           # (M, R, 2K) complex
+            d2_re, d2_im = leg.spin_pack_delta(
+                jnp.real(dwc[..., :K]), jnp.imag(dwc[..., :K]),
+                jnp.real(dwc[..., K:]), jnp.imag(dwc[..., K:]))
+            dw32 = jnp.concatenate([d2_re, d2_im],
+                                   axis=-1).astype(jnp.float32)[:, None]
+            out = kops.anal(dw32, m2, x32, pmm, pms, l_max=self.l_max,
+                            fold=False, variant=variant, mp_vals=mp2)
+            e_re, e_im, b_re, b_im = leg.spin_unpack_alm(
+                out[..., :K], out[..., K:])
+            alm = jnp.stack([e_re + 1j * e_im, b_re + 1j * b_im],
+                            axis=0).astype(cdt)
+            mask = jnp.asarray(
+                alm_mask(self.l_max, self.m_max, spin=2))[..., None]
+            return jnp.where(mask[None], alm, 0.0)
+
+        return fn
+
     # -- dispatch -------------------------------------------------------------
 
     def _predict_all(self, hw=None) -> dict:
@@ -343,7 +452,7 @@ class Plan:
                     n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
                     direction=d, hw=hw,
                     n_devices=n_dev if b == "dist" else 1,
-                    fft_lengths=fl)
+                    fft_lengths=fl, spin=self.spin)
                 for d in ("synth", "anal")
             }
         return out
@@ -351,10 +460,16 @@ class Plan:
     def _measure_all(self) -> dict:
         """One warm-up + one timed call per candidate per direction."""
         cdt = _complex_dtype(self.dtype)
-        alm = random_alm(jax.random.PRNGKey(0), self.l_max, self.m_max,
-                         K=self.K).astype(cdt)
-        maps = jnp.zeros((self.grid.n_rings, self.grid.max_n_phi, self.K),
-                         jnp.dtype(self.dtype))
+        if self.spin == 0:
+            alm = random_alm(jax.random.PRNGKey(0), self.l_max, self.m_max,
+                             K=self.K).astype(cdt)
+            maps = jnp.zeros((self.grid.n_rings, self.grid.max_n_phi,
+                              self.K), jnp.dtype(self.dtype))
+        else:
+            alm = random_alm_spin(jax.random.PRNGKey(0), self.l_max,
+                                  self.m_max, K=self.K).astype(cdt)
+            maps = jnp.zeros((2, self.grid.n_rings, self.grid.max_n_phi,
+                              self.K), jnp.dtype(self.dtype))
         out: dict = {}
         for b in self.candidates:
             out[b] = {}
@@ -403,12 +518,25 @@ class Plan:
 
     # -- public API -----------------------------------------------------------
 
+    @property
+    def _alm_shape(self) -> tuple:
+        base = (self.m_max + 1, self.l_max + 1, self.K)
+        return base if self.spin == 0 else (2,) + base
+
+    @property
+    def _maps_shape(self) -> tuple:
+        base = (self.grid.n_rings, self.grid.max_n_phi, self.K)
+        return base if self.spin == 0 else (2,) + base
+
     def alm2map(self, alm) -> jnp.ndarray:
-        """Inverse SHT (synthesis): alm ``(m_max+1, l_max+1, K)`` complex ->
-        maps ``(n_rings, n_phi, K)`` real, through the chosen backend."""
-        assert alm.shape == (self.m_max + 1, self.l_max + 1, self.K), \
-            (alm.shape, "plan was built for "
-             f"({self.m_max + 1}, {self.l_max + 1}, {self.K})")
+        """Inverse SHT (synthesis) through the chosen backend.
+
+        spin 0: alm ``(m_max+1, l_max+1, K)`` -> maps ``(R, n_phi, K)``;
+        spin 2: (E, B) alm ``(2, M, L, K)`` -> (Q, U) maps
+        ``(2, R, n_phi, K)``.
+        """
+        assert alm.shape == self._alm_shape, \
+            (alm.shape, f"plan was built for {self._alm_shape}")
         return self._synth_fn(self.backends["synth"])(jnp.asarray(alm))
 
     def map2alm(self, maps, iters: int = 0) -> jnp.ndarray:
@@ -417,10 +545,11 @@ class Plan:
         ``iters > 0`` applies Jacobi residual refinement (one extra
         synthesis + analysis per pass) -- worthwhile on approximate-
         quadrature grids (HEALPix family), a no-op improvement on exact
-        Gauss-Legendre grids.
+        Gauss-Legendre grids.  Spin-2 plans take/return the stacked
+        (Q, U) / (E, B) pair shapes (see :meth:`alm2map`).
         """
-        assert maps.shape == (self.grid.n_rings, self.grid.max_n_phi,
-                              self.K), maps.shape
+        assert maps.shape == self._maps_shape, \
+            (maps.shape, f"plan was built for {self._maps_shape}")
         maps = jnp.asarray(maps)
         alm = self._anal_fn(self.backends["anal"])(maps)
         for _ in range(iters):
@@ -432,13 +561,14 @@ class Plan:
         """Estimated working-set bytes per buffer class."""
         g = self.grid
         M, L1, K = self.m_max + 1, self.l_max + 1, self.K
+        ncomp = 1 if self.spin == 0 else 2
         csize = 16 if self.dtype == "float64" else 8
         rsize = 8 if self.dtype == "float64" else 4
         out = {
-            "alm_bytes": M * L1 * K * csize,
-            "maps_bytes": g.n_rings * g.max_n_phi * K * rsize,
-            "delta_bytes": M * g.n_rings * K * csize,
-            "seed_bytes": (2 * M * g.n_rings * 4
+            "alm_bytes": M * L1 * K * csize * ncomp,
+            "maps_bytes": g.n_rings * g.max_n_phi * K * rsize * ncomp,
+            "delta_bytes": M * g.n_rings * K * csize * ncomp,
+            "seed_bytes": (2 * M * g.n_rings * 4 * ncomp
                            if any(b.startswith("pallas")
                                   for b in self.backends.values()) else 0),
         }
@@ -454,13 +584,15 @@ class Plan:
         """
         w = roofline.sht_work(self.l_max, self.m_max, self.grid.n_rings,
                               self.grid.max_n_phi, self.K,
-                              fft_lengths=self._sht.phase.fft_lengths)
+                              fft_lengths=self._sht.phase.fft_lengths,
+                              spin=self.spin)
         return {
             "signature": {
                 "grid": self.grid.name, "n_rings": self.grid.n_rings,
                 "n_phi": self.grid.max_n_phi, "l_max": self.l_max,
                 "m_max": self.m_max, "K": self.K, "dtype": self.dtype,
-                "fold": self.fold, "key": self._signature_key,
+                "fold": self.fold, "spin": self.spin,
+                "key": self._signature_key,
             },
             "mode": self.mode,
             "backends": dict(self.backends),
@@ -483,7 +615,8 @@ class Plan:
         s = d["signature"]
         lines = [
             f"Plan {s['grid']} l_max={s['l_max']} m_max={s['m_max']} "
-            f"K={s['K']} {s['dtype']} fold={s['fold']} mode={d['mode']}",
+            f"K={s['K']} {s['dtype']} fold={s['fold']} "
+            f"spin={s['spin']} mode={d['mode']}",
             f"  rings={s['n_rings']} n_phi={s['n_phi']} "
             f"n_lm={d['work']['n_lm']} "
             f"flops/dir~{d['work']['total_flops']:.3g}",
@@ -559,7 +692,7 @@ def _resolve_grid(grid, l_max, nside, cache_kind, cache_dir):
 def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
               *, nside: Optional[int] = None, m_max: Optional[int] = None,
               K: int = 1, dtype: str = "float64", mode: str = "auto",
-              fold: bool = False, cache: str = "auto",
+              fold: bool = False, spin: int = 0, cache: str = "auto",
               cache_dir: Optional[str] = None,
               n_shards: Optional[int] = None) -> Plan:
     """Build (or fetch) the transform plan for a problem signature.
@@ -578,6 +711,10 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
         explicit backend name (``"jnp"``, ``"pallas_vpu"``, ``"pallas_mxu"``,
         ``"dist"``).
     fold : use the equator-fold optimisation (symmetric grids only).
+    spin : 0 (scalar) or 2 (polarisation).  A spin-2 plan transforms
+        (E, B) alm pairs ``(2, M, L, K)`` <-> (Q, U) map pairs
+        ``(2, R, n_phi, K)`` on every backend; costs ~2x the Legendre
+        panels (the lambda^{+/-} pair) at the same FFT structure.
     cache : ``"auto"`` (memory; disk iff $REPRO_CACHE_DIR is set),
         ``"memory"``, ``"disk"``, or ``"off"``.
     cache_dir : override the on-disk cache location.
@@ -592,6 +729,10 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     if mode not in ("auto", "model") + BACKENDS:
         raise ValueError(f"unknown mode {mode!r}: expected 'auto', 'model' "
                          f"or a backend name {BACKENDS}")
+    if spin not in (0, 2):
+        raise ValueError(f"unsupported spin {spin!r}: expected 0 or 2")
+    if spin and fold:
+        raise ValueError("fold is not supported for spin transforms")
     if cache == "auto":
         cache_kind = "disk" if (cache_dir or os.environ.get("REPRO_CACHE_DIR")) \
             else "memory"
@@ -606,6 +747,8 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     m_max = l_max if m_max is None else m_max
     assert m_max <= l_max, (m_max, l_max)
     assert dtype in ("float64", "float32"), dtype
+    if spin:
+        assert l_max >= spin, (l_max, spin)
     if fold:
         assert g.equator_symmetric, "fold requires a symmetric grid"
 
@@ -613,13 +756,13 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     # cache="off" must not shadow a later request for disk persistence.
     sig_key = plancache.signature_key(
         "plan", l_max=l_max, m_max=m_max, K=K, dtype=dtype, mode=mode,
-        fold=fold, n_shards=n_shards, cache_kind=cache_kind,
+        fold=fold, spin=spin, n_shards=n_shards, cache_kind=cache_kind,
         cache_dir=cache_dir, **grid_sig)
     if sig_key in _PLANS:
         plancache.stats().memory_hits += 1
         return _PLANS[sig_key]
 
-    plan = Plan(g, l_max, m_max, K, dtype, mode=mode, fold=fold,
+    plan = Plan(g, l_max, m_max, K, dtype, mode=mode, fold=fold, spin=spin,
                 cache_kind=cache_kind, cache_dir=cache_dir,
                 n_shards=n_shards, signature_key=sig_key)
     elig = backend_eligibility(g, dtype, n_shards)

@@ -99,17 +99,71 @@ def _f32_step(l, m_f, x, pp, pc, sc, pmm, pms):
     return new_p2, new_c2, new_s2, value
 
 
+def _f32_step_spin(l, m_f, mp_f, x, pp, pc, sc, pmm, pms):
+    """One step of the generalised (Wigner-d) scaled recurrence, float32.
+
+    The spin-weighted lambda^{(m')} functions satisfy
+    lam_l = (a_l x + b_l) lam_{l-1} - c_l lam_{l-2} seeded at
+    l0 = max(m, |m'|) (see core/legendre.py); coefficients are recomputed
+    on the fly like the scalar beta.  ``mp_f`` is this row's m' (scalar
+    f32); everything else as in `_f32_step`.
+    """
+    lf = l.astype(jnp.float32) if hasattr(l, "astype") else jnp.float32(l)
+    l0 = jnp.maximum(m_f, jnp.abs(mp_f))
+    ls = jnp.maximum(lf, l0 + 1.0)
+    d2 = jnp.maximum((ls * ls - m_f * m_f) * (ls * ls - mp_f * mp_f), 1e-30)
+    lm1 = ls - 1.0
+    d2m1 = jnp.maximum((lm1 * lm1 - m_f * m_f) * (lm1 * lm1 - mp_f * mp_f),
+                       0.0)
+    s2l = jnp.sqrt(4.0 * ls * ls - 1.0)
+    inv_d = jax.lax.rsqrt(d2)
+    inv_lm1 = 1.0 / jnp.maximum(lm1, 1.0)
+    a = ls * s2l * inv_d
+    b = -(m_f * mp_f) * s2l * inv_d * inv_lm1
+    c = (jnp.sqrt((2.0 * ls + 1.0) / jnp.maximum(2.0 * ls - 3.0, 1.0))
+         * ls * jnp.sqrt(d2m1) * inv_d * inv_lm1)
+
+    p_rec = (a * x + b) * pc - c * pp
+    is_seed = lf == l0
+    before = lf < l0
+    new_c = jnp.where(before, 0.0, jnp.where(is_seed, pmm, p_rec))
+    new_p = jnp.where(before | is_seed, 0.0, pc)
+    new_s = jnp.where(is_seed, pms, sc)
+
+    grow = (jnp.abs(new_c) > _BIG) & (new_s < 0)
+    new_c = jnp.where(grow, new_c * _INV_BIG2, new_c)
+    new_p = jnp.where(grow, new_p * _INV_BIG2, new_p)
+    new_s = jnp.where(grow, new_s + 1, new_s)
+    shrink = (jnp.abs(new_c) < 1.0 / _BIG) & (jnp.abs(new_p) < 1.0 / _BIG) \
+        & ~before & ~is_seed
+    new_c2 = jnp.where(shrink, new_c * _BIG2, new_c)
+    new_p2 = jnp.where(shrink, new_p * _BIG2, new_p)
+    new_s2 = jnp.where(shrink, new_s - 1, new_s)
+
+    value = jnp.where((new_s2 == 0) & ~before, new_c2, 0.0)
+    return new_p2, new_c2, new_s2, value
+
+
+def _step(spin, l, m_f, mp_f, x, pp, pc, sc, pmm, pms):
+    """Static dispatch between the scalar and spin recurrence steps."""
+    if spin:
+        return _f32_step_spin(l, m_f, mp_f, x, pp, pc, sc, pmm, pms)
+    return _f32_step(l, m_f, x, pp, pc, sc, pmm, pms)
+
+
 # =============================================================================
 # Synthesis (inverse transform stage 1): Delta_m(r) = sum_l a_lm P_lm(r)
 # =============================================================================
 
 
-def _synth_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
-                      pp_ref, pc_ref, sc_ref, *, lp_size, n_k2, fold):
+def _synth_vpu_kernel(m_vals_ref, mp_vals_ref, x_ref, pmm_ref, pms_ref,
+                      a_ref, out_ref, pp_ref, pc_ref, sc_ref, *, lp_size,
+                      n_k2, fold, spin):
     mi = pl.program_id(0)
     lp = pl.program_id(2)
     m = m_vals_ref[mi]
     m_f = m.astype(jnp.float32)
+    mp_f = mp_vals_ref[mi].astype(jnp.float32)
     l0 = lp * lp_size
 
     @pl.when(lp == 0)
@@ -129,7 +183,8 @@ def _synth_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
         def body(j, carry):
             acc, pp, pc, sc = carry
             l = l0 + j
-            pp, pc, sc, val = _f32_step(l, m_f, x, pp, pc, sc, pmm, pms)
+            pp, pc, sc, val = _step(spin, l, m_f, mp_f, x, pp, pc, sc,
+                                    pmm, pms)
             av = a_ref[0, j, :]              # (2K,)
             contrib = av[:, None, None] * val[None, :, :]   # (2K, 8, 128)
             if fold:
@@ -150,12 +205,13 @@ def _synth_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
         sc_ref[...] = sc
 
 
-def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
+def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False, mp_vals=None,
               lp_size=128, interpret=True):
     """VPU synthesis kernel.
 
     a      : (Mp, L1p, 2K) f32, L1p a multiple of lp_size, rows l<m zero
     m_vals : (Mp,) i32 (plan m per slot; -1 padding rows never seed)
+    mp_vals: (Mp,) i32 Wigner m' per row (None -> scalar P_lm path)
     x2d    : (R1, 128) f32 cos(theta), R1 a multiple of 8
     pmm    : (Mp, R1, 128) f32 seed mantissas;  pms likewise i32 scales
     returns: (Mp, P, 2K, R1, 128) f32 with P = 2 (even, odd) if fold else 1
@@ -163,14 +219,18 @@ def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
     Mp, L1p, K2 = a.shape
     R1 = x2d.shape[0]
     assert L1p % lp_size == 0 and R1 % 8 == 0
+    spin = mp_vals is not None
+    assert not (spin and fold), "fold is not supported on the spin path"
+    mp = jnp.zeros(Mp, jnp.int32) if mp_vals is None \
+        else jnp.asarray(mp_vals, jnp.int32)
     n_par = 2 if fold else 1
     grid = (Mp, R1 // 8, L1p // lp_size)
     kernel = functools.partial(_synth_vpu_kernel, lp_size=lp_size,
-                               n_k2=K2, fold=fold)
+                               n_k2=K2, fold=fold, spin=spin)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((8, 128), lambda m, rb, lp, *_refs: (rb, 0)),
@@ -190,15 +250,17 @@ def synth_vpu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-    )(m_vals, x2d, pmm, pms, a)
+    )(m_vals, mp, x2d, pmm, pms, a)
 
 
-def _synth_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
-                      pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size, fold):
+def _synth_mxu_kernel(m_vals_ref, mp_vals_ref, x_ref, pmm_ref, pms_ref,
+                      a_ref, out_ref, pp_ref, pc_ref, sc_ref, panel_ref, *,
+                      lp_size, fold, spin):
     mi = pl.program_id(0)
     lp = pl.program_id(2)
     m = m_vals_ref[mi]
     m_f = m.astype(jnp.float32)
+    mp_f = mp_vals_ref[mi].astype(jnp.float32)
     l0 = lp * lp_size
 
     @pl.when(lp == 0)
@@ -216,7 +278,8 @@ def _synth_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
 
         def gen(j, carry):
             pp, pc, sc = carry
-            pp, pc, sc, val = _f32_step(l0 + j, m_f, x, pp, pc, sc, pmm, pms)
+            pp, pc, sc, val = _step(spin, l0 + j, m_f, mp_f, x, pp, pc, sc,
+                                    pmm, pms)
             panel_ref[pl.ds(j, 1), :] = val   # P panel row (l on sublanes)
             return pp, pc, sc
 
@@ -246,7 +309,7 @@ def _synth_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, a_ref, out_ref,
             out_ref[0, 0] += c
 
 
-def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
+def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False, mp_vals=None,
               lp_size=128, interpret=True):
     """MXU synthesis kernel (multi-map panel matmul).
 
@@ -257,16 +320,21 @@ def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
     R1 = x2d.shape[0]
     R = R1 * 128
     assert L1p % lp_size == 0
+    spin = mp_vals is not None
+    assert not (spin and fold), "fold is not supported on the spin path"
+    mp = jnp.zeros(Mp, jnp.int32) if mp_vals is None \
+        else jnp.asarray(mp_vals, jnp.int32)
     n_par = 2 if fold else 1
     grid = (Mp, R1, L1p // lp_size)
     x_flat = x2d.reshape(R1, 128)
     pmm_f = pmm.reshape(Mp, R1, 128)
     pms_f = pms.reshape(Mp, R1, 128)
-    kernel = functools.partial(_synth_mxu_kernel, lp_size=lp_size, fold=fold)
+    kernel = functools.partial(_synth_mxu_kernel, lp_size=lp_size, fold=fold,
+                               spin=spin)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 128), lambda m, rb, lp, *_refs: (rb, 0)),
@@ -287,7 +355,7 @@ def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-    )(m_vals, x_flat, pmm_f, pms_f, a)
+    )(m_vals, mp, x_flat, pmm_f, pms_f, a)
 
 
 # =============================================================================
@@ -295,9 +363,9 @@ def synth_mxu(a, m_vals, x2d, pmm, pms, *, l_max, fold=False,
 # =============================================================================
 
 
-def _anal_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref,
-                           out_ref, pp_ref, pc_ref, sc_ref, acc_ref, *,
-                           lp_size, fold):
+def _anal_vpu_kernel(m_vals_ref, mp_vals_ref, x_ref, pmm_ref, pms_ref,
+                     dw_ref, out_ref, pp_ref, pc_ref, sc_ref, acc_ref, *,
+                     lp_size, fold, spin):
     """Analysis VPU kernel.  A separate VMEM accumulator (acc_ref) holds the
     current panel's rows; it is added into out_ref at the end of the grid
     step so the out block accumulates across ring blocks (@rb==0 init)."""
@@ -306,6 +374,7 @@ def _anal_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref,
     lp = pl.program_id(2)
     m = m_vals_ref[mi]
     m_f = m.astype(jnp.float32)
+    mp_f = mp_vals_ref[mi].astype(jnp.float32)
     l0 = lp * lp_size
 
     @pl.when(lp == 0)
@@ -329,7 +398,8 @@ def _anal_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref,
         def body(j, carry):
             pp, pc, sc = carry
             l = l0 + j
-            pp, pc, sc, val = _f32_step(l, m_f, x, pp, pc, sc, pmm, pms)
+            pp, pc, sc, val = _step(spin, l, m_f, mp_f, x, pp, pc, sc,
+                                    pmm, pms)
             if fold:
                 par = (l + m) % 2
                 sel = (jnp.arange(2, dtype=jnp.int32) == par)
@@ -350,7 +420,7 @@ def _anal_vpu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref,
 
 
 def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
-             lp_size=128, interpret=True):
+             mp_vals=None, lp_size=128, interpret=True):
     """VPU analysis kernel.
 
     dw     : (Mp, P, 2K, R1, 128) weighted Delta (P = 2 (e,o) if fold else 1)
@@ -359,13 +429,17 @@ def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
     Mp, n_par, K2 = dw.shape[0], dw.shape[1], dw.shape[2]
     R1 = dw.shape[3]
     assert l1p % lp_size == 0 and R1 % 8 == 0
+    spin = mp_vals is not None
+    assert not (spin and fold), "fold is not supported on the spin path"
+    mp = jnp.zeros(Mp, jnp.int32) if mp_vals is None \
+        else jnp.asarray(mp_vals, jnp.int32)
     grid = (Mp, R1 // 8, l1p // lp_size)
     kernel = functools.partial(_anal_vpu_kernel, lp_size=lp_size,
-                               fold=fold)
+                               fold=fold, spin=spin)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((8, 128), lambda m, rb, lp, *_refs: (rb, 0)),
@@ -387,16 +461,18 @@ def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-    )(m_vals, x2d, pmm, pms, dw)
+    )(m_vals, mp, x2d, pmm, pms, dw)
 
 
-def _anal_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
-                     pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size, fold):
+def _anal_mxu_kernel(m_vals_ref, mp_vals_ref, x_ref, pmm_ref, pms_ref,
+                     dw_ref, out_ref, pp_ref, pc_ref, sc_ref, panel_ref, *,
+                     lp_size, fold, spin):
     mi = pl.program_id(0)
     rb = pl.program_id(1)
     lp = pl.program_id(2)
     m = m_vals_ref[mi]
     m_f = m.astype(jnp.float32)
+    mp_f = mp_vals_ref[mi].astype(jnp.float32)
     l0 = lp * lp_size
 
     @pl.when(lp == 0)
@@ -417,7 +493,8 @@ def _anal_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
 
         def gen(j, carry):
             pp, pc, sc = carry
-            pp, pc, sc, val = _f32_step(l0 + j, m_f, x, pp, pc, sc, pmm, pms)
+            pp, pc, sc, val = _step(spin, l0 + j, m_f, mp_f, x, pp, pc, sc,
+                                    pmm, pms)
             panel_ref[pl.ds(j, 1), :] = val
             return pp, pc, sc
 
@@ -444,7 +521,7 @@ def _anal_mxu_kernel(m_vals_ref, x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
 
 
 def anal_mxu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
-             lp_size=128, interpret=True):
+             mp_vals=None, lp_size=128, interpret=True):
     """MXU analysis kernel.
 
     dw     : (Mp, P, R, 2K) weighted Delta (ring-major), R = R1 * 128
@@ -453,12 +530,17 @@ def anal_mxu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
     Mp, n_par, R, K2 = dw.shape
     R1 = R // 128
     assert l1p % lp_size == 0 and R % 128 == 0
+    spin = mp_vals is not None
+    assert not (spin and fold), "fold is not supported on the spin path"
+    mp = jnp.zeros(Mp, jnp.int32) if mp_vals is None \
+        else jnp.asarray(mp_vals, jnp.int32)
     grid = (Mp, R1, l1p // lp_size)
-    kernel = functools.partial(_anal_mxu_kernel, lp_size=lp_size, fold=fold)
+    kernel = functools.partial(_anal_mxu_kernel, lp_size=lp_size, fold=fold,
+                               spin=spin)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
+            num_scalar_prefetch=2,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((1, 128), lambda m, rb, lp, *_refs: (rb, 0)),
@@ -480,4 +562,4 @@ def anal_mxu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
         interpret=interpret,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
-    )(m_vals, x2d, pmm, pms, dw)
+    )(m_vals, mp, x2d, pmm, pms, dw)

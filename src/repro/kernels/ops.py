@@ -26,7 +26,8 @@ from repro.kernels import legendre_pallas as lk
 from repro.kernels import ref as kref
 
 __all__ = ["synth", "anal", "delta_from_alm_auto", "alm_from_delta_auto",
-           "pick_variant", "should_interpret"]
+           "delta_from_alm_spin_auto", "alm_from_delta_spin_auto",
+           "spin_rows", "pick_variant", "should_interpret"]
 
 
 def should_interpret() -> bool:
@@ -51,10 +52,12 @@ def _pad_to(n: int, mult: int) -> int:
 
 
 def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
-          lp_size=128, interpret=None):
+          mp_vals=None, lp_size=128, interpret=None):
     """Kernel-backed synthesis with automatic padding.
 
     a: (Mp, L1, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
+    ``mp_vals`` (Mp,) switches rows to the spin-weighted (Wigner m')
+    recurrence -- seeds must then come from ref.prepare_seeds_spin.
     Returns (Mp, P, R, 2K) f32 matching ref.synth_ref.
     """
     if interpret is None:
@@ -74,23 +77,24 @@ def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
     pms2 = pms_p.reshape(Mp, R1, 128)
     if var == "vpu":
         out = lk.synth_vpu(a_p, jnp.asarray(m_vals, jnp.int32), x2d, pmm2,
-                           pms2, l_max=l_max, fold=fold, lp_size=lp_size,
-                           interpret=interpret)
+                           pms2, l_max=l_max, fold=fold, mp_vals=mp_vals,
+                           lp_size=lp_size, interpret=interpret)
         n_par = out.shape[1]
         out = jnp.moveaxis(out, 2, -1)            # (Mp, P, R1, 128, 2K)
         out = out.reshape(Mp, n_par, Rp, K2)
     else:
         out = lk.synth_mxu(a_p, jnp.asarray(m_vals, jnp.int32), x2d, pmm2,
-                           pms2, l_max=l_max, fold=fold, lp_size=lp_size,
-                           interpret=interpret)
+                           pms2, l_max=l_max, fold=fold, mp_vals=mp_vals,
+                           lp_size=lp_size, interpret=interpret)
     return out[:, :, :R, :]
 
 
 def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
-         variant=None, lp_size=128, interpret=None):
+         variant=None, mp_vals=None, lp_size=128, interpret=None):
     """Kernel-backed analysis with automatic padding.
 
     dw: (Mp, P, R, 2K) f32;  returns (Mp, L1, 2K) f32 (L1 = l_max+1).
+    ``mp_vals`` as in :func:`synth`.
     """
     if interpret is None:
         interpret = should_interpret()
@@ -111,10 +115,12 @@ def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
     if var == "vpu":
         dw_k = jnp.moveaxis(dw_p.reshape(Mp, n_par, R1, 128, K2), -1, 2)
         out = lk.anal_vpu(dw_k, mv, x2d, pmm2, pms2, l_max=l_max, l1p=L1p,
-                          fold=fold, lp_size=lp_size, interpret=interpret)
+                          fold=fold, mp_vals=mp_vals, lp_size=lp_size,
+                          interpret=interpret)
     else:
         out = lk.anal_mxu(dw_p, mv, x2d, pmm2, pms2, l_max=l_max, l1p=L1p,
-                          fold=fold, lp_size=lp_size, interpret=interpret)
+                          fold=fold, mp_vals=mp_vals, lp_size=lp_size,
+                          interpret=interpret)
     return out[:, :L1, :]
 
 
@@ -177,3 +183,63 @@ def alm_from_delta_auto(dw_re, dw_im, m_vals, geom, log_mu_all, *, l_max,
     out = anal(dwk, m_vals, jnp.asarray(x, jnp.float32), pmm, pms,
                l_max=l_max, fold=fold, variant=variant)    # (M, L1, 2K)
     return out[..., :K].astype(dtype), out[..., K:].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# spin-2 adapters: two stacked Wigner-d recurrences (m' = -2 | +2 row
+# blocks) through the same kernels; component mixing via legendre.spin_*.
+# ---------------------------------------------------------------------------
+
+
+def spin_rows(m_vals):
+    """Stack the m rows for the two spin recurrences: (m2, mp2), (2M,)."""
+    from repro.core import legendre
+    return legendre._spin_rows(m_vals)
+
+
+def delta_from_alm_spin_auto(e_re, e_im, b_re, b_im, m_vals, geom, *, l_max,
+                             m_max, dtype=jnp.float32, variant=None):
+    """Spin-2 drop-in for legendre.delta_from_alm_spin backed by the kernels.
+
+    e/b re/im: (M, L1, K); geom: plan.ring_geometry dict (or any dict with
+    ``cos_theta``/``sin_theta``).  Returns (dq_re, dq_im, du_re, du_im),
+    each (M, R, K) in the geometry's ring order.  Kernel math is float32.
+    """
+    from repro.core import legendre
+    from repro.kernels import ref as kref_
+    M, L1, K = e_re.shape
+    x = geom["cos_theta"]
+    sin = geom["sin_theta"]
+    m2, mp2 = spin_rows(m_vals)
+    a2_re, a2_im = legendre.spin_pack_alm(e_re, e_im, b_re, b_im)
+    a = jnp.concatenate([a2_re, a2_im], axis=-1).astype(jnp.float32)
+    pmm, pms = kref_.prepare_seeds_spin(m2, mp2, x, sin, m_max=m_max)
+    out = synth(a, m2, jnp.asarray(x, jnp.float32), pmm, pms, l_max=l_max,
+                fold=False, variant=variant, mp_vals=mp2)   # (2M, 1, R, 2K)
+    flat = out[:, 0]
+    d_re = flat[..., :K].astype(dtype)
+    d_im = flat[..., K:].astype(dtype)
+    return legendre.spin_unpack_delta(d_re, d_im)
+
+
+def alm_from_delta_spin_auto(dq_re, dq_im, du_re, du_im, m_vals, geom, *,
+                             l_max, m_max, dtype=jnp.float32, variant=None):
+    """Spin-2 drop-in for legendre.alm_from_delta_spin backed by the kernels.
+
+    dq/du re/im: (M, R, K) weighted Delta_Q/Delta_U.  Returns
+    (e_re, e_im, b_re, b_im), each (M, L1, K).
+    """
+    from repro.core import legendre
+    from repro.kernels import ref as kref_
+    M, R, K = dq_re.shape
+    x = geom["cos_theta"]
+    sin = geom["sin_theta"]
+    m2, mp2 = spin_rows(m_vals)
+    d2_re, d2_im = legendre.spin_pack_delta(dq_re, dq_im, du_re, du_im)
+    dw = jnp.concatenate([d2_re, d2_im], axis=-1).astype(jnp.float32)
+    pmm, pms = kref_.prepare_seeds_spin(m2, mp2, x, sin, m_max=m_max)
+    out = anal(dw[:, None], m2, jnp.asarray(x, jnp.float32), pmm, pms,
+               l_max=l_max, fold=False, variant=variant, mp_vals=mp2)
+    a_re = out[..., :K].astype(dtype)
+    a_im = out[..., K:].astype(dtype)
+    return legendre.spin_unpack_alm(a_re, a_im)

@@ -14,9 +14,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.legendre_pallas import _f32_step
+from repro.core import legendre as _legendre
+from repro.kernels.legendre_pallas import _f32_step, _f32_step_spin
 
-__all__ = ["synth_ref", "anal_ref", "prepare_seeds"]
+__all__ = ["synth_ref", "anal_ref", "prepare_seeds", "prepare_seeds_spin"]
 
 
 def prepare_seeds(m_vals, sin_theta, log_mu_all, scale_bits: int = 64):
@@ -37,17 +38,45 @@ def prepare_seeds(m_vals, sin_theta, log_mu_all, scale_bits: int = 64):
     return mant.astype(jnp.float32), scale.astype(jnp.int32)
 
 
+def prepare_seeds_spin(m_vals, mprime_vals, cos_theta, sin_theta,
+                       m_max=None, scale_bits: int = 64):
+    """Scaled spin-weighted lambda^{(m')} seeds for the f32 kernels.
+
+    m_vals/mprime_vals: (Ms,) int rows (m < 0 padding -> inert 0 seeds);
+    cos_theta/sin_theta: (R,) f64.  ``m_max`` must be given when ``m_vals``
+    is traced (the distributed path).  Returns (pmm f32, pms i32), (Ms, R).
+    """
+    if m_max is None:
+        m_max = int(np.max(np.asarray(m_vals)))
+    logfact = _legendre.log_factorials(2 * max(int(m_max), 2) + 1)
+    mant, scale = _legendre.spin_seeds_scaled(
+        m_vals, mprime_vals, cos_theta, sin_theta, logfact,
+        dtype=jnp.float32, scale_bits=scale_bits)
+    return mant, scale
+
+
+def _ref_step(spin, l, m_f, mp_f, xb, pp, pc, sc, pmm, pms):
+    if spin:
+        return _f32_step_spin(l, m_f, mp_f, xb, pp, pc, sc, pmm, pms)
+    return _f32_step(l, m_f, xb, pp, pc, sc, pmm, pms)
+
+
 @functools.partial(jax.jit, static_argnames=("l_max", "fold"))
-def synth_ref(a, m_vals, x, pmm, pms, *, l_max: int, fold: bool = False):
+def synth_ref(a, m_vals, x, pmm, pms, *, l_max: int, fold: bool = False,
+              mp_vals=None):
     """Oracle for synth_{vpu,mxu}.
 
     a: (Mp, L1p, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
-    Returns (Mp, P, R, 2K) f32 (P = 2 even/odd if fold else 1).
+    ``mp_vals`` (Mp,) selects the spin-weighted recurrence per row
+    (None -> scalar P_lm).  Returns (Mp, P, R, 2K) f32 (P = 2 if fold).
     """
     Mp, L1p, K2 = a.shape
     R = x.shape[0]
     m = jnp.asarray(m_vals, jnp.int32)[:, None]
     m_f = m.astype(jnp.float32)
+    spin = mp_vals is not None
+    mp_f = (jnp.asarray(mp_vals, jnp.int32)[:, None].astype(jnp.float32)
+            if spin else jnp.zeros_like(m_f))
     xb = jnp.asarray(x, jnp.float32)[None, :]
     n_par = 2 if fold else 1
     carry0 = (jnp.zeros((Mp, R), jnp.float32), jnp.zeros((Mp, R), jnp.float32),
@@ -56,7 +85,8 @@ def synth_ref(a, m_vals, x, pmm, pms, *, l_max: int, fold: bool = False):
 
     def body(l, carry):
         pp, pc, sc, acc = carry
-        pp, pc, sc, val = _f32_step(l, m_f, xb, pp, pc, sc, pmm, pms)
+        pp, pc, sc, val = _ref_step(spin, l, m_f, mp_f, xb, pp, pc, sc,
+                                    pmm, pms)
         av = jax.lax.dynamic_index_in_dim(a, l, axis=1, keepdims=False)
         contrib = val[:, :, None] * av[:, None, :]       # (Mp, R, 2K)
         if fold:
@@ -74,7 +104,7 @@ def synth_ref(a, m_vals, x, pmm, pms, *, l_max: int, fold: bool = False):
 
 @functools.partial(jax.jit, static_argnames=("l_max", "l1p", "fold"))
 def anal_ref(dw, m_vals, x, pmm, pms, *, l_max: int, l1p: int,
-             fold: bool = False):
+             fold: bool = False, mp_vals=None):
     """Oracle for anal_{vpu,mxu}.
 
     dw: (Mp, P, R, 2K) f32 weighted Delta;  returns (Mp, L1p, 2K) f32.
@@ -82,13 +112,17 @@ def anal_ref(dw, m_vals, x, pmm, pms, *, l_max: int, l1p: int,
     Mp, n_par, R, K2 = dw.shape
     m = jnp.asarray(m_vals, jnp.int32)[:, None]
     m_f = m.astype(jnp.float32)
+    spin = mp_vals is not None
+    mp_f = (jnp.asarray(mp_vals, jnp.int32)[:, None].astype(jnp.float32)
+            if spin else jnp.zeros_like(m_f))
     xb = jnp.asarray(x, jnp.float32)[None, :]
     carry0 = (jnp.zeros((Mp, R), jnp.float32), jnp.zeros((Mp, R), jnp.float32),
               jnp.zeros((Mp, R), jnp.int32))
 
     def step(carry, l):
         pp, pc, sc = carry
-        pp, pc, sc, val = _f32_step(l, m_f, xb, pp, pc, sc, pmm, pms)
+        pp, pc, sc, val = _ref_step(spin, l, m_f, mp_f, xb, pp, pc, sc,
+                                    pmm, pms)
         if fold:
             par = ((l + m) % 2)[..., None]               # (Mp, 1, 1)
             d = jnp.where(par == 0, dw[:, 0], dw[:, 1])

@@ -50,7 +50,7 @@ HW_HOST = Hardware("host-cpu", 2e11, 5e10, 1e10)
 
 
 def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
-             K: int, fft_lengths=None) -> dict:
+             K: int, fft_lengths=None, spin: int = 0) -> dict:
     """Operation counts of one transform direction (paper §3 complexity).
 
     Returns a dict with:
@@ -65,10 +65,15 @@ def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
                               grid's phase stage) the cost is summed per
                               bucketed ring instead of assuming one n_phi;
       ``bytes``            -- HBM traffic lower bound (alm + maps + Delta).
+
+    ``spin=2`` doubles every term: the spin path runs TWO Wigner-d
+    recurrences per m (the lambda^{+/-} panel pair), accumulates two alm
+    components (E, B) and transforms two maps (Q, U).
     """
+    ncomp = 1 if spin == 0 else 2
     n_lm = (m_max + 1) * (l_max + 1) - m_max * (m_max + 1) // 2
-    rec = 10.0 * n_lm * n_rings
-    acc = 4.0 * n_lm * n_rings * K
+    rec = 10.0 * n_lm * n_rings * ncomp
+    acc = 4.0 * n_lm * n_rings * K * ncomp
     if fft_lengths is not None:
         fl = np.asarray(fft_lengths, dtype=np.float64)
         fft = 5.0 * float(np.sum(fl * np.log2(np.maximum(fl, 2.0)))) * K
@@ -76,9 +81,11 @@ def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
     else:
         fft = 5.0 * n_rings * n_phi * float(np.log2(max(n_phi, 2))) * K
         maps_elems = float(n_rings * n_phi) * K
-    byts = (16.0 * (m_max + 1) * (l_max + 1) * K      # alm (complex)
-            + 8.0 * maps_elems                        # maps
-            + 16.0 * (m_max + 1) * n_rings * K)       # Delta (complex)
+    fft *= ncomp
+    maps_elems *= ncomp
+    byts = (16.0 * (m_max + 1) * (l_max + 1) * K * ncomp   # alm (complex)
+            + 8.0 * maps_elems                             # maps
+            + 16.0 * (m_max + 1) * n_rings * K * ncomp)    # Delta (complex)
     return {"n_lm": n_lm, "recurrence_flops": rec, "accum_flops": acc,
             "fft_flops": fft, "bytes": byts,
             "total_flops": rec + acc + fft}
@@ -121,7 +128,7 @@ BACKEND_MODELS = {
 def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
                      n_phi: int, K: int, direction: str = "synth",
                      hw: Hardware = HW_V5E, n_devices: int = 1,
-                     fft_lengths=None) -> float:
+                     fft_lengths=None, spin: int = 0) -> float:
     """Predicted seconds for one transform on ``backend`` (3-term model).
 
     compute = recurrence/vector + accumulation/(matrix or vector) + fft;
@@ -129,12 +136,14 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
     bytes / link bw.  The terms are summed (no overlap assumed -- the
     paper's kernels are serial stages), and ``anal_penalty`` is applied for
     ``direction="anal"``.  ``fft_lengths`` carries a ragged grid's
-    per-ring bucket lengths into the FFT term (see `sht_work`).
+    per-ring bucket lengths into the FFT term; ``spin=2`` doubles every
+    term including the exchanged Delta block (see `sht_work`).
     """
     if backend not in BACKEND_MODELS:
         raise ValueError(f"unknown backend {backend!r}")
     m = BACKEND_MODELS[backend]
-    w = sht_work(l_max, m_max, n_rings, n_phi, K, fft_lengths=fft_lengths)
+    w = sht_work(l_max, m_max, n_rings, n_phi, K, fft_lengths=fft_lengths,
+                 spin=spin)
     vec_rate = hw.peak_flops * m.vector_eff
     t = w["recurrence_flops"] / vec_rate + w["fft_flops"] / vec_rate
     if m.matrix_eff > 0:
@@ -144,8 +153,9 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
     t += w["bytes"] / hw.hbm_bw
     if backend == "dist" and n_devices > 1:
         t /= n_devices
-        # one tiled all_to_all of the (M, R, 2K) Delta block per transform
-        wire = 16.0 * (m_max + 1) * n_rings * K / n_devices \
+        # one tiled all_to_all of the (M, R, ncomp*2K) Delta block
+        ncomp = 1 if spin == 0 else 2
+        wire = 16.0 * (m_max + 1) * n_rings * K * ncomp / n_devices \
             * (n_devices - 1) / n_devices
         t += wire / hw.link_bw
     if direction == "anal":
