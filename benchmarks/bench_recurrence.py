@@ -11,6 +11,18 @@ Compares the engines on the recurrence hot spot (paper's >90% step):
 Also reproduces the paper's direct-vs-inverse dichotomy measurement: the
 analysis direction's reduction structure vs the synthesis direction.
 Columns: name, us_per_call, derived = GFlop/s | notes.
+
+Two extra row families cover the triangular m-pair packing
+(kernels/pack.py):
+
+  * ``recurrence/{synth,anal}/pallas-<var>-{plain,packed}/...`` -- wall
+    time of the same kernel on the dense rectangular grid vs the packed
+    min-max-paired grid (interpret mode on CPU);
+  * ``recurrence/panels_ratio/lmax<N>`` -- analytic grid-step counts:
+    the emitted value is plain_launched / packed (every launched step
+    pays grid latency); the derived column carries the raw counts and
+    the worked-panel ratio.  The l_max=512 row is the acceptance metric
+    for the packing optimisation (>= 1.5x fewer executed panels).
 """
 
 import jax
@@ -20,6 +32,7 @@ import numpy as np
 import repro  # noqa: F401
 from repro.core import grids, legendre, sht
 from repro.kernels import ops as kops, ref as kref
+from repro.roofline import analysis as roofline
 from benchmarks.common import emit, smoke, time_call
 
 KEY = jax.random.PRNGKey(1)
@@ -66,7 +79,8 @@ def main():
         emit(f"recurrence/synth-fold/jnp-f64/lmax{l_max}/K{K}", dt * 1e6,
              f"{fl / dt / 1e9:.2f}")
 
-    # kernels (interpret mode): small sizes only
+    # kernels (interpret mode): small sizes only; the plain rectangular
+    # grid vs the packed triangular m-pair grid, same kernel variant
     ksizes = ((32, 1, "vpu"),) if smoke() \
         else ((96, 1, "vpu"), (96, 8, "mxu"))
     for l_max, K, var in ksizes:
@@ -79,15 +93,36 @@ def main():
         pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
         x32 = jnp.asarray(g.cos_theta, jnp.float32)
         fl = _flops(l_max, g.n_rings, K)
-        dt = time_call(lambda: kops.synth(a32, m_vals, x32, pmm, pms,
-                                          l_max=l_max, variant=var), iters=1)
-        emit(f"recurrence/synth/pallas-{var}-interp/lmax{l_max}/K{K}",
-             dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
         dw = jnp.ones((l_max + 1, 1, g.n_rings, 2 * K), jnp.float32)
-        dt = time_call(lambda: kops.anal(dw, m_vals, x32, pmm, pms,
-                                         l_max=l_max, variant=var), iters=1)
-        emit(f"recurrence/anal/pallas-{var}-interp/lmax{l_max}/K{K}",
-             dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+        times = {}
+        for layout in ("plain", "packed"):
+            dt = time_call(lambda: kops.synth(a32, m_vals, x32, pmm, pms,
+                                              l_max=l_max, variant=var,
+                                              layout=layout), iters=1)
+            times[("synth", layout)] = dt
+            emit(f"recurrence/synth/pallas-{var}-{layout}/lmax{l_max}/K{K}",
+                 dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+            dt = time_call(lambda: kops.anal(dw, m_vals, x32, pmm, pms,
+                                             l_max=l_max, variant=var,
+                                             layout=layout), iters=1)
+            times[("anal", layout)] = dt
+            emit(f"recurrence/anal/pallas-{var}-{layout}/lmax{l_max}/K{K}",
+                 dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+        for d in ("synth", "anal"):
+            ratio = times[(d, "plain")] / max(times[(d, "packed")], 1e-12)
+            emit(f"recurrence/packed_speedup/{d}/pallas-{var}/"
+                 f"lmax{l_max}/K{K}", ratio,
+                 "plain_wall / packed_wall (interpret mode)")
+
+    # analytic grid-step accounting at production sizes (cheap, always
+    # emitted -- the lmax512 row is the packing acceptance metric)
+    for l_max in (256, 512):
+        c = roofline.legendre_panel_counts(l_max, l_max)
+        emit(f"recurrence/panels_ratio/lmax{l_max}", c["launched_ratio"],
+             f"plain_launched={c['plain_launched']} "
+             f"plain_worked={c['plain_worked']} packed={c['packed']} "
+             f"worked_ratio={c['worked_ratio']:.2f} "
+             f"occupancy={c['packed_occupancy']:.2f} lp=128")
 
 
 if __name__ == "__main__":

@@ -8,6 +8,7 @@ After the CSV, a machine-readable ``BENCH_<UTC-date>.json`` summary
 current directory so the perf trajectory is trackable across PRs.
 """
 
+import argparse
 import datetime
 import json
 import os
@@ -27,8 +28,13 @@ def _git_rev() -> str:
         return "unknown"
 
 
-def write_summary(path=None) -> str:
-    """Dump the collected emit() rows as BENCH_<UTC-date>.json."""
+def write_summary(path=None, errors=None) -> str:
+    """Dump the collected emit() rows as BENCH_<UTC-date>.json.
+
+    ``errors`` (``{module_name: message}``) records benchmark modules that
+    raised -- the harness keeps going, but the JSON carries the failures
+    so scripts/check.sh can fail the gate loudly.
+    """
     import jax
     from benchmarks import common
     now = datetime.datetime.now(datetime.timezone.utc)
@@ -41,6 +47,7 @@ def write_summary(path=None) -> str:
         "smoke": bool(os.environ.get("REPRO_BENCH_SMOKE")),
         "us_per_call": {name: us for name, us, _ in common.ROWS},
         "derived": {name: d for name, _, d in common.ROWS if d},
+        "errors": dict(errors or {}),
     }
     with open(path, "w") as f:
         json.dump(payload, f, indent=2, sort_keys=True)
@@ -48,20 +55,32 @@ def write_summary(path=None) -> str:
     return path
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one small size, one rep per bench "
+                         "(same as REPRO_BENCH_SMOKE=1)")
+    ap.add_argument("-o", "--out", default=None,
+                    help="summary JSON path (default BENCH_<UTC-date>.json "
+                         "in the current directory)")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        os.environ["REPRO_BENCH_SMOKE"] = "1"
     from benchmarks import (bench_accuracy, bench_recurrence,
                             bench_scaling_model, bench_fft, bench_speedup,
                             bench_breakdown, bench_dispatch, bench_spin)
     print("name,us_per_call,derived")
+    errors = {}
     for mod in (bench_accuracy, bench_recurrence, bench_scaling_model,
                 bench_fft, bench_speedup, bench_breakdown, bench_dispatch,
                 bench_spin):
         try:
             mod.main()
         except Exception as e:  # keep the harness going
+            errors[mod.__name__] = f"{type(e).__name__}: {e}"
             print(f"{mod.__name__}/ERROR,0.0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
-    path = write_summary()
+    path = write_summary(args.out, errors)
     print(f"# summary: {path}", file=sys.stderr)
 
 

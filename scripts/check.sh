@@ -62,7 +62,31 @@ echo "== spin benchmark (one-rep smoke) =="
 # regression fails the gate loudly -- run.py swallows per-module errors
 PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.bench_spin
 
-echo "== full benchmark set (one-rep smoke) =="
-PYTHONPATH=src REPRO_BENCH_SMOKE=1 python -m benchmarks.run
+echo "== full benchmark set (one-rep smoke) + JSON trajectory validation =="
+BENCH_OUT="$(mktemp -t bench_check_XXXX.json)"
+PYTHONPATH=src python -m benchmarks.run --smoke -o "$BENCH_OUT"
+# the perf trajectory (BENCH_<date>.json) is only trustworthy if run.py
+# keeps emitting valid numeric rows -- fail loudly if it stops
+PYTHONPATH=src BENCH_OUT="$BENCH_OUT" python - <<'PY'
+import json, math, os
+path = os.environ["BENCH_OUT"]
+d = json.load(open(path))
+rows = d.get("us_per_call", {})
+assert len(rows) >= 10, f"too few benchmark rows ({len(rows)}) in {path}"
+bad = {k: v for k, v in rows.items()
+       if not isinstance(v, (int, float)) or not math.isfinite(v)}
+assert not bad, f"non-numeric benchmark rows: {bad}"
+assert not d.get("errors"), f"benchmark modules errored: {d['errors']}"
+# launched-grid-step ratio: every dense grid step pays launch latency,
+# pl.when-masked or not (the worked-panel ratio rides in the derived col)
+ratio = rows.get("recurrence/panels_ratio/lmax512")
+assert ratio is not None, "packed-panel accounting row missing"
+assert ratio >= 1.5, f"packed grid no longer >=1.5x smaller: {ratio}"
+for key in ("git_rev", "jax_version", "generated_utc"):
+    assert d.get(key), f"missing {key} in {path}"
+print(f"bench JSON OK: {len(rows)} rows, panels_ratio(lmax512)="
+      f"{ratio:.2f}")
+PY
+rm -f "$BENCH_OUT"
 
 echo "check.sh: OK"

@@ -177,6 +177,9 @@ class Plan:
         self._dist = None
         self._compiled: dict = {}
         self.backends: dict = {}
+        #: packed-vs-plain Legendre grid per direction (pallas backends
+        #: only; None elsewhere) -- the tentpole's layout dispatch.
+        self.layouts: dict = {}
         self.candidates: list[str] = []
         self.skipped: dict = {}
         self.predicted_s: dict = {}
@@ -260,10 +263,13 @@ class Plan:
 
     # -- per-backend execution ------------------------------------------------
 
-    def _synth_fn(self, backend: str):
+    def _synth_fn(self, backend: str, layout: Optional[str] = None):
         """Synthesis callable alm -> maps for ``backend`` (jitted; compiled
-        executables are cached on the plan)."""
-        key = ("synth", backend)
+        executables are cached on the plan).  ``layout`` overrides the
+        plan's packed-vs-plain choice (autotune measures both)."""
+        if layout is None:
+            layout = self.layouts.get("synth")
+        key = ("synth", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
         spin = self.spin != 0
@@ -272,8 +278,10 @@ class Plan:
                          else self._sht.alm2map)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             variant = backend.split("_")[1]
-            fn = (self._make_pallas_synth_spin(variant=variant) if spin
-                  else self._make_pallas_synth(variant=variant))
+            fn = (self._make_pallas_synth_spin(variant=variant,
+                                               layout=layout) if spin
+                  else self._make_pallas_synth(variant=variant,
+                                               layout=layout))
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
@@ -295,9 +303,11 @@ class Plan:
         self._compiled[key] = fn
         return fn
 
-    def _anal_fn(self, backend: str):
+    def _anal_fn(self, backend: str, layout: Optional[str] = None):
         """Analysis callable maps -> alm for ``backend``."""
-        key = ("anal", backend)
+        if layout is None:
+            layout = self.layouts.get("anal")
+        key = ("anal", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
         spin = self.spin != 0
@@ -306,8 +316,10 @@ class Plan:
                          else self._sht.map2alm)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             variant = backend.split("_")[1]
-            fn = (self._make_pallas_anal_spin(variant=variant) if spin
-                  else self._make_pallas_anal(variant=variant))
+            fn = (self._make_pallas_anal_spin(variant=variant,
+                                              layout=layout) if spin
+                  else self._make_pallas_anal(variant=variant,
+                                              layout=layout))
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
@@ -329,7 +341,7 @@ class Plan:
         self._compiled[key] = fn
         return fn
 
-    def _make_pallas_synth(self, variant: str):
+    def _make_pallas_synth(self, variant: str, layout=None):
         kops = _pallas_ops()
         K, nh = self.K, (self.grid.n_rings + 1) // 2
         ns = nh - 1 if self.grid.n_rings % 2 == 1 else nh
@@ -341,7 +353,7 @@ class Plan:
                 [jnp.real(alm), jnp.imag(alm)], axis=-1).astype(jnp.float32)
             out = kops.synth(a32, self._m_vals, x32, pmm, pms,
                              l_max=self.l_max, fold=self.fold,
-                             variant=variant)
+                             variant=variant, layout=layout)
             if self.fold:
                 e, o = out[:, 0], out[:, 1]               # (M, nh, 2K)
                 north = e + o
@@ -354,7 +366,7 @@ class Plan:
 
         return fn
 
-    def _make_pallas_anal(self, variant: str):
+    def _make_pallas_anal(self, variant: str, layout=None):
         kops = _pallas_ops()
         K, R = self.K, self.grid.n_rings
         nh = (R + 1) // 2
@@ -373,14 +385,15 @@ class Plan:
             else:
                 dwk = dw[:, None]                         # (M, 1, R, 2K)
             out = kops.anal(dwk, self._m_vals, x32, pmm, pms,
-                            l_max=self.l_max, fold=self.fold, variant=variant)
+                            l_max=self.l_max, fold=self.fold, variant=variant,
+                            layout=layout)
             alm = (out[..., :K] + 1j * out[..., K:]).astype(cdt)
             mask = jnp.asarray(alm_mask(self.l_max, self.m_max))[..., None]
             return jnp.where(mask, alm, 0.0)
 
         return fn
 
-    def _make_pallas_synth_spin(self, variant: str):
+    def _make_pallas_synth_spin(self, variant: str, layout=None):
         """Spin-2 kernel synthesis: stacked lambda^{(m' = -+2)} rows through
         the same kernels, component mixing host-side, shared phase stage."""
         from repro.core import legendre as leg
@@ -395,7 +408,8 @@ class Plan:
                 jnp.real(e), jnp.imag(e), jnp.real(b), jnp.imag(b))
             a32 = jnp.concatenate([a2_re, a2_im], axis=-1).astype(jnp.float32)
             out = kops.synth(a32, m2, x32, pmm, pms, l_max=self.l_max,
-                             fold=False, variant=variant, mp_vals=mp2)
+                             fold=False, variant=variant, mp_vals=mp2,
+                             layout=layout)
             flat = out[:, 0]                          # (2M, R, 2K)
             dq_re, dq_im, du_re, du_im = leg.spin_unpack_delta(
                 flat[..., :K], flat[..., K:])
@@ -407,7 +421,7 @@ class Plan:
 
         return fn
 
-    def _make_pallas_anal_spin(self, variant: str):
+    def _make_pallas_anal_spin(self, variant: str, layout=None):
         from repro.core import legendre as leg
         kops = _pallas_ops()
         K = self.K
@@ -423,7 +437,8 @@ class Plan:
             dw32 = jnp.concatenate([d2_re, d2_im],
                                    axis=-1).astype(jnp.float32)[:, None]
             out = kops.anal(dw32, m2, x32, pmm, pms, l_max=self.l_max,
-                            fold=False, variant=variant, mp_vals=mp2)
+                            fold=False, variant=variant, mp_vals=mp2,
+                            layout=layout)
             e_re, e_im, b_re, b_im = leg.spin_unpack_alm(
                 out[..., :K], out[..., K:])
             alm = jnp.stack([e_re + 1j * e_im, b_re + 1j * b_im],
@@ -437,7 +452,12 @@ class Plan:
     # -- dispatch -------------------------------------------------------------
 
     def _predict_all(self, hw=None) -> dict:
-        """Cost-model prediction per candidate per direction (seconds)."""
+        """Cost-model prediction per candidate per direction (seconds).
+
+        Pallas candidates are modelled per Legendre *layout* (packed vs
+        plain grid); ``out[b][d]`` is the better of the two and
+        ``out[b][f"{d}_layout"]`` names it.
+        """
         g = self.grid
         if hw is None:
             hw = (roofline.HW_HOST if jax.default_backend() == "cpu"
@@ -446,15 +466,21 @@ class Plan:
         fl = self._sht.phase.fft_lengths        # per-bucket cost on ragged
         out = {}
         for b in self.candidates:
-            out[b] = {
-                d: roofline.predict_sht_time(
-                    b, l_max=self.l_max, m_max=self.m_max,
-                    n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
-                    direction=d, hw=hw,
-                    n_devices=n_dev if b == "dist" else 1,
-                    fft_lengths=fl, spin=self.spin)
-                for d in ("synth", "anal")
-            }
+            out[b] = {}
+            for d in ("synth", "anal"):
+                kw = dict(l_max=self.l_max, m_max=self.m_max,
+                          n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
+                          direction=d, hw=hw,
+                          n_devices=n_dev if b == "dist" else 1,
+                          fft_lengths=fl, spin=self.spin)
+                if b in ("pallas_vpu", "pallas_mxu"):
+                    per = {lay: roofline.predict_sht_time(b, layout=lay, **kw)
+                           for lay in ("packed", "plain")}
+                    lay = min(per, key=per.get)
+                    out[b][d] = per[lay]
+                    out[b][f"{d}_layout"] = lay
+                else:
+                    out[b][d] = roofline.predict_sht_time(b, **kw)
         return out
 
     def _measure_all(self) -> dict:
@@ -473,29 +499,62 @@ class Plan:
         out: dict = {}
         for b in self.candidates:
             out[b] = {}
+            layouts = (("packed", "plain") if b in ("pallas_vpu",
+                                                    "pallas_mxu")
+                       else (None,))
             for direction, fn_of, arg in (("synth", self._synth_fn, alm),
                                           ("anal", self._anal_fn, maps)):
-                try:
-                    fn = fn_of(b)
-                    jax.block_until_ready(fn(arg))          # warm-up/compile
-                    t0 = time.perf_counter()
-                    jax.block_until_ready(fn(arg))
-                    out[b][direction] = time.perf_counter() - t0
-                except Exception as e:  # candidate unusable here: rank last
-                    out[b][direction] = float("inf")
-                    out[b][f"{direction}_error"] = f"{type(e).__name__}: {e}"
+                best, best_lay, errs = float("inf"), None, {}
+                for lay in layouts:
+                    try:
+                        fn = fn_of(b, lay) if lay is not None else fn_of(b)
+                        jax.block_until_ready(fn(arg))      # warm-up/compile
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(fn(arg))
+                        t = time.perf_counter() - t0
+                    except Exception as e:  # unusable here: rank last
+                        t = float("inf")
+                        errs[lay] = f"{type(e).__name__}: {e}"
+                        if lay is not None:
+                            out[b][f"{direction}_{lay}_error"] = errs[lay]
+                    if lay is not None:
+                        out[b][f"{direction}_{lay}"] = t
+                    if t < best:
+                        best, best_lay = t, lay
+                out[b][direction] = best
+                if not np.isfinite(best):   # every layout failed: backend
+                    out[b][f"{direction}_error"] = \
+                        "; ".join(errs.values())            # unusable
+                if best_lay is not None:
+                    out[b][f"{direction}_layout"] = best_lay
         return out
 
+    def _fill_layouts(self, source: dict) -> None:
+        """Set ``self.layouts`` per direction from a per-candidate table
+        (``{backend: {"<dir>_layout": ...}}``); model predictions fill any
+        gap, non-pallas backends get None."""
+        self.layouts = {}
+        for d in ("synth", "anal"):
+            b = self.backends.get(d)
+            if b not in ("pallas_vpu", "pallas_mxu"):
+                self.layouts[d] = None
+                continue
+            lay = source.get(b, {}).get(f"{d}_layout") \
+                or self.predicted_s.get(b, {}).get(f"{d}_layout")
+            self.layouts[d] = lay or "packed"
+
     def _choose_backends(self) -> None:
-        """Fill ``self.backends`` according to ``self.mode``."""
+        """Fill ``self.backends``/``self.layouts`` according to ``mode``."""
         self.predicted_s = self._predict_all()
         if self.mode in BACKENDS:                   # forced backend
             self.backends = {"synth": self.mode, "anal": self.mode}
+            self._fill_layouts(self.predicted_s)
             return
         if self.mode == "model":
             self.backends = {
                 d: min(self.candidates, key=lambda b: self.predicted_s[b][d])
                 for d in ("synth", "anal")}
+            self._fill_layouts(self.predicted_s)
             return
         assert self.mode == "auto", self.mode
         dkey = plancache.signature_key("decision", sig=self._signature_key)
@@ -505,15 +564,23 @@ class Plan:
                 cached.get(d) in self.candidates for d in ("synth", "anal")):
             self.backends = {d: cached[d] for d in ("synth", "anal")}
             self.measured_s = cached.get("measured", {})
+            self._fill_layouts(self.measured_s)
+            cached_lay = cached.get("layouts")
+            if cached_lay:
+                self.layouts.update({d: cached_lay.get(d)
+                                     for d in ("synth", "anal")
+                                     if d in cached_lay})
             self.cache_events["decision"] = "hit"
             return
         self.measured_s = self._measure_all()
         self.backends = {
             d: min(self.candidates, key=lambda b: self.measured_s[b][d])
             for d in ("synth", "anal")}
+        self._fill_layouts(self.measured_s)
         self.cache_events["decision"] = "autotuned"
         plancache.save_decision(
-            dkey, {**self.backends, "measured": self.measured_s},
+            dkey, {**self.backends, "measured": self.measured_s,
+                   "layouts": dict(self.layouts)},
             cache=self._cache_kind, directory=self._cache_dir)
 
     # -- public API -----------------------------------------------------------
@@ -586,6 +653,7 @@ class Plan:
                               self.grid.max_n_phi, self.K,
                               fft_lengths=self._sht.phase.fft_lengths,
                               spin=self.spin)
+        layouts = dict(self.layouts)
         return {
             "signature": {
                 "grid": self.grid.name, "n_rings": self.grid.n_rings,
@@ -596,8 +664,12 @@ class Plan:
             },
             "mode": self.mode,
             "backends": dict(self.backends),
+            "layouts": layouts,
             "candidates": list(self.candidates),
             "skipped": dict(self.skipped),
+            # grouped view of the packing decision; panels comes from the
+            # sht_work() call above (same legendre_panel_counts dict)
+            "legendre": {"layouts": layouts, "panels": w["panels"]},
             "phase": self._sht.phase.describe(),
             "predicted_s": self.predicted_s,
             "measured_s": self.measured_s,
@@ -628,12 +700,21 @@ class Plan:
                 f"  phase: {ph['kind']} x{ph['n_buckets']} buckets "
                 f"{ph['bucket_lengths']} (+{ph['padded_frac'] * 100:.1f}% "
                 f"fft padding)")
+        pc = d["legendre"]["panels"]
+        lines.append(
+            f"  legendre: packed {pc['packed']} vs plain "
+            f"{pc['plain_launched']} grid steps "
+            f"({pc['launched_ratio']:.2f}x fewer, occupancy "
+            f"{pc['packed_occupancy']:.2f})")
         for direction in ("synth", "anal"):
             chosen = d["backends"].get(direction, "?")
             pred = d["predicted_s"].get(chosen, {}).get(direction)
             meas = d["measured_s"].get(chosen, {}).get(direction) \
                 if d["measured_s"] else None
             bits = [f"  {direction:5s} -> {chosen}"]
+            lay = d["layouts"].get(direction)
+            if lay:
+                bits[0] += f"[{lay}]"
             if pred is not None:
                 bits.append(f"predicted {pred * 1e6:.1f} us")
             if meas is not None and np.isfinite(meas):

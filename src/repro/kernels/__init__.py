@@ -14,9 +14,10 @@ dist backends (``PALLAS_AVAILABLE`` reports the outcome).
 
 try:
     from repro.kernels import ops  # noqa: F401
+    from repro.kernels import pack  # noqa: F401
     from repro.kernels.ops import (  # noqa: F401
-        alm_from_delta_auto, anal, delta_from_alm_auto, pick_variant,
-        should_interpret, synth,
+        alm_from_delta_auto, anal, delta_from_alm_auto, pick_layout,
+        pick_variant, should_interpret, synth,
     )
     PALLAS_AVAILABLE = True
 except Exception:  # pragma: no cover - non-Pallas builds raise Import-,

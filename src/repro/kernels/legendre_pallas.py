@@ -46,6 +46,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 __all__ = [
     "synth_vpu", "synth_mxu", "anal_vpu", "anal_mxu",
+    "synth_vpu_packed", "synth_mxu_packed",
+    "anal_vpu_packed", "anal_mxu_packed",
     "SCALE_BITS_F32",
 ]
 
@@ -462,6 +464,459 @@ def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
         compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary", "arbitrary", "arbitrary")),
     )(m_vals, mp, x2d, pmm, pms, dw)
+
+
+# =============================================================================
+# Packed (triangular m-pair) kernels.
+#
+# The plain kernels above launch a dense rectangular (Mp, L1p/lp_size)
+# grid and mask sub-diagonal panels with `pl.when` -- ~2x wasted grid
+# steps at m_max = l_max.  The packed kernels run the min-max paired grid
+# built by `kernels.pack.build_layout`: each *slot* fuses two m rows whose
+# concatenated l-ranges have near-constant total length, streamed
+# back-to-back through (n_sp) full panels with NO `pl.when` diagonal test.
+# Five per-slot scalar-prefetch maps (m/m' per segment + the intra-slot
+# seam step `seed`) tell every grid step which (m, l) window it serves;
+# the (pp, pc, sc) carry re-seeds itself at the seam because the step
+# functions seed whenever l == l0, and the packed schedule lands the
+# seam step exactly there.
+#
+# The slot grid dimension is marked "parallel": slots touch disjoint
+# output blocks and their carry chains are self-contained (re-initialised
+# at panel 0), so Mosaic may partition slots across TensorCores.
+# =============================================================================
+
+
+def _packed_scalars(g, m0, m1, mp0, mp1, jsw):
+    """Per-step (segment?, m, m', l) from the slot maps; all i32 scalars."""
+    hi = (g >= jsw).astype(jnp.int32)
+    m = jnp.where(hi == 1, m1, m0)
+    mp_v = jnp.where(hi == 1, mp1, mp0)
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
+    l = jnp.where(hi == 1, l01 + g - jsw, l00 + g)
+    return hi, m, mp_v, l
+
+
+def _packed_row_masks(base, jsw, m0, m1, mp0, mp1, lp_size, n_par, fold):
+    """Per-panel-row (lp_size, 1) bool masks selecting each fused output
+    component q = segment * n_par + parity (the MXU kernels' row splits)."""
+    iot = jax.lax.broadcasted_iota(jnp.int32, (lp_size, 1), 0)
+    g_row = base + iot
+    hi_row = g_row >= jsw
+    masks = []
+    for q in range(2 * n_par):
+        seg = q // n_par
+        mask = hi_row if seg == 1 else ~hi_row
+        if fold:
+            l00 = jnp.maximum(m0, jnp.abs(mp0))
+            l01 = jnp.maximum(m1, jnp.abs(mp1))
+            l_row = jnp.where(hi_row, l01 + g_row - jsw, l00 + g_row)
+            m_row = jnp.where(hi_row, m1, m0)
+            even = ((l_row + m_row) % 2) == 0
+            mask = mask & (even if q % n_par == 0 else ~even)
+        masks.append(mask)
+    return masks
+
+
+def _synth_vpu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                             x_ref, pmm_ref, pms_ref, a_ref, out_ref,
+                             pp_ref, pc_ref, sc_ref, *, lp_size, n_par,
+                             fold, spin):
+    si = pl.program_id(0)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    mp0, mp1 = mp0_ref[si], mp1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    x = x_ref[...]                           # (8, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    n_q = 2 * n_par
+
+    def body(j, carry):
+        acc, pp, pc, sc = carry
+        g = base + j
+        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
+        m_f = m.astype(jnp.float32)
+        mp_f = mp_v.astype(jnp.float32)
+        pmm = jnp.where(hi == 1, pmm1, pmm0)
+        pms = jnp.where(hi == 1, pms1, pms0)
+        pp, pc, sc, val = _step(spin, l, m_f, mp_f, x, pp, pc, sc, pmm, pms)
+        av = a_ref[0, j, :]                  # (2K,)
+        contrib = av[:, None, None] * val[None, :, :]     # (2K, 8, 128)
+        q = hi * n_par + ((l + m) % 2 if fold else 0)
+        sel = jnp.arange(n_q, dtype=jnp.int32) == q
+        acc = acc + jnp.where(sel[:, None, None, None], contrib[None], 0.0)
+        return acc, pp, pc, sc
+
+    acc, pp, pc, sc = jax.lax.fori_loop(
+        0, lp_size, body,
+        (out_ref[0], pp_ref[...], pc_ref[...], sc_ref[...]))
+    out_ref[0] = acc
+    pp_ref[...] = pp
+    pc_ref[...] = pc
+    sc_ref[...] = sc
+
+
+def synth_vpu_packed(a_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, fold=False,
+                     spin=False, lp_size=128, interpret=True):
+    """VPU synthesis on the packed (slot, panel) grid.
+
+    a_pk   : (n_slots, S, 2K) f32 packed coefficient streams
+    maps   : (m0, m1, mp0, mp1, seed) i32 per-slot scalar-prefetch arrays
+    x2d    : (R1, 128) f32;  pmm_pk/pms_pk: (n_slots, 2, R1, 128)
+    returns: (n_slots, Q, 2K, R1, 128) f32, Q = 2 segments x (2 if fold)
+    """
+    n_slots, S, K2 = a_pk.shape
+    R1 = x2d.shape[0]
+    assert S % lp_size == 0 and R1 % 8 == 0
+    n_par = 2 if fold else 1
+    assert not (spin and fold), "fold is not supported on the spin path"
+    n_q = 2 * n_par
+    grid = (n_slots, R1 // 8, S // lp_size)
+    kernel = functools.partial(_synth_vpu_packed_kernel, lp_size=lp_size,
+                               n_par=n_par, fold=fold, spin=spin)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, lp_size, K2),
+                             lambda s, rb, sp, *_refs: (s, sp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_q, K2, 8, 128),
+                                   lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, n_q, K2, R1, 128),
+                                       jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*maps, x2d, pmm_pk, pms_pk, a_pk)
+
+
+def _synth_mxu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                             x_ref, pmm_ref, pms_ref, a_ref, out_ref,
+                             pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size,
+                             n_par, fold, spin):
+    si = pl.program_id(0)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    mp0, mp1 = mp0_ref[si], mp1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    x = x_ref[...]                           # (1, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+
+    def gen(j, carry):
+        pp, pc, sc = carry
+        g = base + j
+        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
+        pmm = jnp.where(hi == 1, pmm1, pmm0)
+        pms = jnp.where(hi == 1, pms1, pms0)
+        pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
+                                mp_v.astype(jnp.float32), x, pp, pc, sc,
+                                pmm, pms)
+        panel_ref[pl.ds(j, 1), :] = val
+        return pp, pc, sc
+
+    pp, pc, sc = jax.lax.fori_loop(
+        0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...] = pp
+    pc_ref[...] = pc
+    sc_ref[...] = sc
+
+    panel = panel_ref[...]                   # (LP, 128)
+    a_blk = a_ref[0]                         # (LP, 2K)
+    dims = (((0,), (0,)), ((), ()))          # contract over the l stream
+    masks = _packed_row_masks(base, jsw, m0, m1, mp0, mp1, lp_size, n_par,
+                              fold)
+    for q, mask in enumerate(masks):
+        a_q = jnp.where(mask, a_blk, 0.0)
+        c = jax.lax.dot_general(panel, a_q, dims,
+                                preferred_element_type=jnp.float32)
+        out_ref[0, q] += c                   # (128, 2K)
+
+
+def synth_mxu_packed(a_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, fold=False,
+                     spin=False, lp_size=128, interpret=True):
+    """MXU synthesis on the packed grid (multi-map panel matmul).
+
+    Layouts as :func:`synth_vpu_packed` except rings advance 128 at a
+    time; returns (n_slots, Q, R, 2K) with R = R1 * 128.
+    """
+    n_slots, S, K2 = a_pk.shape
+    R1 = x2d.shape[0]
+    R = R1 * 128
+    assert S % lp_size == 0
+    n_par = 2 if fold else 1
+    assert not (spin and fold), "fold is not supported on the spin path"
+    n_q = 2 * n_par
+    grid = (n_slots, R1, S // lp_size)
+    kernel = functools.partial(_synth_mxu_packed_kernel, lp_size=lp_size,
+                               n_par=n_par, fold=fold, spin=spin)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, lp_size, K2),
+                             lambda s, rb, sp, *_refs: (s, sp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, n_q, 128, K2),
+                                   lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, n_q, R, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*maps, x2d, pmm_pk.reshape(n_slots, 2, R1, 128),
+      pms_pk.reshape(n_slots, 2, R1, 128), a_pk)
+
+
+def _anal_vpu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                            x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
+                            pp_ref, pc_ref, sc_ref, acc_ref, *, lp_size,
+                            n_par, fold, spin):
+    si = pl.program_id(0)
+    rb = pl.program_id(1)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    mp0, mp1 = mp0_ref[si], mp1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    dw = dw_ref[0]                           # (Q, 2K, 8, 128)
+    n_q = 2 * n_par
+
+    def body(j, carry):
+        pp, pc, sc = carry
+        g = base + j
+        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
+        pmm = jnp.where(hi == 1, pmm1, pmm0)
+        pms = jnp.where(hi == 1, pms1, pms0)
+        pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
+                                mp_v.astype(jnp.float32), x, pp, pc, sc,
+                                pmm, pms)
+        q = hi * n_par + ((l + m) % 2 if fold else 0)
+        sel = jnp.arange(n_q, dtype=jnp.int32) == q
+        d = jnp.sum(jnp.where(sel[:, None, None, None], dw, 0.0), axis=0)
+        row = jnp.sum(d * val[None, :, :], axis=(1, 2))   # (2K,)
+        acc_ref[pl.ds(j, 1), :] = row[None, :]
+        return pp, pc, sc
+
+    pp, pc, sc = jax.lax.fori_loop(
+        0, lp_size, body, (pp_ref[...], pc_ref[...], sc_ref[...]))
+    out_ref[0] += acc_ref[...]
+    pp_ref[...] = pp
+    pc_ref[...] = pc
+    sc_ref[...] = sc
+
+
+def anal_vpu_packed(dw_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, s_len,
+                    fold=False, spin=False, lp_size=128, interpret=True):
+    """VPU analysis on the packed grid.
+
+    dw_pk  : (n_slots, Q, 2K, R1, 128) weighted Delta per fused component
+    s_len  : packed l-stream length per slot (layout.S)
+    returns: (n_slots, S, 2K) f32 packed l-stream rows
+    """
+    n_slots, n_q, K2, R1 = dw_pk.shape[:4]
+    n_par = 2 if fold else 1
+    assert n_q == 2 * n_par and R1 % 8 == 0
+    assert not (spin and fold), "fold is not supported on the spin path"
+    S = int(s_len)
+    assert S % lp_size == 0
+    grid = (n_slots, R1 // 8, S // lp_size)
+    kernel = functools.partial(_anal_vpu_packed_kernel, lp_size=lp_size,
+                               n_par=n_par, fold=fold, spin=spin)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, n_q, K2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda s, rb, sp, *_refs: (s, sp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+                pltpu.VMEM((lp_size, K2), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, S, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(*maps, x2d, pmm_pk, pms_pk, dw_pk)
+
+
+def _anal_mxu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                            x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
+                            pp_ref, pc_ref, sc_ref, panel_ref, *, lp_size,
+                            n_par, fold, spin):
+    si = pl.program_id(0)
+    rb = pl.program_id(1)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    mp0, mp1 = mp0_ref[si], mp1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                           # (1, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+
+    def gen(j, carry):
+        pp, pc, sc = carry
+        g = base + j
+        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
+        pmm = jnp.where(hi == 1, pmm1, pmm0)
+        pms = jnp.where(hi == 1, pms1, pms0)
+        pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
+                                mp_v.astype(jnp.float32), x, pp, pc, sc,
+                                pmm, pms)
+        panel_ref[pl.ds(j, 1), :] = val
+        return pp, pc, sc
+
+    pp, pc, sc = jax.lax.fori_loop(
+        0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...] = pp
+    pc_ref[...] = pc
+    sc_ref[...] = sc
+
+    panel = panel_ref[...]                   # (LP, 128)
+    dims = (((1,), (0,)), ((), ()))          # contract over rings(128)
+    masks = _packed_row_masks(base, jsw, m0, m1, mp0, mp1, lp_size, n_par,
+                              fold)
+    acc = jnp.zeros_like(out_ref[0])
+    for q, mask in enumerate(masks):
+        c = jax.lax.dot_general(panel, dw_ref[0, q], dims,
+                                preferred_element_type=jnp.float32)
+        acc = acc + jnp.where(mask, c, 0.0)  # (LP, 2K)
+    out_ref[0] += acc
+
+
+def anal_mxu_packed(dw_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, s_len,
+                    fold=False, spin=False, lp_size=128, interpret=True):
+    """MXU analysis on the packed grid.
+
+    dw_pk  : (n_slots, Q, R, 2K) weighted Delta (ring-major), R = R1 * 128
+    s_len  : packed l-stream length per slot (layout.S)
+    returns: (n_slots, S, 2K) f32 packed l-stream rows
+    """
+    n_slots, n_q, R, K2 = dw_pk.shape
+    R1 = R // 128
+    n_par = 2 if fold else 1
+    assert n_q == 2 * n_par and R % 128 == 0
+    assert not (spin and fold), "fold is not supported on the spin path"
+    S = int(s_len)
+    assert S % lp_size == 0
+    grid = (n_slots, R1, S // lp_size)
+    kernel = functools.partial(_anal_mxu_packed_kernel, lp_size=lp_size,
+                               n_par=n_par, fold=fold, spin=spin)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, n_q, 128, K2),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda s, rb, sp, *_refs: (s, sp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, S, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(*maps, x2d, pmm_pk.reshape(n_slots, 2, R1, 128),
+      pms_pk.reshape(n_slots, 2, R1, 128), dw_pk)
 
 
 def _anal_mxu_kernel(m_vals_ref, mp_vals_ref, x_ref, pmm_ref, pms_ref,

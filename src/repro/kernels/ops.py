@@ -23,11 +23,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import legendre_pallas as lk
+from repro.kernels import pack as kpack
 from repro.kernels import ref as kref
 
 __all__ = ["synth", "anal", "delta_from_alm_auto", "alm_from_delta_auto",
            "delta_from_alm_spin_auto", "alm_from_delta_spin_auto",
-           "spin_rows", "pick_variant", "should_interpret"]
+           "spin_rows", "pick_variant", "pick_layout", "should_interpret"]
 
 
 def should_interpret() -> bool:
@@ -38,26 +39,226 @@ def should_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+#: canonical problem size for the vpu/mxu autotune measurement
+_AUTOTUNE_LMAX = 32
+
+
+def _measure_variant(K2: int, var: str) -> float:
+    """One warm-up + one timed synth call of ``var`` at the canonical size."""
+    import time
+    from repro.core import grids as _grids
+    from repro.core import legendre as _legendre
+    l_max = _AUTOTUNE_LMAX
+    g = _grids.make_grid("gl", l_max=l_max)
+    lm = _legendre.log_mu(l_max)
+    m_vals = np.arange(l_max + 1)
+    pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
+    a = jnp.ones((l_max + 1, l_max + 1, K2), jnp.float32)
+    x32 = jnp.asarray(g.cos_theta, jnp.float32)
+
+    def fn():
+        return synth(a, m_vals, x32, pmm, pms, l_max=l_max, variant=var)
+
+    jax.block_until_ready(fn())            # warm-up / compile
+    t0 = time.perf_counter()
+    jax.block_until_ready(fn())
+    return time.perf_counter() - t0
+
+
+def _autotune_variant(K2: int):
+    """Measured vpu-vs-mxu decision, cached by (K2, interpret) signature."""
+    from repro.core import cache as plancache
+    kind = "disk" if os.environ.get("REPRO_CACHE_DIR") else "memory"
+    key = plancache.signature_key("legendre_variant", K2=int(K2),
+                                  interpret=should_interpret())
+    dec = plancache.load_decision(key, cache=kind)
+    if dec is not None:
+        v = dec.get("variant")
+        return v if v in ("vpu", "mxu") else None   # cached failure: static
+    try:
+        meas = {v: _measure_variant(K2, v) for v in ("vpu", "mxu")}
+    except Exception as e:                 # measurement unavailable: cache
+        plancache.save_decision(           # the failure, fall back static
+            key, {"variant": "static-fallback",
+                  "error": f"{type(e).__name__}: {e}"}, cache=kind)
+        return None
+    best = min(meas, key=meas.get)
+    plancache.save_decision(key, {"variant": best, "measured": meas},
+                            cache=kind)
+    return best
+
+
 def pick_variant(K2: int, variant: str | None = None) -> str:
+    """vpu-vs-mxu selection: explicit arg > $REPRO_LEGENDRE_VARIANT >
+    cached autotune measurement (when $REPRO_LEGENDRE_AUTOTUNE is set) >
+    the static ``K2 >= 16`` rule."""
     if variant in ("vpu", "mxu"):
         return variant
     env = os.environ.get("REPRO_LEGENDRE_VARIANT")
     if env in ("vpu", "mxu"):
         return env
+    if os.environ.get("REPRO_LEGENDRE_AUTOTUNE", "0") \
+            not in ("", "0", "false", "False"):
+        tuned = _autotune_variant(K2)
+        if tuned is not None:
+            return tuned
     return "mxu" if K2 >= 16 else "vpu"
+
+
+def _concrete_rows(v):
+    """Static numpy view of a row array, or None when traced."""
+    if v is None or isinstance(v, jax.core.Tracer):
+        return None
+    if isinstance(v, np.ndarray):
+        return v
+    try:
+        return np.asarray(v)
+    except Exception:
+        return None
+
+
+def pick_layout(m_vals, layout: str | None = None, mp_vals=None) -> str:
+    """packed-vs-plain selection.
+
+    Traced row sets (the distributed stage-1 path) can never build a
+    static packing and always run the plain rectangular grid, whatever
+    the caller asked for.  Otherwise ``$REPRO_LEGENDRE_LAYOUT`` is the
+    global debugging override (it outranks the per-call argument, so it
+    also forces plans whose autotuner passes an explicit layout), then
+    the explicit ``layout`` argument, then packed by default."""
+    if _concrete_rows(m_vals) is None or \
+            (mp_vals is not None and _concrete_rows(mp_vals) is None):
+        return "plain"
+    env = os.environ.get("REPRO_LEGENDRE_LAYOUT")
+    if env in ("plain", "packed"):
+        return env
+    if layout in ("plain", "packed"):
+        return layout
+    return "packed"
 
 
 def _pad_to(n: int, mult: int) -> int:
     return -(-n // mult) * mult
 
 
+# ---------------------------------------------------------------------------
+# packed-layout conversion (kernels.pack <-> the plain (Mp, L1/R) world)
+# ---------------------------------------------------------------------------
+
+
+def _pack_maps(lo):
+    """The five per-slot scalar-prefetch arrays for the packed kernels."""
+    return (jnp.asarray(lo.slot_m[:, 0], jnp.int32),
+            jnp.asarray(lo.slot_m[:, 1], jnp.int32),
+            jnp.asarray(lo.slot_mp[:, 0], jnp.int32),
+            jnp.asarray(lo.slot_mp[:, 1], jnp.int32),
+            jnp.asarray(lo.slot_seed, jnp.int32))
+
+
+def _pack_a(a, lo):
+    """(Mp, L1, 2K) coefficients -> (n_slots, S, 2K) packed l-streams."""
+    Mp, L1, K2 = a.shape
+    flat = a.reshape(Mp * L1, K2)
+    valid = (lo.a_row >= 0) & (lo.a_l < L1)
+    idx = np.where(valid, lo.a_row * L1 + np.maximum(lo.a_l, 0), 0)
+    out = jnp.take(flat, jnp.asarray(idx.reshape(-1)), axis=0)
+    out = jnp.where(jnp.asarray(valid.reshape(-1))[:, None], out, 0.0)
+    return out.reshape(lo.n_slots, lo.S, K2)
+
+
+def _pack_rows(arr, lo):
+    """(Mp, ...) per-row operand -> (n_slots, 2, ...) per-segment."""
+    safe = np.maximum(lo.slot_row, 0).reshape(-1)
+    out = jnp.take(jnp.asarray(arr), jnp.asarray(safe), axis=0)
+    mask = (lo.slot_row >= 0).reshape((-1,) + (1,) * (out.ndim - 1))
+    out = jnp.where(jnp.asarray(mask), out, 0)
+    return out.reshape((lo.n_slots, 2) + tuple(arr.shape[1:]))
+
+
+def _unpack_rows(seg, lo, n_rows):
+    """(n_slots * 2, ...) per-segment results -> (n_rows, ...) plain rows
+    (plan-padding rows come back as zeros)."""
+    idx = np.maximum(lo.row_dst, 0)
+    out = jnp.take(seg, jnp.asarray(idx), axis=0)
+    mask = (lo.row_dst >= 0).reshape((-1,) + (1,) * (out.ndim - 1))
+    return jnp.where(jnp.asarray(mask), out, 0.0)
+
+
+def _unpack_alm(packed, lo):
+    """(n_slots, S, 2K) packed l-stream rows -> (n_rows, l_max + 1, 2K)."""
+    K2 = packed.shape[-1]
+    flat = packed.reshape(lo.n_slots * lo.S, K2)
+    src = lo.alm_src
+    out = jnp.take(flat, jnp.asarray(np.maximum(src, 0).reshape(-1)), axis=0)
+    out = jnp.where(jnp.asarray((src >= 0).reshape(-1))[:, None], out, 0.0)
+    return out.reshape(lo.n_rows, lo.l_max + 1, K2)
+
+
+def _synth_packed(a, lo, x, pmm, pms, *, l_max, fold, var, spin, lp_size,
+                  interpret):
+    Mp, L1, K2 = a.shape
+    R = x.shape[0]
+    n_par = 2 if fold else 1
+    a_pk = _pack_a(a, lo)
+    Rp = _pad_to(R, 1024 if var == "vpu" else 128)
+    x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
+    pmm_pk = _pack_rows(jnp.pad(pmm, ((0, 0), (0, Rp - R))), lo)
+    pms_pk = _pack_rows(jnp.pad(pms, ((0, 0), (0, Rp - R))), lo)
+    R1 = Rp // 128
+    x2d = x_p.reshape(R1, 128)
+    pmm2 = pmm_pk.reshape(lo.n_slots, 2, R1, 128)
+    pms2 = pms_pk.reshape(lo.n_slots, 2, R1, 128)
+    maps = _pack_maps(lo)
+    if var == "vpu":
+        out = lk.synth_vpu_packed(a_pk, maps, x2d, pmm2, pms2, l_max=l_max,
+                                  fold=fold, spin=spin, lp_size=lp_size,
+                                  interpret=interpret)
+        out = jnp.moveaxis(out, 2, -1)       # (n_slots, Q, R1, 128, 2K)
+        out = out.reshape(lo.n_slots, 2 * n_par, Rp, K2)
+    else:
+        out = lk.synth_mxu_packed(a_pk, maps, x2d, pmm2, pms2, l_max=l_max,
+                                  fold=fold, spin=spin, lp_size=lp_size,
+                                  interpret=interpret)
+    seg = out.reshape(lo.n_slots * 2, n_par, Rp, K2)
+    return _unpack_rows(seg, lo, Mp)[:, :, :R, :]
+
+
+def _anal_packed(dw, lo, x, pmm, pms, *, l_max, fold, var, spin, lp_size,
+                 interpret):
+    Mp, n_par, R, K2 = dw.shape
+    Rp = _pad_to(R, 1024 if var == "vpu" else 128)
+    dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
+    dw_pk = _pack_rows(dw_p, lo).reshape(lo.n_slots, 2 * n_par, Rp, K2)
+    x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
+    pmm_pk = _pack_rows(jnp.pad(pmm, ((0, 0), (0, Rp - R))), lo)
+    pms_pk = _pack_rows(jnp.pad(pms, ((0, 0), (0, Rp - R))), lo)
+    R1 = Rp // 128
+    x2d = x_p.reshape(R1, 128)
+    pmm2 = pmm_pk.reshape(lo.n_slots, 2, R1, 128)
+    pms2 = pms_pk.reshape(lo.n_slots, 2, R1, 128)
+    maps = _pack_maps(lo)
+    if var == "vpu":
+        dwk = jnp.moveaxis(
+            dw_pk.reshape(lo.n_slots, 2 * n_par, R1, 128, K2), -1, 2)
+        out = lk.anal_vpu_packed(dwk, maps, x2d, pmm2, pms2, l_max=l_max,
+                                 s_len=lo.S, fold=fold, spin=spin,
+                                 lp_size=lp_size, interpret=interpret)
+    else:
+        out = lk.anal_mxu_packed(dw_pk, maps, x2d, pmm2, pms2, l_max=l_max,
+                                 s_len=lo.S, fold=fold, spin=spin,
+                                 lp_size=lp_size, interpret=interpret)
+    return _unpack_alm(out, lo)
+
+
 def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
-          mp_vals=None, lp_size=128, interpret=None):
+          mp_vals=None, lp_size=128, interpret=None, layout=None):
     """Kernel-backed synthesis with automatic padding.
 
     a: (Mp, L1, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
     ``mp_vals`` (Mp,) switches rows to the spin-weighted (Wigner m')
     recurrence -- seeds must then come from ref.prepare_seeds_spin.
+    ``layout`` selects the packed triangular m-pair grid vs the plain
+    rectangular one (see :func:`pick_layout`).
     Returns (Mp, P, R, 2K) f32 matching ref.synth_ref.
     """
     if interpret is None:
@@ -65,6 +266,14 @@ def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
     Mp, L1, K2 = a.shape
     R = x.shape[0]
     var = pick_variant(K2, variant)
+    if pick_layout(m_vals, layout, mp_vals) == "packed":
+        lo = kpack.build_layout(_concrete_rows(m_vals), l_max,
+                                lp_size=lp_size,
+                                mp_vals=_concrete_rows(mp_vals))
+        if lo is not None:
+            return _synth_packed(a, lo, x, pmm, pms, l_max=l_max, fold=fold,
+                                 var=var, spin=mp_vals is not None,
+                                 lp_size=lp_size, interpret=interpret)
     L1p = _pad_to(L1, lp_size)
     Rp = _pad_to(R, 1024 if var == "vpu" else 128)
     a_p = jnp.pad(a, ((0, 0), (0, L1p - L1), (0, 0)))
@@ -90,17 +299,26 @@ def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
 
 
 def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
-         variant=None, mp_vals=None, lp_size=128, interpret=None):
+         variant=None, mp_vals=None, lp_size=128, interpret=None,
+         layout=None):
     """Kernel-backed analysis with automatic padding.
 
     dw: (Mp, P, R, 2K) f32;  returns (Mp, L1, 2K) f32 (L1 = l_max+1).
-    ``mp_vals`` as in :func:`synth`.
+    ``mp_vals`` / ``layout`` as in :func:`synth`.
     """
     if interpret is None:
         interpret = should_interpret()
     Mp, n_par, R, K2 = dw.shape
     var = pick_variant(K2, variant)
     L1 = l_max + 1
+    if pick_layout(m_vals, layout, mp_vals) == "packed":
+        lo = kpack.build_layout(_concrete_rows(m_vals), l_max,
+                                lp_size=lp_size,
+                                mp_vals=_concrete_rows(mp_vals))
+        if lo is not None:
+            return _anal_packed(dw, lo, x, pmm, pms, l_max=l_max, fold=fold,
+                                var=var, spin=mp_vals is not None,
+                                lp_size=lp_size, interpret=interpret)
     L1p = _pad_to(L1 if l1p is None else l1p, lp_size)
     Rp = _pad_to(R, 1024 if var == "vpu" else 128)
     dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
@@ -130,7 +348,8 @@ def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
 
 
 def delta_from_alm_auto(a_re, a_im, m_vals, geom, log_mu_all, *, l_max,
-                        fold=False, dtype=jnp.float32, variant=None):
+                        fold=False, dtype=jnp.float32, variant=None,
+                        layout=None):
     """Drop-in for legendre.delta_from_alm(+_folded) backed by the kernels.
 
     a_re/a_im: (M, L1, K); geom: plan.ring_geometry dict (numpy, static).
@@ -148,7 +367,8 @@ def delta_from_alm_auto(a_re, a_im, m_vals, geom, log_mu_all, *, l_max,
     pmm, pms = kref.prepare_seeds(m_vals, sin, log_mu_all)
     a = jnp.concatenate([a_re, a_im], axis=-1).astype(jnp.float32)
     out = synth(a, m_vals, jnp.asarray(x, jnp.float32), pmm, pms,
-                l_max=l_max, fold=fold, variant=variant)   # (M, P, R', 2K)
+                l_max=l_max, fold=fold, variant=variant,
+                layout=layout)                             # (M, P, R', 2K)
     if fold:
         e, o = out[:, 0], out[:, 1]                        # (M, R_north, 2K)
         north, south = e + o, e - o
@@ -162,7 +382,8 @@ def delta_from_alm_auto(a_re, a_im, m_vals, geom, log_mu_all, *, l_max,
 
 
 def alm_from_delta_auto(dw_re, dw_im, m_vals, geom, log_mu_all, *, l_max,
-                        fold=False, dtype=jnp.float32, variant=None):
+                        fold=False, dtype=jnp.float32, variant=None,
+                        layout=None):
     """Drop-in for legendre.alm_from_delta(+_folded) backed by the kernels.
 
     dw_re/dw_im: (M, R_pad, K) weighted Delta in plan slot order.
@@ -181,7 +402,8 @@ def alm_from_delta_auto(dw_re, dw_im, m_vals, geom, log_mu_all, *, l_max,
         x = geom["cos_theta"]
     pmm, pms = kref.prepare_seeds(m_vals, sin, log_mu_all)
     out = anal(dwk, m_vals, jnp.asarray(x, jnp.float32), pmm, pms,
-               l_max=l_max, fold=fold, variant=variant)    # (M, L1, 2K)
+               l_max=l_max, fold=fold, variant=variant,
+               layout=layout)                              # (M, L1, 2K)
     return out[..., :K].astype(dtype), out[..., K:].astype(dtype)
 
 
@@ -198,7 +420,8 @@ def spin_rows(m_vals):
 
 
 def delta_from_alm_spin_auto(e_re, e_im, b_re, b_im, m_vals, geom, *, l_max,
-                             m_max, dtype=jnp.float32, variant=None):
+                             m_max, dtype=jnp.float32, variant=None,
+                             layout=None):
     """Spin-2 drop-in for legendre.delta_from_alm_spin backed by the kernels.
 
     e/b re/im: (M, L1, K); geom: plan.ring_geometry dict (or any dict with
@@ -215,7 +438,8 @@ def delta_from_alm_spin_auto(e_re, e_im, b_re, b_im, m_vals, geom, *, l_max,
     a = jnp.concatenate([a2_re, a2_im], axis=-1).astype(jnp.float32)
     pmm, pms = kref_.prepare_seeds_spin(m2, mp2, x, sin, m_max=m_max)
     out = synth(a, m2, jnp.asarray(x, jnp.float32), pmm, pms, l_max=l_max,
-                fold=False, variant=variant, mp_vals=mp2)   # (2M, 1, R, 2K)
+                fold=False, variant=variant, mp_vals=mp2,
+                layout=layout)                              # (2M, 1, R, 2K)
     flat = out[:, 0]
     d_re = flat[..., :K].astype(dtype)
     d_im = flat[..., K:].astype(dtype)
@@ -223,7 +447,8 @@ def delta_from_alm_spin_auto(e_re, e_im, b_re, b_im, m_vals, geom, *, l_max,
 
 
 def alm_from_delta_spin_auto(dq_re, dq_im, du_re, du_im, m_vals, geom, *,
-                             l_max, m_max, dtype=jnp.float32, variant=None):
+                             l_max, m_max, dtype=jnp.float32, variant=None,
+                             layout=None):
     """Spin-2 drop-in for legendre.alm_from_delta_spin backed by the kernels.
 
     dq/du re/im: (M, R, K) weighted Delta_Q/Delta_U.  Returns
@@ -239,7 +464,8 @@ def alm_from_delta_spin_auto(dq_re, dq_im, du_re, du_im, m_vals, geom, *,
     dw = jnp.concatenate([d2_re, d2_im], axis=-1).astype(jnp.float32)
     pmm, pms = kref_.prepare_seeds_spin(m2, mp2, x, sin, m_max=m_max)
     out = anal(dw[:, None], m2, jnp.asarray(x, jnp.float32), pmm, pms,
-               l_max=l_max, fold=False, variant=variant, mp_vals=mp2)
+               l_max=l_max, fold=False, variant=variant, mp_vals=mp2,
+               layout=layout)
     a_re = out[..., :K].astype(dtype)
     a_im = out[..., K:].astype(dtype)
     return legendre.spin_unpack_alm(a_re, a_im)

@@ -17,7 +17,8 @@ import numpy as np
 from repro.core import legendre as _legendre
 from repro.kernels.legendre_pallas import _f32_step, _f32_step_spin
 
-__all__ = ["synth_ref", "anal_ref", "prepare_seeds", "prepare_seeds_spin"]
+__all__ = ["synth_ref", "anal_ref", "synth_packed_ref", "anal_packed_ref",
+           "prepare_seeds", "prepare_seeds_spin"]
 
 
 def prepare_seeds(m_vals, sin_theta, log_mu_all, scale_bits: int = 64):
@@ -135,3 +136,98 @@ def anal_ref(dw, m_vals, x, pmm, pms, *, l_max: int, l1p: int,
     out = jnp.swapaxes(rows, 0, 1)                        # (Mp, L1p, 2K)
     lmask = (jnp.arange(l1p) <= l_max)[None, :, None]
     return jnp.where(lmask, out, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Packed (triangular m-pair) schedule oracles -- bit-matched to the packed
+# kernels: same per-step (segment, m, m', l) selection, same seed-at-seam
+# behaviour, same accumulation order.  See kernels.pack for the layout.
+# ---------------------------------------------------------------------------
+
+
+def _packed_maps_ref(layout):
+    m0 = jnp.asarray(layout.slot_m[:, 0], jnp.int32)[:, None]
+    m1 = jnp.asarray(layout.slot_m[:, 1], jnp.int32)[:, None]
+    mp0 = jnp.asarray(layout.slot_mp[:, 0], jnp.int32)[:, None]
+    mp1 = jnp.asarray(layout.slot_mp[:, 1], jnp.int32)[:, None]
+    seed = jnp.asarray(layout.slot_seed, jnp.int32)[:, None]
+    return m0, m1, mp0, mp1, seed
+
+
+def _packed_step_ref(g, layout_maps, spin, x, pmm_pk, pms_pk, pp, pc, sc):
+    """One packed-schedule step at intra-slot index ``g`` for every slot."""
+    m0, m1, mp0, mp1, seed = layout_maps
+    hi = (g >= seed).astype(jnp.int32)                 # (n_slots, 1)
+    m = jnp.where(hi == 1, m1, m0)
+    mp_v = jnp.where(hi == 1, mp1, mp0)
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
+    l = jnp.where(hi == 1, l01 + g - seed, l00 + g)
+    pmm = jnp.where(hi == 1, pmm_pk[:, 1], pmm_pk[:, 0])
+    pms = jnp.where(hi == 1, pms_pk[:, 1], pms_pk[:, 0])
+    pp, pc, sc, val = _ref_step(spin, l, m.astype(jnp.float32),
+                                mp_v.astype(jnp.float32), x[None, :],
+                                pp, pc, sc, pmm, pms)
+    return pp, pc, sc, val, hi, m, l
+
+
+def synth_packed_ref(a_pk, layout, x, pmm_pk, pms_pk, *, fold: bool = False):
+    """Oracle for synth_{vpu,mxu}_packed.
+
+    a_pk: (n_slots, S, 2K) f32;  x: (R,) f32;  pmm_pk/pms_pk: (n_slots, 2, R).
+    Returns (n_slots, Q, R, 2K) f32 with Q = 2 segments x (2 if fold).
+    """
+    n_slots, S, K2 = a_pk.shape
+    R = x.shape[0]
+    spin = layout.spin
+    n_par = 2 if fold else 1
+    n_q = 2 * n_par
+    maps = _packed_maps_ref(layout)
+    x32 = jnp.asarray(x, jnp.float32)
+    carry0 = (jnp.zeros((n_slots, R), jnp.float32),
+              jnp.zeros((n_slots, R), jnp.float32),
+              jnp.zeros((n_slots, R), jnp.int32),
+              jnp.zeros((n_slots, n_q, R, K2), jnp.float32))
+
+    def body(g, carry):
+        pp, pc, sc, acc = carry
+        pp, pc, sc, val, hi, m, l = _packed_step_ref(
+            g, maps, spin, x32, pmm_pk, pms_pk, pp, pc, sc)
+        av = jax.lax.dynamic_index_in_dim(a_pk, g, axis=1, keepdims=False)
+        contrib = val[:, :, None] * av[:, None, :]     # (n_slots, R, 2K)
+        q = hi * n_par + ((l + m) % 2 if fold else 0)  # (n_slots, 1)
+        sel = jnp.arange(n_q, dtype=jnp.int32)[None, :] == q
+        acc = acc + jnp.where(sel[:, :, None, None], contrib[:, None], 0.0)
+        return pp, pc, sc, acc
+
+    _, _, _, acc = jax.lax.fori_loop(0, S, body, carry0)
+    return acc
+
+
+def anal_packed_ref(dw_pk, layout, x, pmm_pk, pms_pk, *, fold: bool = False):
+    """Oracle for anal_{vpu,mxu}_packed.
+
+    dw_pk: (n_slots, Q, R, 2K) f32 weighted Delta per fused component.
+    Returns (n_slots, S, 2K) f32 packed l-stream rows.
+    """
+    n_slots, n_q, R, K2 = dw_pk.shape
+    spin = layout.spin
+    n_par = 2 if fold else 1
+    assert n_q == 2 * n_par
+    maps = _packed_maps_ref(layout)
+    x32 = jnp.asarray(x, jnp.float32)
+    carry0 = (jnp.zeros((n_slots, R), jnp.float32),
+              jnp.zeros((n_slots, R), jnp.float32),
+              jnp.zeros((n_slots, R), jnp.int32))
+
+    def step(carry, g):
+        pp, pc, sc = carry
+        pp, pc, sc, val, hi, m, l = _packed_step_ref(
+            g, maps, spin, x32, pmm_pk, pms_pk, pp, pc, sc)
+        q = hi * n_par + ((l + m) % 2 if fold else 0)  # (n_slots, 1)
+        d = jnp.take_along_axis(dw_pk, q[:, :, None, None], axis=1)[:, 0]
+        row = jnp.einsum("sr,srk->sk", val, d)
+        return (pp, pc, sc), row
+
+    _, rows = jax.lax.scan(step, carry0, jnp.arange(layout.S))
+    return jnp.swapaxes(rows, 0, 1)                    # (n_slots, S, 2K)

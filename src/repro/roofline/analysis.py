@@ -25,7 +25,8 @@ import numpy as np
 
 __all__ = ["HW_V5E", "HW_HOST", "Roofline", "collective_bytes",
            "analyze_compiled", "parse_hlo_collectives",
-           "sht_work", "predict_sht_time", "BACKEND_MODELS", "BackendModel"]
+           "sht_work", "legendre_panel_counts", "predict_sht_time",
+           "BACKEND_MODELS", "BackendModel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,7 +89,31 @@ def sht_work(l_max: int, m_max: int, n_rings: int, n_phi: int,
             + 16.0 * (m_max + 1) * n_rings * K * ncomp)    # Delta (complex)
     return {"n_lm": n_lm, "recurrence_flops": rec, "accum_flops": acc,
             "fft_flops": fft, "bytes": byts,
-            "total_flops": rec + acc + fft}
+            "total_flops": rec + acc + fft,
+            # Legendre grid-step accounting (plain vs packed kernel grids);
+            # the dispatch layer uses this to model packed-vs-plain honestly.
+            "panels": legendre_panel_counts(l_max, m_max, spin=spin)}
+
+
+def legendre_panel_counts(l_max: int, m_max: int, *, lp_size: int = 128,
+                          spin: int = 0) -> dict:
+    """Grid-step accounting of the Legendre stage, plain vs packed.
+
+    Delegates to `repro.kernels.pack.panel_counts` on the canonical row
+    set (``m = 0..m_max``; doubled ``m' = -+2`` rows for ``spin=2``) so the
+    cost model and the kernels agree by construction.  Keys:
+    ``plain_launched`` (dense grid steps, all paying launch latency),
+    ``plain_worked`` (steps passing the ``pl.when`` diagonal test),
+    ``packed`` (packed grid steps -- every one works), ``ideal_steps``
+    (the paper's triangular invariant) and the derived ratios.
+    """
+    from repro.kernels import pack
+    m = np.arange(m_max + 1)
+    if spin:
+        m2 = np.concatenate([m, m])
+        mp2 = np.concatenate([np.full(m_max + 1, -2), np.full(m_max + 1, 2)])
+        return pack.panel_counts(m2, l_max, lp_size=lp_size, mp_vals=mp2)
+    return pack.panel_counts(m, l_max, lp_size=lp_size)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -128,7 +153,8 @@ BACKEND_MODELS = {
 def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
                      n_phi: int, K: int, direction: str = "synth",
                      hw: Hardware = HW_V5E, n_devices: int = 1,
-                     fft_lengths=None, spin: int = 0) -> float:
+                     fft_lengths=None, spin: int = 0, layout: str = None,
+                     lp_size: int = 128) -> float:
     """Predicted seconds for one transform on ``backend`` (3-term model).
 
     compute = recurrence/vector + accumulation/(matrix or vector) + fft;
@@ -138,18 +164,32 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
     ``direction="anal"``.  ``fft_lengths`` carries a ragged grid's
     per-ring bucket lengths into the FFT term; ``spin=2`` doubles every
     term including the exchanged Delta block (see `sht_work`).
+
+    ``layout`` ("plain" | "packed", pallas backends only) scales the
+    Legendre terms by that grid's executed-step overhead over the ideal
+    triangular count (`legendre_panel_counts`), so the packed-vs-plain
+    dispatch decision is modelled honestly.
     """
     if backend not in BACKEND_MODELS:
         raise ValueError(f"unknown backend {backend!r}")
     m = BACKEND_MODELS[backend]
     w = sht_work(l_max, m_max, n_rings, n_phi, K, fft_lengths=fft_lengths,
                  spin=spin)
+    leg_scale = 1.0
+    if layout in ("plain", "packed") and backend.startswith("pallas"):
+        pc = w["panels"] if lp_size == 128 else legendre_panel_counts(
+            l_max, m_max, lp_size=lp_size, spin=spin)
+        steps = (pc["plain_worked"] if layout == "plain" else pc["packed"]) \
+            * pc["lp_size"]
+        if pc["ideal_steps"] > 0:
+            leg_scale = steps / pc["ideal_steps"]
     vec_rate = hw.peak_flops * m.vector_eff
-    t = w["recurrence_flops"] / vec_rate + w["fft_flops"] / vec_rate
+    t = w["recurrence_flops"] * leg_scale / vec_rate \
+        + w["fft_flops"] / vec_rate
     if m.matrix_eff > 0:
-        t += w["accum_flops"] / (hw.peak_flops * m.matrix_eff)
+        t += w["accum_flops"] * leg_scale / (hw.peak_flops * m.matrix_eff)
     else:
-        t += w["accum_flops"] / vec_rate
+        t += w["accum_flops"] * leg_scale / vec_rate
     t += w["bytes"] / hw.hbm_bw
     if backend == "dist" and n_devices > 1:
         t /= n_devices

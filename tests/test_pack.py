@@ -1,0 +1,294 @@
+"""Triangular m-pair packing: layout invariants, packed-vs-plain kernel
+equality (all four variants, fold and spin rows, padding edges), the
+packed-schedule ref oracle, and the layout/variant selection knobs."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro  # noqa: F401
+from repro.core import grids, legendre, sht
+from repro.kernels import ops as kops
+from repro.kernels import pack as kpack
+from repro.kernels import ref as kref
+from repro.roofline import analysis as roofline
+
+KEY = jax.random.PRNGKey(7)
+LP = 16                     # small panels so tiny problems span >1 panel
+
+
+def _setup(l_max, K, m_vals=None):
+    g = grids.make_grid("gl", l_max=l_max)
+    lm = legendre.log_mu(l_max)
+    m_vals = np.arange(l_max + 1) if m_vals is None else np.asarray(m_vals)
+    alm = sht.random_alm(KEY, l_max, l_max, K=K)
+    a_re = np.real(np.asarray(alm))[m_vals.clip(0)]
+    a_im = np.imag(np.asarray(alm))[m_vals.clip(0)]
+    a32 = jnp.concatenate([jnp.asarray(a_re), jnp.asarray(a_im)],
+                          axis=-1).astype(jnp.float32)
+    pmm, pms = kref.prepare_seeds(m_vals, g.sin_theta, lm)
+    x32 = jnp.asarray(g.cos_theta, jnp.float32)
+    return g, lm, m_vals, a32, pmm, pms, x32
+
+
+# ---------------------------------------------------------------------------
+# layout invariants
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_max,l_max", [
+    (24, 24),      # even m_max: odd row count -> unpaired middle m
+    (23, 23),      # odd m_max: every row paired
+    (6, 40),       # m_max < lp_size
+    (7, 40),
+    (15, 15),      # L1 exactly lp_size
+])
+def test_layout_covers_triangle_exactly(m_max, l_max):
+    m = np.arange(m_max + 1)
+    lo = kpack.build_layout(m, l_max, lp_size=LP)
+    got = set()
+    row, l = lo.a_row, lo.a_l
+    for s in range(lo.n_slots):
+        for g in range(lo.S):
+            if row[s, g] >= 0:
+                key = (int(row[s, g]), int(l[s, g]))
+                assert key not in got, f"duplicate stream position {key}"
+                got.add(key)
+    want = {(mm, ll) for mm in m for ll in range(mm, l_max + 1)}
+    assert got == want
+    # min-max pairing: full pair slots carry the invariant total length
+    seg_valid = lo.slot_row >= 0
+    lens = np.where(seg_valid,
+                    l_max + 1 - np.maximum(lo.slot_m, np.abs(lo.slot_mp)), 0)
+    pair_tot = lens.sum(axis=1)[seg_valid[:, 1]]
+    if pair_tot.size:
+        assert np.all(pair_tot == 2 * l_max - m_max + 2)
+    # unpaired middle m present iff the row count is odd
+    assert (np.count_nonzero(~seg_valid[:, 1]) == 1) == (m_max % 2 == 0)
+
+
+def test_layout_skips_padding_rows_and_counts():
+    m = np.array([0, 5, -1, 17, -1])
+    lo = kpack.build_layout(m, 20, lp_size=LP)
+    assert set(lo.slot_row[lo.slot_row >= 0].tolist()) == {0, 1, 3}
+    c = kpack.panel_counts(m, 20, lp_size=LP)
+    assert c["packed"] == lo.n_panels
+    assert c["ideal_steps"] == (21 - 0) + (21 - 5) + (21 - 17)
+    # all-padding row sets cannot pack
+    assert kpack.build_layout(np.array([-1, -1]), 20, lp_size=LP) is None
+
+
+def test_roofline_panel_counts_match_pack():
+    for l_max, spin in ((127, 0), (128, 0), (64, 2)):
+        c = roofline.legendre_panel_counts(l_max, l_max, spin=spin)
+        m = np.arange(l_max + 1)
+        if spin:
+            m2 = np.concatenate([m, m])
+            mp2 = np.concatenate([np.full(l_max + 1, -2),
+                                  np.full(l_max + 1, 2)])
+            want = kpack.panel_counts(m2, l_max, mp_vals=mp2)
+        else:
+            want = kpack.panel_counts(m, l_max)
+        assert c == want
+    # the acceptance numbers: ~2x fewer grid steps at l_max = 512
+    c = roofline.legendre_panel_counts(512, 512)
+    assert c["plain_launched"] == 2565 and c["packed"] == 1285
+    assert c["launched_ratio"] >= 1.5
+    assert "panels" in roofline.sht_work(64, 64, 65, 130, 1)
+
+
+# ---------------------------------------------------------------------------
+# packed-vs-plain kernel equality
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("l_max,K", [(15, 1), (24, 2)])
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+@pytest.mark.parametrize("fold", [False, True])
+def test_synth_packed_vs_plain(l_max, K, variant, fold):
+    g, lm, m_vals, a32, pmm, pms, x32 = _setup(l_max, K)
+    nh = (g.n_rings + 1) // 2
+    xs = jnp.asarray(g.cos_theta[:nh] if fold else g.cos_theta, jnp.float32)
+    sins = g.sin_theta[:nh] if fold else g.sin_theta
+    pmm_f, pms_f = kref.prepare_seeds(m_vals, sins, lm)
+    plain = kops.synth(a32, m_vals, xs, pmm_f, pms_f, l_max=l_max,
+                       fold=fold, variant=variant, layout="plain")
+    packed = kops.synth(a32, m_vals, xs, pmm_f, pms_f, l_max=l_max,
+                        fold=fold, variant=variant, layout="packed",
+                        lp_size=LP)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(plain),
+                               rtol=0, atol=2e-6)
+
+
+@pytest.mark.parametrize("l_max,K", [(15, 1), (24, 2)])
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+@pytest.mark.parametrize("fold", [False, True])
+def test_anal_packed_vs_plain(l_max, K, variant, fold):
+    g, lm, m_vals, a32, pmm, pms, x32 = _setup(l_max, K)
+    rng = np.random.default_rng(1)
+    nh = (g.n_rings + 1) // 2
+    R = nh if fold else g.n_rings
+    n_par = 2 if fold else 1
+    xs = jnp.asarray(g.cos_theta[:R], jnp.float32)
+    pmm_f, pms_f = kref.prepare_seeds(m_vals, g.sin_theta[:R], lm)
+    dw = jnp.asarray(rng.normal(size=(len(m_vals), n_par, R, 2 * K)),
+                     jnp.float32)
+    plain = kops.anal(dw, m_vals, xs, pmm_f, pms_f, l_max=l_max, fold=fold,
+                      variant=variant, layout="plain")
+    packed = kops.anal(dw, m_vals, xs, pmm_f, pms_f, l_max=l_max, fold=fold,
+                       variant=variant, layout="packed", lp_size=LP)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(plain),
+                               rtol=0, atol=5e-5)
+
+
+@pytest.mark.parametrize("variant", ["vpu", "mxu"])
+def test_spin_rows_packed_vs_plain(variant):
+    l_max, K = 24, 1
+    g, lm, m_vals, a32, pmm, pms, x32 = _setup(l_max, K)
+    m2, mp2 = kops.spin_rows(m_vals)
+    pmm_s, pms_s = kref.prepare_seeds_spin(m2, mp2, g.cos_theta,
+                                           g.sin_theta, m_max=l_max)
+    a2 = jnp.concatenate([a32, a32], axis=0)
+    plain = kops.synth(a2, m2, x32, pmm_s, pms_s, l_max=l_max,
+                       variant=variant, mp_vals=mp2, layout="plain")
+    packed = kops.synth(a2, m2, x32, pmm_s, pms_s, l_max=l_max,
+                        variant=variant, mp_vals=mp2, layout="packed",
+                        lp_size=LP)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(plain),
+                               rtol=0, atol=2e-6)
+    rng = np.random.default_rng(2)
+    dw = jnp.asarray(rng.normal(size=(len(m2), 1, g.n_rings, 2 * K)),
+                     jnp.float32)
+    plain = kops.anal(dw, m2, x32, pmm_s, pms_s, l_max=l_max,
+                      variant=variant, mp_vals=mp2, layout="plain")
+    packed = kops.anal(dw, m2, x32, pmm_s, pms_s, l_max=l_max,
+                       variant=variant, mp_vals=mp2, layout="packed",
+                       lp_size=LP)
+    np.testing.assert_allclose(np.asarray(packed), np.asarray(plain),
+                               rtol=0, atol=5e-5)
+
+
+def test_packed_padding_rows_are_zero():
+    l_max = 20
+    m_vals = np.array([0, 5, -1, 17, -1])
+    g, lm, m_vals, a32, pmm, pms, x32 = _setup(l_max, 1, m_vals)
+    got = np.asarray(kops.synth(a32, m_vals, x32, pmm, pms, l_max=l_max,
+                                variant="vpu", layout="packed", lp_size=LP))
+    assert np.all(got[2] == 0.0) and np.all(got[4] == 0.0)
+    assert np.any(got[1] != 0.0)
+    dw = jnp.ones((len(m_vals), 1, g.n_rings, 2), jnp.float32)
+    out = np.asarray(kops.anal(dw, m_vals, x32, pmm, pms, l_max=l_max,
+                               variant="mxu", layout="packed", lp_size=LP))
+    assert np.all(out[2] == 0.0) and np.all(out[4] == 0.0)
+    # sub-diagonal rows (l < m) stay exactly zero after unpack
+    assert np.all(out[3, :17] == 0.0) and np.any(out[3, 17:] != 0.0)
+
+
+# ---------------------------------------------------------------------------
+# packed-schedule ref oracle (bit-matched to the packed kernels)
+# ---------------------------------------------------------------------------
+
+
+def test_packed_ref_matches_packed_kernels():
+    l_max, K = 24, 2
+    g, lm, m_vals, a32, pmm, pms, x32 = _setup(l_max, K)
+    lo = kpack.build_layout(m_vals, l_max, lp_size=LP)
+    Rp = -(-g.n_rings // 1024) * 1024
+    a_pk = kops._pack_a(a32, lo)
+    pmm_pk = kops._pack_rows(jnp.pad(pmm, ((0, 0), (0, Rp - g.n_rings))), lo)
+    pms_pk = kops._pack_rows(jnp.pad(pms, ((0, 0), (0, Rp - g.n_rings))), lo)
+    x_p = jnp.pad(x32, (0, Rp - g.n_rings))
+    from repro.kernels import legendre_pallas as lk
+    out_k = lk.synth_vpu_packed(
+        a_pk, kops._pack_maps(lo), x_p.reshape(-1, 128),
+        pmm_pk.reshape(lo.n_slots, 2, -1, 128),
+        pms_pk.reshape(lo.n_slots, 2, -1, 128), l_max=l_max, lp_size=LP)
+    out_k = jnp.moveaxis(out_k, 2, -1).reshape(lo.n_slots, 2, Rp, 2 * K)
+    out_r = kref.synth_packed_ref(a_pk, lo, x_p, pmm_pk, pms_pk)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=0, atol=1e-7)
+    rng = np.random.default_rng(3)
+    dw_pk = jnp.asarray(rng.normal(size=(lo.n_slots, 2, Rp, 2 * K)),
+                        jnp.float32)
+    dwk = jnp.moveaxis(dw_pk.reshape(lo.n_slots, 2, -1, 128, 2 * K), -1, 2)
+    rows_k = lk.anal_vpu_packed(
+        dwk, kops._pack_maps(lo), x_p.reshape(-1, 128),
+        pmm_pk.reshape(lo.n_slots, 2, -1, 128),
+        pms_pk.reshape(lo.n_slots, 2, -1, 128), l_max=l_max, s_len=lo.S,
+        lp_size=LP)
+    rows_r = kref.anal_packed_ref(dw_pk, lo, x_p, pmm_pk, pms_pk)
+    # the kernel reduces rings in (8, 128) tiles, the oracle in one sweep:
+    # identical schedule, reassociated sum
+    np.testing.assert_allclose(np.asarray(rows_k), np.asarray(rows_r),
+                               rtol=0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selection knobs: pick_layout / pick_variant autotune / plan dispatch
+# ---------------------------------------------------------------------------
+
+
+def test_pick_layout_rules(monkeypatch):
+    m = np.arange(5)
+    assert kops.pick_layout(m) == "packed"
+    assert kops.pick_layout(m, "plain") == "plain"
+    monkeypatch.setenv("REPRO_LEGENDRE_LAYOUT", "plain")
+    assert kops.pick_layout(m) == "plain"
+    # the env var is the global force: it outranks explicit per-call
+    # arguments (and therefore plan-autotuned layouts) too
+    assert kops.pick_layout(m, "packed") == "plain"
+    monkeypatch.setenv("REPRO_LEGENDRE_LAYOUT", "packed")
+    assert kops.pick_layout(m) == "packed"
+
+    def traced(mv):
+        # traced row sets can never pack, even under the env override
+        assert kops.pick_layout(mv) == "plain"
+        return mv
+
+    jax.jit(traced)(jnp.arange(5))
+
+
+def test_pick_variant_autotune_cached(monkeypatch):
+    calls = []
+
+    def fake_measure(K2, var):
+        calls.append((K2, var))
+        return {"vpu": 0.1, "mxu": 0.2}[var]
+
+    monkeypatch.setattr(kops, "_measure_variant", fake_measure)
+    monkeypatch.setenv("REPRO_LEGENDRE_AUTOTUNE", "1")
+    monkeypatch.delenv("REPRO_LEGENDRE_VARIANT", raising=False)
+    from repro.core import cache as plancache
+    plancache.clear_memory()
+    assert kops.pick_variant(2) == "vpu"
+    assert len(calls) == 2                      # both variants measured once
+    assert kops.pick_variant(2) == "vpu"        # decision cached
+    assert len(calls) == 2
+    monkeypatch.setenv("REPRO_LEGENDRE_VARIANT", "mxu")
+    assert kops.pick_variant(2) == "mxu"        # env beats autotune
+    monkeypatch.delenv("REPRO_LEGENDRE_VARIANT")
+    monkeypatch.delenv("REPRO_LEGENDRE_AUTOTUNE")
+    assert kops.pick_variant(2) == "vpu"        # static rule restored
+    assert kops.pick_variant(32) == "mxu"
+
+
+def test_plan_reports_layouts_and_panels():
+    from repro.core import transform
+    transform.clear_plan_cache()
+    plan = repro.make_plan("gl", l_max=16, K=1, dtype="float32",
+                           mode="pallas_vpu", cache="memory")
+    assert plan.layouts["synth"] in ("packed", "plain")
+    assert plan.layouts["anal"] in ("packed", "plain")
+    d = plan.describe()
+    assert d["legendre"]["panels"]["packed"] > 0
+    assert d["layouts"] == plan.layouts
+    assert "legendre:" in plan.report()
+    alm = sht.random_alm(seed=3, l_max=16, m_max=16).astype(np.complex64)
+    from repro.core import spectra
+    err = float(spectra.d_err(alm, plan.map2alm(plan.alm2map(alm))))
+    assert err < 1e-4
+    # jnp-backed plans carry no layout
+    p64 = repro.make_plan("gl", l_max=16, K=1, dtype="float64", mode="jnp",
+                          cache="memory")
+    assert p64.layouts == {"synth": None, "anal": None}
