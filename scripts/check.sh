@@ -57,6 +57,29 @@ print(f"healpix nside=8 spin-2 roundtrip d_err={err:.2e} "
       f"backends={plan.backends}")
 PY
 
+echo "== differentiable-transform smoke (grad example, one optimizer step) =="
+PYTHONPATH=src python examples/grad_cl_estimate.py --lmax 8 --steps 1 --mode jnp
+PYTHONPATH=src python - <<'PY'
+# jax.grad through the Pallas path + the adjoint identity, one tiny case
+import numpy as np, jax, jax.numpy as jnp
+import repro
+from repro.core import sht
+plan = repro.make_plan("gl", l_max=8, dtype="float32", mode="pallas_vpu")
+assert plan.grad_ready == {"synth": True, "anal": True}
+alm = sht.random_alm(seed=0, l_max=8, m_max=8).astype(jnp.complex64)
+t = jnp.asarray(np.random.default_rng(0).normal(size=plan._maps_shape),
+                jnp.float32)
+loss = lambda a: jnp.sum(plan.alm2map(a) * t)
+g = jax.grad(loss)(alm)
+v = sht.random_alm(seed=1, l_max=8, m_max=8).astype(jnp.complex64)
+eps = 1e-2
+fd = float((loss(alm + eps*v) - loss(alm - eps*v)) / (2*eps))
+dd = float(jnp.real(jnp.sum(g * v)))
+rel = abs(fd - dd) / max(abs(fd), 1e-9)
+assert rel < 1e-2, f"pallas gradcheck regressed: rel={rel}"
+print(f"pallas_vpu gradcheck OK (rel={rel:.2e})")
+PY
+
 echo "== spin benchmark (one-rep smoke) =="
 # standalone (also part of benchmarks.run below) so a spin-bench
 # regression fails the gate loudly -- run.py swallows per-module errors

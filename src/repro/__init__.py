@@ -25,7 +25,7 @@ def __getattr__(name):
     a plan actually selects them).
     """
     if name in ("make_plan", "Plan", "available_backends",
-                "backend_eligibility"):
+                "backend_eligibility", "clear_plan_cache"):
         from repro.core import transform
         return getattr(transform, name)
     raise AttributeError(f"module 'repro' has no attribute {name!r}")

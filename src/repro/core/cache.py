@@ -36,7 +36,8 @@ import numpy as np
 
 __all__ = [
     "CACHE_VERSION", "signature_key", "get_or_build", "cache_dir",
-    "load_decision", "save_decision", "clear_memory", "stats", "reset_stats",
+    "load_decision", "save_decision", "clear_memory", "clear_disk",
+    "stats", "reset_stats",
 ]
 
 #: Bump when the payload layout of any cached builder changes; old disk
@@ -77,6 +78,31 @@ def clear_memory() -> None:
     """Drop the in-memory tier (disk entries survive).  Test hook."""
     _MEMORY.clear()
     _DECISIONS.clear()
+
+
+def clear_disk(directory: Optional[str] = None) -> int:
+    """Remove the persistent tier under ``directory`` (default resolution
+    as in :func:`cache_dir`).  Only files this module wrote are touched --
+    32-hex-digit signature names with ``.npz``/``.json`` suffixes -- so a
+    mis-pointed ``$REPRO_CACHE_DIR`` cannot wipe unrelated data.  Returns
+    the number of entries removed; a missing directory is a no-op.
+    """
+    d = cache_dir(directory)
+    if not os.path.isdir(d):
+        return 0
+    removed = 0
+    for name in os.listdir(d):
+        stem, dot, ext = name.rpartition(".")
+        if ext not in ("npz", "json") or len(stem) != 32:
+            continue
+        if not all(c in "0123456789abcdef" for c in stem):
+            continue
+        try:
+            os.unlink(os.path.join(d, name))
+            removed += 1
+        except OSError:  # concurrent clear / permissions: best effort
+            pass
+    return removed
 
 
 def cache_dir(override: Optional[str] = None) -> str:

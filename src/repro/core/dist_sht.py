@@ -21,6 +21,12 @@ Design notes (DESIGN.md §2):
   the paper explicitly leaves lossy-compressed communication to future work
   (§4.1.2); we implement it and measure the accuracy cost in tests.
 * `stage1` selects the jnp reference path or the Pallas kernel path.
+* Both transforms are differentiable inside shard_map: stage 1 and the
+  phase stage carry adjoint-based custom VJP/JVP rules (linear_call
+  transposes), and `lax.all_to_all` transposes to the reverse exchange --
+  so `jax.grad` of a loss through `alm2map`/`map2alm` runs the
+  opposite-direction two-stage transform with the same single collective
+  (checked by the gradchecks in tests/helpers/dist_sht_check.py).
 """
 
 from __future__ import annotations

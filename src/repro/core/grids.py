@@ -16,6 +16,11 @@ algorithm possible.  We provide three grid families:
                          ring-bucket phase stage (repro.core.phase) on every
                          backend, with `ring_buckets` grouping rings by
                          rounded-up FFT length.
+  * ``ecp``           -- equidistant cylindrical (equiangular theta rings,
+                         uniform n_phi, latitude-band area weights).
+                         Approximate quadrature like HEALPix; the simplest
+                         uniform grid, used by the adjointness test matrix
+                         as a non-Gauss exact-FFT case.
 
 All geometry is computed with numpy in float64 at plan time; nothing here
 touches jax device state.
@@ -34,6 +39,7 @@ __all__ = [
     "BucketLayout",
     "ring_buckets",
     "gauss_legendre_grid",
+    "ecp_grid",
     "healpix_ring_grid",
     "healpix_grid",
     "make_grid",
@@ -277,6 +283,43 @@ def gauss_legendre_grid(l_max: int, n_rings: Optional[int] = None,
 
 
 # ---------------------------------------------------------------------------
+# Equidistant cylindrical (ECP) grid
+# ---------------------------------------------------------------------------
+
+
+def ecp_grid(l_max: int, n_rings: Optional[int] = None,
+             n_phi: Optional[int] = None) -> RingGrid:
+    """Equidistant cylindrical grid: theta_r = (r + 1/2) * pi / R.
+
+    Defaults: ``n_rings = 2 * (l_max + 1)`` (mid-point theta sampling needs
+    ~2x the rings of Gauss-Legendre for comparable quadrature error),
+    ``n_phi = 2 * l_max + 2`` (exact azimuthal quadrature, rfft-friendly).
+    Per-sample weight is the exact latitude-band area
+    ``2 pi (cos theta_{r-1/2} - cos theta_{r+1/2}) / n_phi``, so the
+    weights sum to the sphere area exactly; the theta quadrature itself is
+    approximate (like HEALPix, ``map2alm(iters>0)`` refines it).  Symmetric
+    about the equator, so ``fold=True`` plans are eligible.
+    """
+    if n_rings is None:
+        n_rings = 2 * (l_max + 1)
+    if n_phi is None:
+        n_phi = 2 * l_max + 2
+    r = np.arange(n_rings, dtype=np.float64)
+    theta = (r + 0.5) * np.pi / n_rings
+    edge = np.cos(np.arange(n_rings + 1, dtype=np.float64) * np.pi / n_rings)
+    band = 2.0 * np.pi * (edge[:-1] - edge[1:])          # exact band areas
+    return RingGrid(
+        name="ecp",
+        cos_theta=np.cos(theta),
+        sin_theta=np.sin(theta),
+        weights=band / n_phi,
+        n_phi=np.full(n_rings, n_phi, dtype=np.int64),
+        phi0=np.zeros(n_rings, dtype=np.float64),
+        uniform=True,
+    )
+
+
+# ---------------------------------------------------------------------------
 # HEALPix-family grids
 # ---------------------------------------------------------------------------
 
@@ -362,6 +405,9 @@ def make_grid(kind: str, *, l_max: Optional[int] = None,
     if kind == "gl":
         assert l_max is not None, "gl grid needs l_max"
         g = gauss_legendre_grid(l_max, **kw)
+    elif kind == "ecp":
+        assert l_max is not None, "ecp grid needs l_max"
+        g = ecp_grid(l_max, **kw)
     elif kind == "healpix_ring":
         assert nside is not None, "healpix_ring grid needs nside"
         g = healpix_ring_grid(nside)

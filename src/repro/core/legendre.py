@@ -34,6 +34,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autodiff import linear_pair
+
 __all__ = [
     "log_mu",
     "log_factorials",
@@ -211,14 +213,35 @@ def delta_from_alm(a_re, a_im, m_vals, grid_x, grid_sin, log_mu_all, *,
     a_re/a_im: (M, l_max+1, K) with rows l < m zero-padded.
     Returns (d_re, d_im): (M, R, K).  This is paper Algorithm 2 STEP 2 /
     Algorithm 3 STEP 2, vectorised over (m, ring) with the l loop sequential.
+
+    Differentiable both ways via the adjoint identity (VJP = analysis with
+    unit weights); ``m_vals`` may be traced (the distributed stage-1 path).
     """
     dtype = jnp.dtype(dtype)
-    m, x, log_mu_m = _prep(m_vals, grid_x, log_mu_all, dtype)
     sb = scale_bits_for(dtype)
-    return _delta_from_alm_impl(
-        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, x,
-        np.asarray(grid_sin, np.float64), log_mu_m,
-        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+    gx = np.asarray(grid_x)
+    gs = np.asarray(grid_sin, np.float64)
+    lm_all = np.asarray(log_mu_all)
+    a_re = jnp.asarray(a_re, dtype)
+    a_im = jnp.asarray(a_im, dtype)
+    assert a_re.shape[1] == l_max + 1, (a_re.shape, l_max)
+    R = gx.shape[0]
+
+    def fwd(m_vals_, ops):
+        ar, ai = ops
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _delta_from_alm_impl(ar, ai, m, x, gs, log_mu_m, l_max=l_max,
+                                    scale_bits=sb, dtype_name=dtype.name)
+
+    def bwd(m_vals_, cts):
+        gd_re, gd_im = cts
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        ones = jnp.ones((R,), dtype)
+        return _alm_from_delta_impl(gd_re, gd_im, m, x, gs, log_mu_m, ones,
+                                    l_max=l_max, scale_bits=sb,
+                                    dtype_name=dtype.name)
+
+    return linear_pair(fwd, bwd, m_vals, (a_re, a_im))
 
 
 @functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
@@ -258,15 +281,37 @@ def alm_from_delta(d_re, d_im, m_vals, grid_x, grid_sin, weights, log_mu_all,
 
     d_re/d_im: (M, R, K).  Returns (a_re, a_im): (M, l_max+1, K) with rows
     l < m exactly zero.  Paper Algorithm 1 STEP 3.
+
+    Differentiable both ways via the adjoint identity (VJP = weights times
+    synthesis of the cotangent).
     """
     dtype = jnp.dtype(dtype)
-    m, x, log_mu_m = _prep(m_vals, grid_x, log_mu_all, dtype)
     sb = scale_bits_for(dtype)
-    w = jnp.asarray(weights, dtype)
-    return _alm_from_delta_impl(
-        jnp.asarray(d_re, dtype), jnp.asarray(d_im, dtype), m, x,
-        np.asarray(grid_sin, np.float64), log_mu_m, w,
-        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+    gx = np.asarray(grid_x)
+    gs = np.asarray(grid_sin, np.float64)
+    lm_all = np.asarray(log_mu_all)
+    d_re = jnp.asarray(d_re, dtype)
+    d_im = jnp.asarray(d_im, dtype)
+
+    def fwd(res, ops):
+        m_vals_, w = res
+        dr, di = ops
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _alm_from_delta_impl(dr, di, m, x, gs, log_mu_m, w,
+                                    l_max=l_max, scale_bits=sb,
+                                    dtype_name=dtype.name)
+
+    def bwd(res, cts):
+        m_vals_, w = res
+        ga_re, ga_im = cts
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        gd_re, gd_im = _delta_from_alm_impl(ga_re, ga_im, m, x, gs, log_mu_m,
+                                            l_max=l_max, scale_bits=sb,
+                                            dtype_name=dtype.name)
+        return gd_re * w[None, :, None], gd_im * w[None, :, None]
+
+    return linear_pair(fwd, bwd, (m_vals, jnp.asarray(weights, dtype)),
+                       (d_re, d_im))
 
 
 # ---------------------------------------------------------------------------
@@ -321,14 +366,35 @@ def delta_from_alm_folded(a_re, a_im, m_vals, north_x, north_sin, log_mu_all,
 
     (d_even_re, d_even_im, d_odd_re, d_odd_im), each (M, R_north, K).
     North ring r: even + odd; its mirror: even - odd.
+
+    Differentiable both ways: the VJP is the folded analysis of the even/odd
+    cotangent partials (the parity split is its own transpose).
     """
     dtype = jnp.dtype(dtype)
-    m, x, log_mu_m = _prep(m_vals, north_x, log_mu_all, dtype)
     sb = scale_bits_for(dtype)
-    return _delta_from_alm_folded_impl(
-        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, x,
-        np.asarray(north_sin, np.float64), log_mu_m,
-        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+    gx = np.asarray(north_x)
+    gs = np.asarray(north_sin, np.float64)
+    lm_all = np.asarray(log_mu_all)
+    a_re = jnp.asarray(a_re, dtype)
+    a_im = jnp.asarray(a_im, dtype)
+    assert a_re.shape[1] == l_max + 1, (a_re.shape, l_max)
+
+    def fwd(m_vals_, ops):
+        ar, ai = ops
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _delta_from_alm_folded_impl(ar, ai, m, x, gs, log_mu_m,
+                                           l_max=l_max, scale_bits=sb,
+                                           dtype_name=dtype.name)
+
+    def bwd(m_vals_, cts):
+        ge_re, ge_im, go_re, go_im = cts
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _alm_from_delta_folded_impl(ge_re, ge_im, go_re, go_im, m, x,
+                                           gs, log_mu_m, l_max=l_max,
+                                           scale_bits=sb,
+                                           dtype_name=dtype.name)
+
+    return linear_pair(fwd, bwd, m_vals, (a_re, a_im))
 
 
 @functools.partial(jax.jit, static_argnames=("l_max", "scale_bits", "dtype_name"))
@@ -367,15 +433,34 @@ def alm_from_delta_folded(sum_e_re, sum_e_im, sum_o_re, sum_o_im, m_vals,
     difference (equator ring, if any, contributes to sum_e and sum_o with the
     same value and half... no: with its own weight in sum_e and ZERO in sum_o
     handled by the caller).  Each (M, R_north, K).
+
+    Differentiable both ways: the VJP is the folded synthesis of the alm
+    cotangent (even/odd partials of the gradient).
     """
     dtype = jnp.dtype(dtype)
-    m, x, log_mu_m = _prep(m_vals, north_x, log_mu_all, dtype)
     sb = scale_bits_for(dtype)
-    return _alm_from_delta_folded_impl(
-        jnp.asarray(sum_e_re, dtype), jnp.asarray(sum_e_im, dtype),
-        jnp.asarray(sum_o_re, dtype), jnp.asarray(sum_o_im, dtype), m, x,
-        np.asarray(north_sin, np.float64), log_mu_m,
-        l_max=l_max, scale_bits=sb, dtype_name=dtype.name)
+    gx = np.asarray(north_x)
+    gs = np.asarray(north_sin, np.float64)
+    lm_all = np.asarray(log_mu_all)
+    ops = tuple(jnp.asarray(v, dtype)
+                for v in (sum_e_re, sum_e_im, sum_o_re, sum_o_im))
+
+    def fwd(m_vals_, ops_):
+        se_re, se_im, so_re, so_im = ops_
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _alm_from_delta_folded_impl(se_re, se_im, so_re, so_im, m, x,
+                                           gs, log_mu_m, l_max=l_max,
+                                           scale_bits=sb,
+                                           dtype_name=dtype.name)
+
+    def bwd(m_vals_, cts):
+        ga_re, ga_im = cts
+        m, x, log_mu_m = _prep(m_vals_, gx, lm_all, dtype)
+        return _delta_from_alm_folded_impl(ga_re, ga_im, m, x, gs, log_mu_m,
+                                           l_max=l_max, scale_bits=sb,
+                                           dtype_name=dtype.name)
+
+    return linear_pair(fwd, bwd, m_vals, ops)
 
 
 # ===========================================================================
@@ -605,16 +690,35 @@ def delta_from_alm_general(a_re, a_im, m_vals, mprime_vals, grid_x, grid_sin,
     (m' = 0 rows reproduce the scalar transform through the generalised
     recurrence).  a_re/a_im: (Ms, l_max+1, K) -> (Ms, R, K).
     ``m_max`` must be given when ``m_vals`` is traced (distributed path).
+
+    Differentiable both ways (VJP = generalised analysis of the cotangent,
+    same Wigner-d rows, unit weights).
     """
     dtype = jnp.dtype(dtype)
     sb = scale_bits_for(dtype)
-    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
     seed_mant, seed_scale = _seed_tables(m_vals, mprime_vals, grid_x,
                                          grid_sin, m_max, dtype, sb)
-    return _delta_from_alm_general_impl(
-        jnp.asarray(a_re, dtype), jnp.asarray(a_im, dtype), m, mp, x,
-        seed_mant, seed_scale, l_max=l_max, scale_bits=sb,
-        dtype_name=dtype.name)
+    a_re = jnp.asarray(a_re, dtype)
+    a_im = jnp.asarray(a_im, dtype)
+    assert a_re.shape[1] == l_max + 1, (a_re.shape, l_max)
+
+    def fwd(res, ops):
+        m, mp, x, sm, ss = res
+        ar, ai = ops
+        return _delta_from_alm_general_impl(ar, ai, m, mp, x, sm, ss,
+                                            l_max=l_max, scale_bits=sb,
+                                            dtype_name=dtype.name)
+
+    def bwd(res, cts):
+        m, mp, x, sm, ss = res
+        gd_re, gd_im = cts
+        return _alm_from_delta_general_impl(gd_re, gd_im, m, mp, x, sm, ss,
+                                            l_max=l_max, scale_bits=sb,
+                                            dtype_name=dtype.name)
+
+    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
+    return linear_pair(fwd, bwd, (m, mp, x, seed_mant, seed_scale),
+                       (a_re, a_im))
 
 
 def alm_from_delta_general(d_re, d_im, m_vals, mprime_vals, grid_x, grid_sin,
@@ -624,16 +728,34 @@ def alm_from_delta_general(d_re, d_im, m_vals, mprime_vals, grid_x, grid_sin,
 
     d_re/d_im: (Ms, R, K) *weighted* Delta -> (Ms, l_max+1, K); rows with
     l < max(m, |m'|) come out exactly zero.
+
+    Differentiable both ways (VJP = generalised synthesis of the alm
+    cotangent).
     """
     dtype = jnp.dtype(dtype)
     sb = scale_bits_for(dtype)
-    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
     seed_mant, seed_scale = _seed_tables(m_vals, mprime_vals, grid_x,
                                          grid_sin, m_max, dtype, sb)
-    return _alm_from_delta_general_impl(
-        jnp.asarray(d_re, dtype), jnp.asarray(d_im, dtype), m, mp, x,
-        seed_mant, seed_scale, l_max=l_max, scale_bits=sb,
-        dtype_name=dtype.name)
+    d_re = jnp.asarray(d_re, dtype)
+    d_im = jnp.asarray(d_im, dtype)
+
+    def fwd(res, ops):
+        m, mp, x, sm, ss = res
+        dr, di = ops
+        return _alm_from_delta_general_impl(dr, di, m, mp, x, sm, ss,
+                                            l_max=l_max, scale_bits=sb,
+                                            dtype_name=dtype.name)
+
+    def bwd(res, cts):
+        m, mp, x, sm, ss = res
+        ga_re, ga_im = cts
+        return _delta_from_alm_general_impl(ga_re, ga_im, m, mp, x, sm, ss,
+                                            l_max=l_max, scale_bits=sb,
+                                            dtype_name=dtype.name)
+
+    m, mp, x = _prep_general(m_vals, mprime_vals, grid_x, dtype)
+    return linear_pair(fwd, bwd, (m, mp, x, seed_mant, seed_scale),
+                       (d_re, d_im))
 
 
 # ---------------------------------------------------------------------------

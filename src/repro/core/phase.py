@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import cache as plancache
+from repro.core.autodiff import linear_pair
 from repro.core.grids import BucketLayout, RingGrid
 
 __all__ = [
@@ -87,21 +88,36 @@ def phase_factors(m_vals, phi0, sign: float, dtype) -> jnp.ndarray:
 # ---------------------------------------------------------------------------
 # uniform engine: one batched real FFT over all rings
 # ---------------------------------------------------------------------------
+#
+# Differentiation: both engines carry adjoint-based custom JVP/VJP rules
+# (repro.core.autodiff.linear_pair).  The forward maps are real-linear in
+# delta/maps; their exact transposes are the opposite-direction phase stage
+# with the quadrature weights stripped and a per-m factor
+#
+#     fac_m = 1 (m == 0) | 2 (m > 0)
+#
+# compensating the implicit negative-m (conjugate) half of the spectrum:
+# the synthesis of each m > 0 row contributes both e^{+im phi} and its
+# conjugate, so <synth(delta), t> picks up each positive-m row twice.
+# The transposes below are verified against dot-product identities and
+# native AD in tests/test_adjoint.py.
 
 
-def uniform_synth(delta, m_vals, n: int, phi0, *, dtype,
-                  scale_rows=None) -> jnp.ndarray:
-    """Synthesis phase stage on a uniform grid.
-
-    delta: (M, R, K) complex Delta^A rows following ``m_vals`` ->
-    maps (R, n, K) real.  Alias-folds every m into the rfft half-spectrum
-    (bins past n/2 wrap to the conjugate half; the Nyquist bin doubles its
-    real part).  ``scale_rows`` optionally scales rings on the way out
-    (the dist path's dummy-ring mask).
-    """
-    cdt = _complex_dtype(dtype)
+def _fac_rows(m_vals, dtype):
+    """(M, 1, 1) adjoint compensation factors: 1 for m == 0, else 2
+    (padding rows m < 0 are irrelevant -- their phase factors are zero).
+    Pure numpy: these are closed over by transpose rules that run in a
+    *different* trace than the forward call, so they must not be device
+    arrays created under the forward trace (leaked-tracer hazard)."""
     m = np.asarray(m_vals)
-    dp = delta.astype(cdt) * phase_factors(m, phi0, +1.0, dtype)[..., None]
+    return np.where(m == 0, 1.0, 2.0).astype(
+        jnp.dtype(dtype))[:, None, None]
+
+
+def _uniform_synth_body(d_re, d_im, phi0, scale_rows, m, n, dtype):
+    cdt = _complex_dtype(dtype)
+    delta = (d_re + 1j * d_im).astype(cdt)
+    dp = delta * phase_factors(m, phi0, +1.0, dtype)[..., None]
     b = np.maximum(m, 0) % n
     hi = b > n // 2                                # conjugate wrap
     bins = np.where(hi, n - b, b)
@@ -119,14 +135,10 @@ def uniform_synth(delta, m_vals, n: int, phi0, *, dtype,
     return s
 
 
-def uniform_anal(maps, m_vals, n: int, phi0, weights, *, dtype) -> jnp.ndarray:
-    """Analysis phase stage on a uniform grid.
-
-    maps: (R, n, K) real -> weighted Delta^S (M, R, K) complex, rows
-    following ``m_vals`` (quadrature ``weights`` applied per ring).
-    """
+def _uniform_anal_core(maps, phi0, m, n, dtype):
+    """Weight-free analysis core: maps (R, n, K) -> (A_re, A_im), each
+    (M, R, K): the e^{-im phi} projection without the quadrature weights."""
     cdt = _complex_dtype(dtype)
-    m = np.asarray(m_vals)
     F = jnp.fft.rfft(maps.astype(dtype), axis=1)   # (R, n//2+1, K)
     b = np.maximum(m, 0) % n
     hi = b > n // 2
@@ -134,9 +146,73 @@ def uniform_anal(maps, m_vals, n: int, phi0, weights, *, dtype) -> jnp.ndarray:
     Fm = F[:, jnp.asarray(bins), :]                # (R, M, K)
     Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
     Fm = jnp.moveaxis(Fm, 1, 0).astype(cdt)        # (M, R, K)
-    w = jnp.asarray(weights).astype(dtype)
-    return Fm * phase_factors(m, phi0, -1.0, dtype)[..., None] \
-        * w[None, :, None]
+    A = Fm * phase_factors(m, phi0, -1.0, dtype)[..., None]
+    return jnp.real(A).astype(dtype), jnp.imag(A).astype(dtype)
+
+
+def uniform_synth(delta, m_vals, n: int, phi0, *, dtype,
+                  scale_rows=None) -> jnp.ndarray:
+    """Synthesis phase stage on a uniform grid.
+
+    delta: (M, R, K) complex Delta^A rows following ``m_vals`` ->
+    maps (R, n, K) real.  Alias-folds every m into the rfft half-spectrum
+    (bins past n/2 wrap to the conjugate half; the Nyquist bin doubles its
+    real part).  ``scale_rows`` optionally scales rings on the way out
+    (the dist path's dummy-ring mask).
+
+    Differentiable both ways: the VJP is ``fac_m`` times the weight-free
+    analysis of the map cotangent.
+    """
+    dt = jnp.dtype(dtype)
+    m = np.asarray(m_vals)
+    cdt = _complex_dtype(dtype)
+    delta = jnp.asarray(delta).astype(cdt)
+    fac = _fac_rows(m, dt)
+
+    def fwd(res, ops):
+        phi0_, sr = res
+        dr, di = ops
+        return _uniform_synth_body(dr, di, phi0_, sr, m, n, dtype)
+
+    def bwd(res, t):
+        phi0_, sr = res
+        if sr is not None:
+            t = t * sr[:, None, None]
+        a_re, a_im = _uniform_anal_core(t, phi0_, m, n, dtype)
+        return (fac * a_re).astype(dt), (fac * a_im).astype(dt)
+
+    return linear_pair(fwd, bwd, (phi0, scale_rows),
+                       (jnp.real(delta), jnp.imag(delta)))
+
+
+def uniform_anal(maps, m_vals, n: int, phi0, weights, *, dtype) -> jnp.ndarray:
+    """Analysis phase stage on a uniform grid.
+
+    maps: (R, n, K) real -> weighted Delta^S (M, R, K) complex, rows
+    following ``m_vals`` (quadrature ``weights`` applied per ring).
+
+    Differentiable both ways: the VJP is the synthesis of the
+    ``fac_m``-normalised, weight-scaled Delta cotangent.
+    """
+    dt = jnp.dtype(dtype)
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    maps = jnp.asarray(maps).astype(dt)
+    fac = _fac_rows(m, dt)
+
+    def fwd(res, mp):
+        (phi0_,) = res
+        return _uniform_anal_core(mp, phi0_, m, n, dtype)
+
+    def bwd(res, cts):
+        (phi0_,) = res
+        g_re, g_im = cts
+        return _uniform_synth_body(g_re / fac, g_im / fac, phi0_, None,
+                                   m, n, dtype).astype(dt)
+
+    a_re, a_im = linear_pair(fwd, bwd, (phi0,), maps)
+    w = jnp.asarray(weights).astype(dt)
+    return (a_re + 1j * a_im).astype(cdt) * w[None, :, None]
 
 
 # ---------------------------------------------------------------------------
@@ -162,18 +238,14 @@ def bucket_bin_maps(m_vals, n_phi, bucket_len):
     return pos.astype(np.int32), neg.astype(np.int32)
 
 
-def bucket_synth(delta, layout: BucketLayout, pos, neg, n_phi, phi0, m_vals,
-                 *, out_width: int, dtype, scale_rows=None) -> jnp.ndarray:
-    """Synthesis phase stage on a ragged grid, one batched FFT per bucket.
-
-    delta: (M, R, K) complex -> maps (R, out_width, K) real, padded with
-    zeros beyond each ring's n_phi.  ``pos``/``neg`` are the (M, R) bin
-    maps from :func:`bucket_bin_maps`; ``n_phi``/``phi0`` may be traced
-    shard-local operands (dist) or numpy constants (serial).
-    """
+def _bucket_synth_body(d_re, d_im, pos, neg, n_phi, phi0, scale_rows, m,
+                       layout, out_width, dtype):
+    """Bucket synthesis body.  ``neg`` may be None: the conjugate-half bin
+    map is then derived per bucket as ``(B - pos) % B`` (the adjoint path
+    of the analysis direction only carries ``pos``)."""
     cdt = _complex_dtype(dtype)
-    m = np.asarray(m_vals)
-    dp = delta.astype(cdt) * phase_factors(m, phi0, +1.0, dtype)[..., None]
+    delta = (d_re + 1j * d_im).astype(cdt)
+    dp = delta * phase_factors(m, phi0, +1.0, dtype)[..., None]
     M, R, K = dp.shape
     # m = 0 must not receive its own conjugate (it would double-count);
     # padding rows (m < 0) are already zeroed by the phase factor.
@@ -186,11 +258,13 @@ def bucket_synth(delta, layout: BucketLayout, pos, neg, n_phi, phi0, m_vals,
         if Rb == 0:
             continue
         dp_b = dp[:, sl, :]                         # (M, Rb, K)
+        pos_b = pos[:, sl]
+        neg_b = neg[:, sl] if neg is not None else (B - pos_b) % B
         row = np.arange(Rb, dtype=np.int32)[None, :] * B
         S = jnp.zeros((Rb * B, K), cdt)
-        S = S.at[jnp.reshape(row + pos[:, sl], (-1,))].add(
+        S = S.at[jnp.reshape(row + pos_b, (-1,))].add(
             dp_b.reshape(M * Rb, K))
-        S = S.at[jnp.reshape(row + neg[:, sl], (-1,))].add(
+        S = S.at[jnp.reshape(row + neg_b, (-1,))].add(
             jnp.where(neg_ok, jnp.conj(dp_b), 0.0).reshape(M * Rb, K))
         s = jnp.fft.ifft(S.reshape(Rb, B, K), axis=1) * B
         # the length-B inverse FFT repeats each ring's n samples B/n times;
@@ -205,16 +279,9 @@ def bucket_synth(delta, layout: BucketLayout, pos, neg, n_phi, phi0, m_vals,
     return out
 
 
-def bucket_anal(maps, layout: BucketLayout, pos, n_phi, phi0, weights,
-                m_vals, *, dtype) -> jnp.ndarray:
-    """Analysis phase stage on a ragged grid, one batched FFT per bucket.
-
-    maps: (R, W, K) real (padded) -> weighted Delta^S (M, R, K) complex.
-    Samples at or beyond each ring's n_phi are masked before the FFT, so
-    garbage in the padding region cannot alias into the result.
-    """
+def _bucket_anal_core(maps, pos, n_phi, phi0, m, layout, dtype):
+    """Weight-free bucket analysis core: maps (R, W, K) -> (A_re, A_im)."""
     cdt = _complex_dtype(dtype)
-    m = np.asarray(m_vals)
     M = m.shape[0]
     R, W, K = maps.shape
     maps = maps.astype(dtype)
@@ -233,9 +300,79 @@ def bucket_anal(maps, layout: BucketLayout, pos, n_phi, phi0, weights,
         Fm = jnp.take_along_axis(F, idx[..., None], axis=1)    # (Rb, M, K)
         delta = delta.at[:, jnp.asarray(sl), :].set(
             jnp.moveaxis(Fm, 1, 0).astype(cdt))
-    w = jnp.asarray(weights).astype(dtype)
-    return delta * phase_factors(m, phi0, -1.0, dtype)[..., None] \
-        * w[None, :, None]
+    A = delta * phase_factors(m, phi0, -1.0, dtype)[..., None]
+    return jnp.real(A).astype(dtype), jnp.imag(A).astype(dtype)
+
+
+def bucket_synth(delta, layout: BucketLayout, pos, neg, n_phi, phi0, m_vals,
+                 *, out_width: int, dtype, scale_rows=None) -> jnp.ndarray:
+    """Synthesis phase stage on a ragged grid, one batched FFT per bucket.
+
+    delta: (M, R, K) complex -> maps (R, out_width, K) real, padded with
+    zeros beyond each ring's n_phi.  ``pos``/``neg`` are the (M, R) bin
+    maps from :func:`bucket_bin_maps`; ``n_phi``/``phi0`` may be traced
+    shard-local operands (dist) or numpy constants (serial).
+
+    Differentiable both ways: the VJP is ``fac_m`` times the weight-free
+    bucket analysis of the map cotangent (exact under the divisor
+    embedding: the folded length-B gather equals the length-n DFT).
+    """
+    dt = jnp.dtype(dtype)
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    delta = jnp.asarray(delta).astype(cdt)
+    fac = _fac_rows(m, dt)
+
+    def fwd(res, ops):
+        pos_, neg_, nn_, phi0_, sr = res
+        dr, di = ops
+        return _bucket_synth_body(dr, di, pos_, neg_, nn_, phi0_, sr, m,
+                                  layout, out_width, dtype)
+
+    def bwd(res, t):
+        pos_, neg_, nn_, phi0_, sr = res
+        if sr is not None:
+            t = t * sr[:, None, None]
+        a_re, a_im = _bucket_anal_core(t, pos_, nn_, phi0_, m, layout, dtype)
+        return (fac * a_re).astype(dt), (fac * a_im).astype(dt)
+
+    return linear_pair(fwd, bwd, (pos, neg, n_phi, phi0, scale_rows),
+                       (jnp.real(delta), jnp.imag(delta)))
+
+
+def bucket_anal(maps, layout: BucketLayout, pos, n_phi, phi0, weights,
+                m_vals, *, dtype) -> jnp.ndarray:
+    """Analysis phase stage on a ragged grid, one batched FFT per bucket.
+
+    maps: (R, W, K) real (padded) -> weighted Delta^S (M, R, K) complex.
+    Samples at or beyond each ring's n_phi are masked before the FFT, so
+    garbage in the padding region cannot alias into the result.
+
+    Differentiable both ways: the VJP is the bucket synthesis of the
+    ``fac_m``-normalised, weight-scaled Delta cotangent (the conjugate-half
+    bin map is rebuilt as ``(B - pos) % B`` per bucket).
+    """
+    dt = jnp.dtype(dtype)
+    cdt = _complex_dtype(dtype)
+    m = np.asarray(m_vals)
+    maps = jnp.asarray(maps).astype(dt)
+    W = maps.shape[1]
+    fac = _fac_rows(m, dt)
+
+    def fwd(res, mp):
+        pos_, nn_, phi0_ = res
+        return _bucket_anal_core(mp, pos_, nn_, phi0_, m, layout, dtype)
+
+    def bwd(res, cts):
+        pos_, nn_, phi0_ = res
+        g_re, g_im = cts
+        return _bucket_synth_body(g_re / fac, g_im / fac, pos_, None, nn_,
+                                  phi0_, None, m, layout, W,
+                                  dtype).astype(dt)
+
+    a_re, a_im = linear_pair(fwd, bwd, (pos, n_phi, phi0), maps)
+    w = jnp.asarray(weights).astype(dt)
+    return (a_re + 1j * a_im).astype(cdt) * w[None, :, None]
 
 
 # ---------------------------------------------------------------------------

@@ -44,6 +44,15 @@ Dispatch modes
                   autotune pass runs once per signature, ever.
 ``mode=<backend>`` force one backend for both directions.
 
+Differentiability
+-----------------
+``Plan.alm2map`` and ``Plan.map2alm`` carry adjoint-based custom JVP/VJP
+rules on every backend (spin 0 and 2, plain and packed layouts, ragged
+bucket FFTs, shard_map dist): the synthesis VJP is the weighted analysis
+and vice versa, so ``jax.grad`` never traces kernel internals.  See
+``Plan.grad_ready``, ``describe()["differentiable"]`` and
+docs/architecture.md ("Differentiation via adjoints").
+
 Precompute caching
 ------------------
 Grid geometry (Gauss-Legendre Newton iteration), ``pmm``/``pms`` recurrence
@@ -82,10 +91,19 @@ BACKENDS = ("jnp", "pallas_vpu", "pallas_mxu", "dist")
 _PLANS: dict[str, "Plan"] = {}
 
 
-def clear_plan_cache() -> None:
-    """Drop memoised plans AND the in-memory precompute tier (test hook)."""
+def clear_plan_cache(*, disk: bool = False,
+                     directory: Optional[str] = None) -> None:
+    """Drop memoised plans AND the in-memory precompute tier (test hook).
+
+    ``disk=True`` additionally removes the persistent tier under
+    ``directory`` (default: ``$REPRO_CACHE_DIR`` / the cache default) --
+    without it a clear left stale ``.npz``/``.json`` entries behind that a
+    later ``cache="disk"`` plan would silently resurrect.
+    """
     _PLANS.clear()
     plancache.clear_memory()
+    if disk:
+        plancache.clear_disk(directory)
 
 
 def _pallas_ops():
@@ -624,6 +642,20 @@ class Plan:
             alm = alm + self._anal_fn(self.backends["anal"])(resid)
         return alm
 
+    @property
+    def grad_ready(self) -> dict:
+        """Per-direction differentiability of the chosen execution paths.
+
+        ``{"synth": bool, "anal": bool}`` -- True when that direction's
+        backend carries the adjoint-based custom JVP/VJP rules, i.e.
+        ``jax.grad``/``jax.jvp`` flow through :meth:`alm2map` /
+        :meth:`map2alm` without tracing kernel internals.  Every built-in
+        backend (jnp, pallas_vpu, pallas_mxu, dist) qualifies; the rules
+        are first-order (no reverse-over-reverse).
+        """
+        return {d: self.backends.get(d) in BACKENDS
+                for d in ("synth", "anal")}
+
     def memory_footprint(self) -> dict:
         """Estimated working-set bytes per buffer class."""
         g = self.grid
@@ -664,6 +696,9 @@ class Plan:
             },
             "mode": self.mode,
             "backends": dict(self.backends),
+            "differentiable": {**self.grad_ready,
+                               "rule": "adjoint (custom_jvp + linear_call)",
+                               "higher_order": False},
             "layouts": layouts,
             "candidates": list(self.candidates),
             "skipped": dict(self.skipped),
@@ -747,11 +782,12 @@ def _resolve_grid(grid, l_max, nside, cache_kind, cache_dir):
         return grid, {"grid_cos": grid.cos_theta, "grid_nphi": grid.n_phi,
                       "grid_w": grid.weights, "grid_name": grid.name}
     kind = str(grid)
-    # Key each family only on the fields its geometry depends on: GL on
+    # Key each family only on the fields its geometry depends on: GL/ECP on
     # l_max, healpix on nside.  Keying on the irrelevant one would fragment
     # the cache (and the plan memoisation) for identical grids.
-    spec = {"grid_kind": kind, "grid_l_max": l_max if kind == "gl" else None,
-            "grid_nside": None if kind == "gl" else nside}
+    by_lmax = kind in ("gl", "ecp")
+    spec = {"grid_kind": kind, "grid_l_max": l_max if by_lmax else None,
+            "grid_nside": None if by_lmax else nside}
     key = plancache.signature_key("geometry", **spec)
 
     def build():
@@ -780,7 +816,7 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
 
     Parameters
     ----------
-    grid : ``"gl"`` | ``"healpix_ring"`` | ``"healpix"`` | RingGrid
+    grid : ``"gl"`` | ``"ecp"`` | ``"healpix_ring"`` | ``"healpix"`` | RingGrid
         Grid spec (cached geometry) or a prebuilt grid instance.
     l_max, m_max : band limits (``m_max`` defaults to ``l_max``).
     nside : HEALPix resolution (required for healpix-family string specs).
@@ -805,8 +841,8 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     identical signature returns the same object and reuses every cached
     precompute payload.
     """
-    if isinstance(grid, str) and grid in ("gl",) and l_max is None:
-        raise ValueError("make_plan('gl', ...) requires l_max")
+    if isinstance(grid, str) and grid in ("gl", "ecp") and l_max is None:
+        raise ValueError(f"make_plan({grid!r}, ...) requires l_max")
     if mode not in ("auto", "model") + BACKENDS:
         raise ValueError(f"unknown mode {mode!r}: expected 'auto', 'model' "
                          f"or a backend name {BACKENDS}")

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.autodiff import linear_pair
 from repro.kernels import legendre_pallas as lk
 from repro.kernels import pack as kpack
 from repro.kernels import ref as kref
@@ -250,30 +251,25 @@ def _anal_packed(dw, lo, x, pmm, pms, *, l_max, fold, var, spin, lp_size,
     return _unpack_alm(out, lo)
 
 
-def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
-          mp_vals=None, lp_size=128, interpret=None, layout=None):
-    """Kernel-backed synthesis with automatic padding.
+def _resolve_layout(m_vals, layout, mp_vals, l_max, lp_size):
+    """Trace-time packed-vs-plain resolution: the packed layout object (or
+    None for the plain rectangular grid)."""
+    if pick_layout(m_vals, layout, mp_vals) != "packed":
+        return None
+    return kpack.build_layout(_concrete_rows(m_vals), l_max, lp_size=lp_size,
+                              mp_vals=_concrete_rows(mp_vals))
 
-    a: (Mp, L1, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
-    ``mp_vals`` (Mp,) switches rows to the spin-weighted (Wigner m')
-    recurrence -- seeds must then come from ref.prepare_seeds_spin.
-    ``layout`` selects the packed triangular m-pair grid vs the plain
-    rectangular one (see :func:`pick_layout`).
-    Returns (Mp, P, R, 2K) f32 matching ref.synth_ref.
-    """
-    if interpret is None:
-        interpret = should_interpret()
+
+def _synth_exec(a, m_vals, x, pmm, pms, mp_vals, *, l_max, fold, var, lo,
+                lp_size, interpret):
+    """Synthesis body with the layout/variant decision already made
+    (``lo`` is the packed layout or None for plain)."""
     Mp, L1, K2 = a.shape
     R = x.shape[0]
-    var = pick_variant(K2, variant)
-    if pick_layout(m_vals, layout, mp_vals) == "packed":
-        lo = kpack.build_layout(_concrete_rows(m_vals), l_max,
-                                lp_size=lp_size,
-                                mp_vals=_concrete_rows(mp_vals))
-        if lo is not None:
-            return _synth_packed(a, lo, x, pmm, pms, l_max=l_max, fold=fold,
-                                 var=var, spin=mp_vals is not None,
-                                 lp_size=lp_size, interpret=interpret)
+    if lo is not None:
+        return _synth_packed(a, lo, x, pmm, pms, l_max=l_max, fold=fold,
+                             var=var, spin=mp_vals is not None,
+                             lp_size=lp_size, interpret=interpret)
     L1p = _pad_to(L1, lp_size)
     Rp = _pad_to(R, 1024 if var == "vpu" else 128)
     a_p = jnp.pad(a, ((0, 0), (0, L1p - L1), (0, 0)))
@@ -298,27 +294,15 @@ def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
     return out[:, :, :R, :]
 
 
-def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
-         variant=None, mp_vals=None, lp_size=128, interpret=None,
-         layout=None):
-    """Kernel-backed analysis with automatic padding.
-
-    dw: (Mp, P, R, 2K) f32;  returns (Mp, L1, 2K) f32 (L1 = l_max+1).
-    ``mp_vals`` / ``layout`` as in :func:`synth`.
-    """
-    if interpret is None:
-        interpret = should_interpret()
+def _anal_exec(dw, m_vals, x, pmm, pms, mp_vals, *, l_max, l1p, fold, var,
+               lo, lp_size, interpret):
+    """Analysis body with the layout/variant decision already made."""
     Mp, n_par, R, K2 = dw.shape
-    var = pick_variant(K2, variant)
     L1 = l_max + 1
-    if pick_layout(m_vals, layout, mp_vals) == "packed":
-        lo = kpack.build_layout(_concrete_rows(m_vals), l_max,
-                                lp_size=lp_size,
-                                mp_vals=_concrete_rows(mp_vals))
-        if lo is not None:
-            return _anal_packed(dw, lo, x, pmm, pms, l_max=l_max, fold=fold,
-                                var=var, spin=mp_vals is not None,
-                                lp_size=lp_size, interpret=interpret)
+    if lo is not None:
+        return _anal_packed(dw, lo, x, pmm, pms, l_max=l_max, fold=fold,
+                            var=var, spin=mp_vals is not None,
+                            lp_size=lp_size, interpret=interpret)
     L1p = _pad_to(L1 if l1p is None else l1p, lp_size)
     Rp = _pad_to(R, 1024 if var == "vpu" else 128)
     dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
@@ -340,6 +324,76 @@ def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
                           fold=fold, mp_vals=mp_vals, lp_size=lp_size,
                           interpret=interpret)
     return out[:, :L1, :]
+
+
+def synth(a, m_vals, x, pmm, pms, *, l_max, fold=False, variant=None,
+          mp_vals=None, lp_size=128, interpret=None, layout=None):
+    """Kernel-backed synthesis with automatic padding.
+
+    a: (Mp, L1, 2K) f32;  x: (R,) f32;  pmm/pms: (Mp, R).
+    ``mp_vals`` (Mp,) switches rows to the spin-weighted (Wigner m')
+    recurrence -- seeds must then come from ref.prepare_seeds_spin.
+    ``layout`` selects the packed triangular m-pair grid vs the plain
+    rectangular one (see :func:`pick_layout`).
+    Returns (Mp, P, R, 2K) f32 matching ref.synth_ref.
+
+    Differentiable both ways (when ``L1 == l_max + 1``, which every plan
+    layout satisfies): Pallas kernels are opaque to JAX AD, so the VJP is
+    the adjoint transform -- the *analysis* kernel with the same seeds,
+    variant and packed schedule (synthesis and analysis panels are exact
+    transposes of each other; no quadrature weights live at this layer).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    Mp, L1, K2 = a.shape
+    var = pick_variant(K2, variant)
+    lo = _resolve_layout(m_vals, layout, mp_vals, l_max, lp_size)
+    kw = dict(l_max=l_max, fold=fold, var=var, lo=lo, lp_size=lp_size,
+              interpret=interpret)
+    if L1 != l_max + 1:     # non-plan layout: no adjoint contract, run raw
+        return _synth_exec(a, m_vals, x, pmm, pms, mp_vals, **kw)
+
+    def fwd(res, a_):
+        m_, x_, pmm_, pms_, mp_ = res
+        return _synth_exec(a_, m_, x_, pmm_, pms_, mp_, **kw)
+
+    def bwd(res, g):
+        m_, x_, pmm_, pms_, mp_ = res
+        return _anal_exec(g, m_, x_, pmm_, pms_, mp_, l1p=None, **kw)
+
+    return linear_pair(fwd, bwd, (m_vals, x, pmm, pms, mp_vals), a)
+
+
+def anal(dw, m_vals, x, pmm, pms, *, l_max, l1p=None, fold=False,
+         variant=None, mp_vals=None, lp_size=128, interpret=None,
+         layout=None):
+    """Kernel-backed analysis with automatic padding.
+
+    dw: (Mp, P, R, 2K) f32;  returns (Mp, L1, 2K) f32 (L1 = l_max+1).
+    ``mp_vals`` / ``layout`` as in :func:`synth`.
+
+    Differentiable both ways: the VJP is the *synthesis* kernel with the
+    same seeds, variant and packed schedule (see :func:`synth`).
+    """
+    if interpret is None:
+        interpret = should_interpret()
+    Mp, n_par, R, K2 = dw.shape
+    var = pick_variant(K2, variant)
+    lo = _resolve_layout(m_vals, layout, mp_vals, l_max, lp_size)
+    kw = dict(l_max=l_max, fold=fold, var=var, lo=lo, lp_size=lp_size,
+              interpret=interpret)
+    if n_par != (2 if fold else 1):  # non-plan panel count: run raw
+        return _anal_exec(dw, m_vals, x, pmm, pms, mp_vals, l1p=l1p, **kw)
+
+    def fwd(res, dw_):
+        m_, x_, pmm_, pms_, mp_ = res
+        return _anal_exec(dw_, m_, x_, pmm_, pms_, mp_, l1p=l1p, **kw)
+
+    def bwd(res, g):
+        m_, x_, pmm_, pms_, mp_ = res
+        return _synth_exec(g, m_, x_, pmm_, pms_, mp_, **kw)
+
+    return linear_pair(fwd, bwd, (m_vals, x, pmm, pms, mp_vals), dw)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,15 @@ boundary step exactly there.
 The layout is pure host-side numpy (static under jit): per-slot
 scalar-prefetch maps for the kernels plus gather index maps for the
 layout conversions in `kernels.ops`.
+
+One layout serves both transform directions AND their adjoints: the
+packed synthesis and packed analysis kernels consume the identical
+``slot_m``/``slot_mp``/``slot_seed`` schedule and compute the same
+per-slot lambda streams, which makes them exact mutual transposes.  The
+custom VJP rules in `kernels.ops` rely on this -- the gradient of a
+packed synthesis is the packed analysis with the *same* layout object
+(and vice versa), so the backward pass inherits the packed grid's
+occupancy win with no transpose-only kernels.
 """
 
 from __future__ import annotations

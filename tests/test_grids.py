@@ -15,6 +15,7 @@ def test_gl_nodes_match_numpy():
 
 @pytest.mark.parametrize("kind,kw", [
     ("gl", dict(l_max=32)),
+    ("ecp", dict(l_max=32)),
     ("healpix_ring", dict(nside=8)),
     ("healpix", dict(nside=8)),
 ])
@@ -40,6 +41,31 @@ def test_healpix_ring_uniform_matches_latitudes():
     assert np.allclose(hp.cos_theta, hpr.cos_theta)
     # per-ring areas identical
     assert np.allclose(hp.ring_areas(), hpr.ring_areas())
+
+
+def test_ecp_band_areas_exact():
+    """ECP per-ring weights are exact latitude-band areas (sum to 4 pi
+    exactly) and the grid is uniform + equator-symmetric (fold-eligible)."""
+    g = grids.make_grid("ecp", l_max=16)
+    assert g.uniform and g.equator_symmetric
+    assert g.n_rings == 2 * 17 and g.max_n_phi == 34
+    np.testing.assert_allclose(g.weights @ g.n_phi, 4 * np.pi, rtol=1e-14)
+    # band areas: 2 pi (cos edge_i - cos edge_{i+1})
+    edge = np.cos(np.arange(g.n_rings + 1) * np.pi / g.n_rings)
+    np.testing.assert_allclose(g.ring_areas(),
+                               2 * np.pi * (edge[:-1] - edge[1:]))
+
+
+def test_ecp_plan_roundtrip_with_refinement():
+    """ECP quadrature is approximate; one Jacobi pass pushes the
+    round-trip error down like on HEALPix."""
+    from repro.core import sht, spectra
+    plan = repro.make_plan("ecp", l_max=12, dtype="float64", mode="jnp")
+    alm = sht.random_alm(seed=0, l_max=12, m_max=12)
+    maps = plan.alm2map(alm)
+    e0 = spectra.d_err(alm, plan.map2alm(maps))
+    e1 = spectra.d_err(alm, plan.map2alm(maps, iters=2))
+    assert e1 < e0 and e1 < 5e-3, (e0, e1)
 
 
 def test_gl_quadrature_exactness():

@@ -68,6 +68,72 @@ def test_disk_cache_skips_recompute(tmp_path):
     assert p2.cache_events.get("decision") == "hit"
 
 
+def test_clear_plan_cache_disk_tier(tmp_path):
+    """clear_plan_cache(disk=True) removes the persistent entries too.
+
+    Regression: a bare clear_plan_cache() left stale .npz/.json entries
+    under the cache dir, so a later cache="disk" plan silently resurrected
+    payloads the caller believed cleared.
+    """
+    import os
+    d = str(tmp_path)
+    repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32", mode="auto",
+                    cache="disk", cache_dir=d)
+    entries = [f for f in os.listdir(d) if f.endswith((".npz", ".json"))]
+    assert entries, "disk tier should have been populated"
+    # default clear keeps the disk tier (documented behaviour) ...
+    transform.clear_plan_cache()
+    assert [f for f in os.listdir(d) if f.endswith((".npz", ".json"))]
+    # ... disk=True wipes it: a rebuild must not see a single disk hit
+    transform.clear_plan_cache(disk=True, directory=d)
+    assert not [f for f in os.listdir(d) if f.endswith((".npz", ".json"))]
+    plancache.reset_stats()
+    repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32", mode="auto",
+                    cache="disk", cache_dir=d)
+    assert plancache.stats().disk_hits == 0
+    assert plancache.stats().builds > 0
+    # foreign files are never touched
+    alien = os.path.join(d, "keep.me")
+    with open(alien, "w") as f:
+        f.write("not a cache entry")
+    transform.clear_plan_cache(disk=True, directory=d)
+    assert os.path.exists(alien)
+
+
+def test_disk_cache_keys_distinguish_layout_and_spin(tmp_path):
+    """Signature keys must not collide across spin / layout variants.
+
+    A spin-2 plan's seed tables have different shapes than the scalar
+    ones; a key collision would resurrect the wrong payload from disk and
+    crash (or worse, silently corrupt) the kernel stage.
+    """
+    d = str(tmp_path)
+    p0 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32",
+                         mode="pallas_vpu", cache="disk", cache_dir=d)
+    p2 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32",
+                         mode="pallas_vpu", spin=2, cache="disk", cache_dir=d)
+    s0 = p0._seeds()
+    s2 = p2._seeds_spin()
+    assert p0.cache_events["seeds"] != p2.cache_events["seeds_spin"]
+    # fold changes the seed table layout -> its own key
+    pf = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32",
+                         mode="pallas_vpu", fold=True, cache="disk",
+                         cache_dir=d)
+    sf = pf._seeds()
+    assert pf.cache_events["seeds"] != p0.cache_events["seeds"]
+    assert sf[0].shape != s0[0].shape
+    # cold reload from disk returns the right payload for each signature
+    transform.clear_plan_cache()
+    q0 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32",
+                         mode="pallas_vpu", cache="disk", cache_dir=d)
+    q2 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32",
+                         mode="pallas_vpu", spin=2, cache="disk", cache_dir=d)
+    np.testing.assert_array_equal(np.asarray(q0._seeds()[0]),
+                                  np.asarray(s0[0]))
+    np.testing.assert_array_equal(np.asarray(q2._seeds_spin()[0]),
+                                  np.asarray(s2[0]))
+
+
 def test_geometry_payload_roundtrip(tmp_path):
     """A disk-cached GL grid is bit-identical to a fresh one."""
     d = str(tmp_path)
