@@ -1,0 +1,105 @@
+"""Sustained-load SHT serving benchmark: throughput and tail latency.
+
+Drives `repro.serve.ShtEngine` with a mixed-signature request stream
+(GL spin-0, GL spin-2, HEALPix spin-0), signatures pre-warmed so the
+measurement is the steady serving state, not compile time.  Emits the
+serving perf-trajectory rows validated by scripts/check.sh:
+
+  serve/throughput/<mix>  -- mean us per request end-to-end (derived req/s
+                             + coalescing factor)
+  serve/p99/<mix>         -- p99 total request latency us (derived p50/p95)
+  serve/coalesce/<mix>    -- mean K maps per device batch (derived
+                             occupancy + plan-pool hit rate)
+  serve/derr/<mix>        -- max |coalesced - independent Plan call| over
+                             sampled requests (must stay at f64 precision:
+                             coalescing is a pure batching transformation)
+
+``REPRO_BENCH_SMOKE=1``: small sizes, few requests (the CI gate).
+"""
+
+import os
+import time
+
+import numpy as np
+
+import repro
+from repro.core import sht
+from repro.serve import ShtEngine
+from benchmarks.common import emit
+
+
+def _cfg():
+    # n_requests is a multiple of 3*max_k so every signature's queue drains
+    # in full-K buckets -- the prewarmed plans -- and the latency rows
+    # measure steady serving, not an in-stream remainder-bucket compile
+    if os.environ.get("REPRO_BENCH_SMOKE"):
+        return dict(l_max=16, nside=4, n_requests=24, max_k=4)
+    return dict(l_max=48, nside=8, n_requests=120, max_k=8)
+
+
+def main():
+    cfg = _cfg()
+    l_max, nside = cfg["l_max"], cfg["nside"]
+    n, max_k = cfg["n_requests"], cfg["max_k"]
+    label = f"mixed-lmax{l_max}-{n}req"
+
+    eng = ShtEngine(max_k=max_k, max_queue=4 * n, mode="jnp")
+    eng.prewarm(grid="gl", l_max=l_max, dtype="float64")
+    eng.prewarm(grid="gl", l_max=l_max, dtype="float64", spin=2)
+    eng.prewarm(grid="healpix", nside=nside, dtype="float64")
+
+    # pre-generate the request stream (payload build must not pollute the
+    # serving measurement) + the independent-plan references for a sample
+    hp = repro.make_plan("healpix", nside=nside, K=1, dtype="float64",
+                         mode="jnp")
+    stream, refs = [], {}
+    for rid in range(n):
+        kind = rid % 3
+        if kind == 0:
+            alm = np.asarray(sht.random_alm(seed=rid, l_max=l_max,
+                                            m_max=l_max))[..., 0]
+            stream.append(dict(direction="alm2map", payload=alm, grid="gl",
+                               l_max=l_max))
+        elif kind == 1:
+            alm = np.asarray(sht.random_alm_spin(seed=rid, l_max=l_max,
+                                                 m_max=l_max))[..., 0]
+            stream.append(dict(direction="alm2map", payload=alm, grid="gl",
+                               l_max=l_max, spin=2))
+        else:
+            alm = np.asarray(sht.random_alm(seed=rid, l_max=hp.l_max,
+                                            m_max=hp.m_max))[..., 0]
+            stream.append(dict(direction="alm2map", payload=alm,
+                               grid="healpix", nside=nside))
+        if rid < 3:                       # one reference per signature kind
+            plan = repro.make_plan(
+                stream[-1]["grid"], stream[-1].get("l_max"),
+                nside=stream[-1].get("nside"), K=1, dtype="float64",
+                mode="jnp", spin=stream[-1].get("spin", 0))
+            refs[rid] = np.asarray(plan.alm2map(alm[..., None]))[..., 0]
+
+    t0 = time.perf_counter()
+    futs = [eng.submit(**req) for req in stream]
+    eng.drain()
+    wall = time.perf_counter() - t0
+
+    done = eng.stats()
+    assert done["requests"]["completed"] == n, done["requests"]
+    worst = max(float(np.max(np.abs(futs[rid].result() - ref)))
+                for rid, ref in refs.items())
+    assert worst < 1e-12, f"coalesced serving diverged: {worst}"
+
+    lat, co, pool = (done["latency"]["total"], done["coalescing"],
+                     done["pool"])
+    emit(f"serve/throughput/{label}", wall / n * 1e6,
+         f"{done['throughput_rps']:.1f} req/s coalesce "
+         f"x{co['requests_per_batch']:.2f}")
+    emit(f"serve/p99/{label}", lat["p99_s"] * 1e6,
+         f"p50={lat['p50_s'] * 1e6:.0f}us p95={lat['p95_s'] * 1e6:.0f}us")
+    emit(f"serve/coalesce/{label}", co["k_per_batch"],
+         f"occupancy {co['k_occupancy']:.2f} pool_hit_rate "
+         f"{pool['hit_rate']:.2f}")
+    emit(f"serve/derr/{label}", 0.0, f"{worst:.2e}")
+
+
+if __name__ == "__main__":
+    main()

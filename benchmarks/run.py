@@ -68,12 +68,13 @@ def main(argv=None) -> None:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
     from benchmarks import (bench_accuracy, bench_recurrence,
                             bench_scaling_model, bench_fft, bench_speedup,
-                            bench_breakdown, bench_dispatch, bench_spin)
+                            bench_breakdown, bench_dispatch, bench_spin,
+                            bench_serve)
     print("name,us_per_call,derived")
     errors = {}
     for mod in (bench_accuracy, bench_recurrence, bench_scaling_model,
                 bench_fft, bench_speedup, bench_breakdown, bench_dispatch,
-                bench_spin):
+                bench_spin, bench_serve):
         try:
             mod.main()
         except Exception as e:  # keep the harness going

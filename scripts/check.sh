@@ -80,6 +80,11 @@ assert rel < 1e-2, f"pallas gradcheck regressed: rel={rel}"
 print(f"pallas_vpu gradcheck OK (rel={rel:.2e})")
 PY
 
+echo "== serving smoke (K-coalesced engine, mixed-signature traffic) =="
+# the example asserts every coalesced result matches an independent Plan
+# call to <1e-12, so a serving-layer regression fails here loudly
+PYTHONPATH=src python examples/serve_sht.py --smoke
+
 echo "== spin benchmark (one-rep smoke) =="
 # standalone (also part of benchmarks.run below) so a spin-bench
 # regression fails the gate loudly -- run.py swallows per-module errors
@@ -105,6 +110,14 @@ assert not d.get("errors"), f"benchmark modules errored: {d['errors']}"
 ratio = rows.get("recurrence/panels_ratio/lmax512")
 assert ratio is not None, "packed-panel accounting row missing"
 assert ratio >= 1.5, f"packed grid no longer >=1.5x smaller: {ratio}"
+# serving trajectory: throughput + tail-latency rows must keep landing
+for prefix in ("serve/throughput/", "serve/p99/"):
+    hits = [k for k in rows if k.startswith(prefix)]
+    assert hits, f"serving benchmark row missing (prefix {prefix})"
+serve_err = next(v for k, v in d.get("derived", {}).items()
+                 if k.startswith("serve/derr/"))
+assert float(serve_err) < 1e-12, \
+    f"serving coalescing diverged from independent plans: {serve_err}"
 for key in ("git_rev", "jax_version", "generated_utc"):
     assert d.get(key), f"missing {key} in {path}"
 print(f"bench JSON OK: {len(rows)} rows, panels_ratio(lmax512)="

@@ -37,7 +37,7 @@ import numpy as np
 __all__ = [
     "CACHE_VERSION", "signature_key", "get_or_build", "cache_dir",
     "load_decision", "save_decision", "clear_memory", "clear_disk",
-    "stats", "reset_stats",
+    "stats", "reset_stats", "LRU",
 ]
 
 #: Bump when the payload layout of any cached builder changes; old disk
@@ -62,6 +62,60 @@ class CacheStats:
 
 
 _STATS = CacheStats()
+
+
+class LRU:
+    """Tiny bounded least-recently-used mapping.
+
+    The unbounded signature caches above are right for precompute payloads
+    (small, shared); live ``Plan`` objects are not -- each one owns seed
+    tables and compiled executables -- so holders of *bounded* plan sets
+    (the serving engine's warm pool) evict through this.  ``on_evict`` is
+    called with ``(key, value)`` after removal so the holder can release
+    external references (e.g. ``transform.drop_plan``).
+    """
+
+    def __init__(self, capacity: int, on_evict=None):
+        assert capacity >= 1, capacity
+        self.capacity = int(capacity)
+        self._on_evict = on_evict
+        self._data: dict = {}          # insertion-ordered; end = most recent
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data
+
+    def keys(self):
+        return list(self._data)
+
+    def get(self, key, default=None):
+        """Fetch and mark ``key`` most-recently-used."""
+        if key not in self._data:
+            return default
+        value = self._data.pop(key)
+        self._data[key] = value
+        return value
+
+    def put(self, key, value) -> None:
+        """Insert/refresh ``key``, evicting the LRU entry when full."""
+        if key in self._data:
+            self._data.pop(key)
+        self._data[key] = value
+        while len(self._data) > self.capacity:
+            old_key = next(iter(self._data))
+            old_val = self._data.pop(old_key)
+            self.evictions += 1
+            if self._on_evict is not None:
+                self._on_evict(old_key, old_val)
+
+    def pop(self, key, default=None):
+        return self._data.pop(key, default)
+
+    def clear(self) -> None:
+        self._data.clear()
 
 
 def stats() -> CacheStats:

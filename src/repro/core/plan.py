@@ -34,18 +34,18 @@ import numpy as np
 from repro.core import legendre
 from repro.core.grids import BucketLayout, RingGrid
 
-__all__ = ["SHTPlan", "minmax_m_order", "Plan", "make_plan"]
+__all__ = ["SHTPlan", "minmax_m_order", "Plan", "make_plan", "drop_plan"]
 
 
 def __getattr__(name):
     """Lazy aliases for the unified transform-plan API.
 
-    ``repro.core.plan.Plan`` / ``make_plan`` live in
+    ``repro.core.plan.Plan`` / ``make_plan`` / ``drop_plan`` live in
     ``repro.core.transform`` (which imports jax); resolving them lazily
     keeps this module pure host-side geometry, importable under
     ``jax.eval_shape`` dry-runs with no device state.
     """
-    if name in ("Plan", "make_plan"):
+    if name in ("Plan", "make_plan", "drop_plan"):
         from repro.core import transform
         return getattr(transform, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

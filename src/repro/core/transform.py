@@ -81,7 +81,7 @@ from repro.core.sht import SHT, alm_mask, random_alm, random_alm_spin
 from repro.roofline import analysis as roofline
 
 __all__ = ["Plan", "make_plan", "available_backends", "backend_eligibility",
-           "clear_plan_cache"]
+           "clear_plan_cache", "drop_plan"]
 
 BACKENDS = ("jnp", "pallas_vpu", "pallas_mxu", "dist")
 
@@ -104,6 +104,19 @@ def clear_plan_cache(*, disk: bool = False,
     plancache.clear_memory()
     if disk:
         plancache.clear_disk(directory)
+
+
+def drop_plan(plan: "Plan") -> bool:
+    """Remove one memoised plan so it can be garbage-collected.
+
+    ``clear_plan_cache`` is all-or-nothing; bounded plan holders (the
+    serving engine's LRU pool, `repro.serve.PlanPool`) evict a single
+    signature through this.  The shared precompute payloads (geometry,
+    seed tables) stay cached -- only the live Plan object (compiled
+    executables, device seed arrays) is released.  Returns True when the
+    plan was actually memoised.
+    """
+    return _PLANS.pop(plan._signature_key, None) is not None
 
 
 def _pallas_ops():
@@ -641,6 +654,25 @@ class Plan:
             resid = maps - self.alm2map(alm)
             alm = alm + self._anal_fn(self.backends["anal"])(resid)
         return alm
+
+    def warmup(self, directions=("synth", "anal")) -> "Plan":
+        """Compile and execute each direction once on zero inputs.
+
+        The serving pool's warm-up hook: after ``warmup()`` the first real
+        request through this plan pays no trace/compile latency.  Blocks
+        until the device work is done; safe to call from a background
+        thread (the executables land in ``self._compiled``).
+        """
+        cdt = _complex_dtype(self.dtype)
+        for d in directions:
+            if d == "synth":
+                out = self._synth_fn(self.backends["synth"])(
+                    jnp.zeros(self._alm_shape, cdt))
+            else:
+                out = self._anal_fn(self.backends["anal"])(
+                    jnp.zeros(self._maps_shape, jnp.dtype(self.dtype)))
+            jax.block_until_ready(out)
+        return self
 
     @property
     def grad_ready(self) -> dict:

@@ -1,46 +1,53 @@
-"""Serving CLI: batched greedy decoding behind the static-slot engine.
+"""Serving CLI: the SHT request-coalescing engine under synthetic load.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke
+    PYTHONPATH=src python -m repro.launch.serve --requests 8 --smoke
+
+Runs the background serving thread, submits a mixed spin-0/spin-2 request
+stream, waits for every future, and prints the stats table (p50/p95/p99
+latency, coalescing factor, plan-pool hit rate).
 """
 
 import argparse
 
-import jax
 import numpy as np
 
 import repro  # noqa: F401
-from repro.configs import registry
-from repro.configs.base import reduced
-from repro.launch.mesh import make_production_mesh
-from repro.models.model import make_bundle
-from repro.serve.serve_loop import Request, ServeEngine
+from repro.core import sht
+from repro.serve import ShtEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--max-len", type=int, default=512)
+    ap.add_argument("--lmax", type=int, default=32)
+    ap.add_argument("--max-k", type=int, default=4)
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--mode", default="jnp",
+                    help="plan dispatch mode for pooled plans "
+                         "(jnp | auto | model | pallas_*)")
     ap.add_argument("--smoke", action="store_true")
     a = ap.parse_args()
+    if a.smoke:
+        a.lmax = min(a.lmax, 16)
 
-    cfg = registry.get(a.arch)
-    if a.smoke or jax.device_count() == 1:
-        cfg = reduced(cfg, n_layers=2)
-        mesh = None
-    else:
-        mesh = make_production_mesh()
-    bundle = make_bundle(cfg, mesh)
-    params = bundle.init(jax.random.PRNGKey(0))
-    eng = ServeEngine(bundle, batch=a.batch, max_len=a.max_len)
-    rng = np.random.default_rng(0)
-    for rid in range(a.requests):
-        eng.submit(Request(rid=rid,
-                           prompt=rng.integers(0, cfg.vocab, 5)
-                           .astype(np.int32), max_new=8))
-    done = eng.run(params, max_steps=300)
-    print(f"completed {sum(r.done for r in done)}/{a.requests} requests")
+    eng = ShtEngine(max_k=a.max_k, mode=a.mode, warm_after=2)
+    with eng:                                    # background serving thread
+        futs = []
+        for rid in range(a.requests):
+            if rid % 2 == 0:
+                alm = np.asarray(sht.random_alm(
+                    seed=rid, l_max=a.lmax, m_max=a.lmax))[..., 0]
+                futs.append(eng.submit(direction="alm2map", payload=alm,
+                                       grid="gl", l_max=a.lmax))
+            else:
+                alm = np.asarray(sht.random_alm_spin(
+                    seed=rid, l_max=a.lmax, m_max=a.lmax))[..., 0]
+                futs.append(eng.submit(direction="alm2map", payload=alm,
+                                       grid="gl", l_max=a.lmax, spin=2))
+        results = [f.result(timeout=600) for f in futs]
+    assert all(np.isfinite(r).all() for r in results)
+    print(eng.report())
+    done = eng.stats()["requests"]["completed"]
+    print(f"completed {done}/{a.requests} requests")
 
 
 if __name__ == "__main__":

@@ -1,2 +1,25 @@
-# Serving substrate: KV/state caches live in repro.models; this package
-# provides the batched prefill/decode loop drivers.
+"""SHT serving layer: coalesce concurrent transform requests into the K
+channel axis over a warm pool of plans.
+
+    from repro.serve import ShtEngine
+    eng = ShtEngine(max_k=8, mode="jnp")
+    fut = eng.submit(direction="alm2map", payload=alm, grid="gl", l_max=64)
+    eng.drain()                       # or: with eng: ... (background thread)
+    maps = fut.result()
+    print(eng.report())               # p50/p95/p99, coalescing, pool hits
+
+See docs/architecture.md ("Serving layer").
+"""
+
+from repro.serve.metrics import LatencyWindow, percentile  # noqa: F401
+from repro.serve.pool import PlanPool, PlanSig  # noqa: F401
+from repro.serve.serve_loop import (  # noqa: F401
+    BackpressureError, InvalidStateError, ShtEngine, ShtFuture, ShtRequest,
+    ShtTimeoutError,
+)
+
+__all__ = [
+    "ShtEngine", "ShtRequest", "ShtFuture", "PlanPool", "PlanSig",
+    "BackpressureError", "ShtTimeoutError", "InvalidStateError",
+    "LatencyWindow", "percentile",
+]

@@ -1,94 +1,703 @@
-"""Batched serving loop: continuous prefill+decode over a request queue.
+"""SHT serving engine: coalesce concurrent transform requests into the K
+channel axis.
 
-Single-program batched serving (static batch slotting): requests occupy
-batch slots; each engine step decodes one token for every active slot.
-Finished slots (EOS or max_len) are refilled from the queue with a prefill.
-This is the standard static-batching TPU serving shape; the decode step is
-the unit the decode_32k / long_500k dry-run cells lower.
+The batched transform is the throughput lever (the MXU contraction wants a
+fat K axis; ``speedup/batched-K4`` in BENCH_*.json), but production traffic
+arrives as independent single-map requests of mixed signatures.  This
+engine closes that gap:
+
+* requests are grouped by **plan signature** ``(grid, l_max/nside, m_max,
+  spin, dtype)`` plus ``(direction, iters)`` -- only transforms that can
+  share one device call are mixed;
+* within a group, queued requests are **stacked along the K channel axis**
+  up to ``max_k`` maps per micro-batch, zero-padded to a power-of-two K
+  bucket so every device step has a dense, pre-compiled shape;
+* execution goes through a **warm pool** of plans (`repro.serve.PlanPool`,
+  a bounded LRU over ``make_plan`` with compile warm-up), so a recurring
+  signature never re-traces;
+* each request resolves an :class:`ShtFuture` carrying per-request
+  queue/compute/total timing; ``engine.stats()`` aggregates latency
+  percentiles (p50/p95/p99), coalescing factor, and plan-pool hit rate.
+
+Fault containment: the queue is bounded (`submit` raises
+:class:`BackpressureError` instead of growing without bound), a request
+whose signature cannot build a plan -- or whose payload does not match its
+claimed signature -- fails *its own* future only, and a per-request
+``timeout`` evicts stale work at batch-formation time so one wedged
+client cannot stall the loop.
+
+Batches preserve FIFO order: within a signature strictly (the coalescer
+never reorders a group's deque), and across signatures by oldest waiting
+request.  Results are per-channel identical to independent per-request
+``Plan`` calls -- the K axis is a pure batch axis in every backend
+(asserted to 1e-12/f64 by tests/test_serve.py and bench_serve).
+
+The engine runs in two modes: pump it synchronously (``step()`` /
+``drain()``, deterministic -- what the tests use) or start the background
+serving thread (``with engine: ...`` or ``start()``/``stop()``).
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional
+import threading
+import time
+from collections import deque
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Request", "ServeEngine"]
+from repro.serve.metrics import LatencyWindow
+from repro.serve.pool import PlanPool, PlanSig
+
+__all__ = ["ShtEngine", "ShtRequest", "ShtFuture", "BackpressureError",
+           "ShtTimeoutError", "InvalidStateError"]
+
+
+class BackpressureError(RuntimeError):
+    """submit() refused: the bounded request queue is full."""
+
+
+class ShtTimeoutError(TimeoutError):
+    """The request exceeded its timeout while queued and was evicted."""
+
+
+class InvalidStateError(RuntimeError):
+    """A future was resolved twice (engine invariant violation)."""
+
+
+class ShtFuture:
+    """Write-once result handle for one submitted transform request.
+
+    ``result(timeout)`` blocks until the engine resolves it (re-raising
+    the failure, if any); ``timing`` carries the per-request latency split
+    (``queue_s`` / ``compute_s`` / ``total_s``) once done.
+    """
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self.timing: dict = {}
+        self._event = threading.Event()
+        self._value = None
+        self._exc: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not resolved "
+                               f"within {timeout}s")
+        if self._exc is not None:
+            raise self._exc
+        return self._value
+
+    def exception(self, timeout: Optional[float] = None):
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"request {self.rid} not resolved "
+                               f"within {timeout}s")
+        return self._exc
+
+    # -- engine side (write-once) -------------------------------------------
+
+    def _check_unresolved(self) -> None:
+        if self._event.is_set():
+            raise InvalidStateError(f"future {self.rid} already resolved")
+
+    def _resolve(self, value) -> None:
+        self._check_unresolved()
+        self._value = value
+        self._event.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._check_unresolved()
+        self._exc = exc
+        self._event.set()
 
 
 @dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray            # (S,) int32
-    max_new: int = 32
-    out_tokens: list = dataclasses.field(default_factory=list)
-    done: bool = False
+class ShtRequest:
+    """One transform request: a payload plus the plan signature it claims.
+
+    ``payload`` shapes (K axis optional -- a trailing channel axis is
+    accepted and split back out; without it the result is unbatched):
+
+    ==========  ======  ===============================
+    direction   spin    payload
+    ==========  ======  ===============================
+    alm2map     0       ``(M, L[, K])`` complex
+    alm2map     2       ``(2, M, L[, K])`` complex  (E, B)
+    map2alm     0       ``(R, n_phi[, K])`` real
+    map2alm     2       ``(2, R, n_phi[, K])`` real (Q, U)
+    ==========  ======  ===============================
+    """
+
+    direction: str                    # "alm2map" | "map2alm"
+    payload: np.ndarray
+    grid: str = "gl"
+    l_max: Optional[int] = None
+    nside: Optional[int] = None
+    m_max: Optional[int] = None
+    spin: int = 0
+    dtype: str = "float64"
+    iters: int = 0                    # map2alm Jacobi refinement passes
+    timeout: Optional[float] = None   # seconds in queue before eviction
+    tag: Optional[str] = None         # caller-side label (not interpreted)
+
+    def signature(self) -> PlanSig:
+        return PlanSig(grid=self.grid, l_max=self.l_max, nside=self.nside,
+                       m_max=self.m_max, spin=self.spin, dtype=self.dtype)
 
 
-class ServeEngine:
-    """Greedy decoding engine over a fixed batch of slots."""
+@dataclasses.dataclass
+class _Pending:
+    """Queue entry: a validated request plus its engine bookkeeping."""
 
-    def __init__(self, bundle, batch: int, max_len: int, eos_id: int = 1):
-        self.bundle = bundle
-        self.batch = batch
-        self.max_len = max_len
-        self.eos_id = eos_id
-        self.caches = bundle.init_caches(batch, max_len)
-        self._decode = jax.jit(bundle.decode_fn)
-        self._queue: List[Request] = []
-        self._slots: List[Optional[Request]] = [None] * batch
-        self.pos = 0
+    request: ShtRequest
+    future: ShtFuture
+    seq: int
+    payload: np.ndarray               # K axis always explicit
+    k: int
+    squeeze: bool                     # drop the K axis from the result
+    t_submit: float
+    deadline: Optional[float]
 
-    def submit(self, req: Request):
-        self._queue.append(req)
 
-    def _prefill_slot(self, slot: int, req: Request):
-        """Prefill a single request by replaying its prompt through decode
-        steps (slot-local prefill keeps the static-batch engine simple; the
-        bulk prefill path is exercised by prefill_32k)."""
-        for t in req.prompt[:-1]:
-            tok = jnp.zeros((self.batch, 1), jnp.int32).at[slot, 0].set(int(t))
-            _, self.caches = self._decode(self.bundle_params, tok,
-                                          jnp.int32(self.pos), self.caches)
-            self.pos += 1
-        req._last = int(req.prompt[-1])
+def _normalize_payload(req: ShtRequest) -> tuple[np.ndarray, int, bool]:
+    """Coerce the payload to an explicit trailing-K layout; returns
+    ``(array, K, squeeze)``.  Raises ValueError on malformed requests --
+    the cheap checks run at submit() so obviously-bad requests never
+    occupy queue slots."""
+    if req.direction not in ("alm2map", "map2alm"):
+        raise ValueError(f"unknown direction {req.direction!r}")
+    if req.spin not in (0, 2):
+        raise ValueError(f"unsupported spin {req.spin!r}")
+    if req.dtype not in ("float64", "float32"):
+        raise ValueError(f"unsupported dtype {req.dtype!r}")
+    if not isinstance(req.grid, str):
+        raise ValueError("serving requests take string grid specs "
+                         f"(got {type(req.grid).__name__})")
+    if req.iters < 0:
+        raise ValueError(f"iters must be >= 0 (got {req.iters})")
+    arr = np.asarray(req.payload)
+    base_ndim = 2 + (1 if req.spin else 0)
+    if arr.ndim == base_ndim:
+        arr, k, squeeze = arr[..., None], 1, True
+    elif arr.ndim == base_ndim + 1:
+        k, squeeze = int(arr.shape[-1]), False
+        if k < 1:
+            raise ValueError(f"empty K axis in payload shape {arr.shape}")
+    else:
+        raise ValueError(
+            f"payload ndim {arr.ndim} does not match a spin-{req.spin} "
+            f"{req.direction} request (expected {base_ndim} or "
+            f"{base_ndim + 1} dims)")
+    want_complex = req.direction == "alm2map"
+    if want_complex != np.iscomplexobj(arr):
+        kind = "complex alm" if want_complex else "real maps"
+        raise ValueError(f"{req.direction} payload must be {kind} "
+                         f"(got dtype {arr.dtype})")
+    return arr, k, squeeze
 
-    def run(self, params, max_steps: int = 64):
-        """Serve until queue drained or max_steps decode steps."""
-        self.bundle_params = params
-        # fill slots
-        for i in range(self.batch):
-            if self._queue and self._slots[i] is None:
-                self._slots[i] = self._queue.pop(0)
-                self._prefill_slot(i, self._slots[i])
-        for _ in range(max_steps):
-            live = [r for r in self._slots if r is not None and not r.done]
-            if not live:
-                break
-            tok = np.zeros((self.batch, 1), np.int32)
-            for i, r in enumerate(self._slots):
-                if r is not None and not r.done:
-                    tok[i, 0] = getattr(r, "_last", 0)
-            logits, self.caches = self._decode(
-                self.bundle_params, jnp.asarray(tok), jnp.int32(self.pos),
-                self.caches)
-            self.pos += 1
-            nxt = np.asarray(jnp.argmax(logits, axis=-1))
-            for i, r in enumerate(self._slots):
-                if r is None or r.done:
-                    continue
-                t = int(nxt[i])
-                r.out_tokens.append(t)
-                r._last = t
-                if t == self.eos_id or len(r.out_tokens) >= r.max_new \
-                        or self.pos >= self.max_len - 1:
-                    r.done = True
-                    if self._queue:  # refill the slot
-                        self._slots[i] = self._queue.pop(0)
-                        self._prefill_slot(i, self._slots[i])
-                    else:
-                        self._slots[i] = r  # keep for collection
-        return [r for r in self._slots if r is not None]
+
+class ShtEngine:
+    """Many-map SHT serving engine (see module docstring).
+
+    Parameters
+    ----------
+    max_k : maximum maps coalesced into one device micro-batch (the K
+        channel width plans are built for).
+    max_queue : bounded pending-request count; ``submit`` raises
+        :class:`BackpressureError` beyond it.
+    pool_capacity : live plans kept warm (LRU; evictions release the plan
+        through ``transform.drop_plan``).
+    mode / cache / cache_dir : forwarded to ``make_plan`` for every pooled
+        plan (``mode="jnp"`` gives deterministic f64 serving; ``"auto"``
+        autotunes per signature, decision cached).
+    default_timeout : per-request queue timeout (seconds) used when a
+        request does not set its own; None = never evict.
+    warm_after : after a signature has been submitted this many times,
+        pre-compile its full-width plan in a background thread so the
+        steady state never re-traces.  None disables auto warm-up.
+    """
+
+    def __init__(self, *, max_k: int = 8, max_queue: int = 128,
+                 pool_capacity: int = 8, mode: str = "auto",
+                 cache: str = "auto", cache_dir: Optional[str] = None,
+                 default_timeout: Optional[float] = None,
+                 warm_after: Optional[int] = None,
+                 latency_window: int = 4096):
+        assert max_k >= 1 and max_queue >= 1
+        self.max_k = int(max_k)
+        self.max_queue = int(max_queue)
+        self.default_timeout = default_timeout
+        self.warm_after = warm_after
+        self.pool = PlanPool(pool_capacity, mode=mode, cache=cache,
+                             cache_dir=cache_dir)
+
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._groups: dict = {}             # group key -> deque[_Pending]
+        self._seq = 0
+        self._closed = False
+        self._thread: Optional[threading.Thread] = None
+        self._stop = False
+
+        # -- observability ----------------------------------------------------
+        self._lat_queue = LatencyWindow(latency_window)
+        self._lat_compute = LatencyWindow(latency_window)
+        self._lat_total = LatencyWindow(latency_window)
+        self.batch_log: list[dict] = []     # bounded, most recent first out
+        self._batch_log_cap = latency_window
+        self._n_submitted = 0
+        self._n_completed = 0
+        self._n_failed = 0
+        self._n_timed_out = 0
+        self._n_batches = 0
+        self._sum_batch_requests = 0
+        self._sum_batch_k = 0
+        self._sum_batch_k_plan = 0
+        self._sig_counts: dict[PlanSig, int] = {}
+        self._warm_started: set[PlanSig] = set()
+        self._warm_threads: list[threading.Thread] = []
+        self._t_first_submit: Optional[float] = None
+        self._t_last_done: Optional[float] = None
+
+    # -- submission -----------------------------------------------------------
+
+    def _k_bucket(self, k: int) -> int:
+        """Smallest power-of-two channel width >= k, capped at max_k --
+        the set of K shapes plans are ever compiled for."""
+        b = 1
+        while b < min(k, self.max_k):
+            b *= 2
+        return min(b, self.max_k)
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return sum(len(q) for q in self._groups.values())
+
+    def submit(self, request: Optional[ShtRequest] = None,
+               **kw) -> ShtFuture:
+        """Enqueue one transform request; returns its :class:`ShtFuture`.
+
+        Pass a prebuilt :class:`ShtRequest` or its fields as keywords
+        (``engine.submit(direction="alm2map", payload=alm, grid="gl",
+        l_max=64)``).  Raises ValueError on malformed requests and
+        :class:`BackpressureError` when the queue is full.
+        """
+        if request is None:
+            request = ShtRequest(**kw)
+        elif kw:
+            raise TypeError("pass either a request object or keywords")
+        payload, k, squeeze = _normalize_payload(request)
+        if k > self.max_k:
+            raise ValueError(
+                f"request K={k} exceeds the engine's max_k={self.max_k}; "
+                "split the batch or build a wider engine")
+        timeout = request.timeout if request.timeout is not None \
+            else self.default_timeout
+        now = time.perf_counter()
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("engine is closed")
+            n_pending = sum(len(q) for q in self._groups.values())
+            if n_pending >= self.max_queue:
+                raise BackpressureError(
+                    f"queue full ({n_pending}/{self.max_queue} pending); "
+                    "drain or raise max_queue")
+            fut = ShtFuture(rid=self._seq)
+            p = _Pending(request=request, future=fut, seq=self._seq,
+                         payload=payload, k=k, squeeze=squeeze,
+                         t_submit=now,
+                         deadline=None if timeout is None else now + timeout)
+            self._seq += 1
+            self._n_submitted += 1
+            if self._t_first_submit is None:
+                self._t_first_submit = now
+            gkey = (request.signature(), request.direction, request.iters)
+            self._groups.setdefault(gkey, deque()).append(p)
+            sig = gkey[0]
+            self._sig_counts[sig] = self._sig_counts.get(sig, 0) + 1
+            warm = (self.warm_after is not None
+                    and self._sig_counts[sig] == self.warm_after
+                    and sig not in self._warm_started)
+            if warm:
+                self._warm_started.add(sig)
+            self._work.notify_all()
+        if warm:
+            self._spawn_warm(sig, self.max_k)
+        return fut
+
+    def _spawn_warm(self, sig: PlanSig, k: int) -> threading.Thread:
+        t = threading.Thread(target=self._warm_quietly, args=(sig, k),
+                             name=f"sht-warm-{sig.label()}", daemon=True)
+        with self._lock:
+            self._warm_threads.append(t)
+        t.start()
+        return t
+
+    def _join_warmups(self) -> None:
+        """Wait out in-flight background warm-ups (a compile racing
+        interpreter shutdown aborts the process)."""
+        with self._lock:
+            threads, self._warm_threads = self._warm_threads, []
+        for t in threads:
+            t.join()
+
+    def _warm_quietly(self, sig: PlanSig, k: int) -> None:
+        try:
+            self.pool.warm(sig, self._k_bucket(k))
+        except Exception:
+            pass  # a bad signature fails loudly on its own batch instead
+
+    def prewarm(self, *, k: Optional[int] = None, background: bool = False,
+                **sig_fields):
+        """Warm the pool for a signature before traffic arrives.
+
+        ``sig_fields`` are :class:`PlanSig` fields (grid, l_max, nside,
+        m_max, spin, dtype); ``k`` defaults to the engine's full ``max_k``
+        width.  ``background=True`` returns the started thread instead of
+        blocking."""
+        sig = PlanSig(**sig_fields)
+        k_plan = self._k_bucket(k if k is not None else self.max_k)
+        if background:
+            return self._spawn_warm(sig, k_plan)
+        return self.pool.warm(sig, k_plan)
+
+    # -- the serving loop ------------------------------------------------------
+
+    def _evict_expired_locked(self, now: float) -> list[_Pending]:
+        out = []
+        for gkey, q in self._groups.items():
+            if not any(p.deadline is not None and p.deadline < now
+                       for p in q):
+                continue
+            keep: deque = deque()
+            for p in q:
+                if p.deadline is not None and p.deadline < now:
+                    out.append(p)
+                else:
+                    keep.append(p)
+            self._groups[gkey] = keep
+        return out
+
+    def _pop_batch_locked(self):
+        """FIFO batch formation: the group whose head waited longest wins;
+        its requests are taken in order while they fit in max_k (never
+        skipping over one that does not -- order is part of the contract).
+        """
+        live = {g: q for g, q in self._groups.items() if q}
+        if not live:
+            return None, []
+        gkey = min(live, key=lambda g: live[g][0].seq)
+        q = live[gkey]
+        batch, k_sum = [], 0
+        while q and k_sum + q[0].k <= self.max_k:
+            p = q.popleft()
+            batch.append(p)
+            k_sum += p.k
+        return gkey, batch
+
+    def step(self) -> int:
+        """Process one coalesced micro-batch (plus any timeout evictions).
+
+        Returns the number of requests retired (resolved, failed or
+        evicted); 0 means the queue was empty.
+        """
+        now = time.perf_counter()
+        with self._lock:
+            expired = self._evict_expired_locked(now)
+            gkey, batch = self._pop_batch_locked()
+        n = 0
+        for p in expired:
+            waited = now - p.t_submit
+            self._retire(p, exc=ShtTimeoutError(
+                f"request {p.future.rid} evicted after {waited:.3f}s in "
+                f"queue (timeout)"), kind="timeout",
+                timing={"queue_s": waited, "compute_s": 0.0,
+                        "total_s": waited})
+            n += 1
+        if batch:
+            n += self._execute(gkey, batch)
+        return n
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every pending request is retired.
+
+        Synchronous mode pumps ``step()`` inline; with the background
+        thread running it just waits.  Raises TimeoutError if the queue is
+        not empty by ``timeout`` seconds.
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        while self.pending:
+            if deadline is not None and time.perf_counter() > deadline:
+                raise TimeoutError(f"drain: {self.pending} request(s) "
+                                   f"still pending after {timeout}s")
+            if self._thread is None:
+                self.step()
+            else:
+                time.sleep(0.002)
+        self._join_warmups()
+
+    # -- execution ------------------------------------------------------------
+
+    def _retire(self, p: _Pending, *, result=None, exc=None, kind: str,
+                timing: Optional[dict] = None) -> None:
+        p.future.timing = dict(timing or {})
+        if exc is not None:
+            p.future._fail(exc)
+        else:
+            p.future._resolve(result)
+        with self._lock:
+            if kind == "ok":
+                self._n_completed += 1
+            elif kind == "timeout":
+                self._n_timed_out += 1
+            else:
+                self._n_failed += 1
+            t = timing or {}
+            if "queue_s" in t:
+                self._lat_queue.record(t["queue_s"])
+            if kind == "ok":
+                self._lat_compute.record(t.get("compute_s", 0.0))
+                self._lat_total.record(t.get("total_s", 0.0))
+            self._t_last_done = time.perf_counter()
+
+    def _log_batch(self, sig: PlanSig, direction: str, batch, k_total: int,
+                   k_plan: int, ok: bool) -> None:
+        with self._lock:
+            self._n_batches += 1
+            self._sum_batch_requests += len(batch)
+            self._sum_batch_k += k_total
+            self._sum_batch_k_plan += k_plan
+            self.batch_log.append({
+                "signature": sig.label(), "direction": direction,
+                "rids": [p.future.rid for p in batch],
+                "n_requests": len(batch), "k_total": k_total,
+                "k_plan": k_plan, "ok": ok,
+            })
+            if len(self.batch_log) > self._batch_log_cap:
+                del self.batch_log[: len(self.batch_log)
+                                   - self._batch_log_cap]
+
+    def _execute(self, gkey, batch: list[_Pending]) -> int:
+        import jax
+        import jax.numpy as jnp
+
+        sig, direction, iters = gkey
+        t_start = time.perf_counter()
+        k_claim = sum(p.k for p in batch)
+        k_plan = self._k_bucket(k_claim)
+
+        def fail_all(ps, exc):
+            for p in ps:
+                waited = t_start - p.t_submit
+                self._retire(p, exc=exc, kind="failed",
+                             timing={"queue_s": waited})
+
+        try:
+            plan = self.pool.get(sig, k_plan)
+        except Exception as e:
+            fail_all(batch, e)
+            self._log_batch(sig, direction, batch, k_claim, k_plan, ok=False)
+            return len(batch)
+
+        # per-request shape validation against the *resolved* plan: a
+        # payload that lied about its signature fails alone, not its batch
+        base = (plan._alm_shape if direction == "alm2map"
+                else plan._maps_shape)[:-1]
+        good, k_total = [], 0
+        for p in batch:
+            if p.payload.shape[:-1] != base:
+                self._retire(p, exc=ValueError(
+                    f"payload shape {p.payload.shape} does not match plan "
+                    f"{sig.label()} (expected {base} + (K,))"),
+                    kind="failed",
+                    timing={"queue_s": t_start - p.t_submit})
+            else:
+                good.append(p)
+                k_total += p.k
+        if not good:
+            self._log_batch(sig, direction, batch, 0, k_plan, ok=False)
+            return len(batch)
+
+        cdtype = np.complex128 if sig.dtype == "float64" else np.complex64
+        rdtype = np.dtype(sig.dtype)
+        want = cdtype if direction == "alm2map" else rdtype
+        parts = [np.ascontiguousarray(p.payload, dtype=want) for p in good]
+        if k_total < plan.K:                       # dense K bucket: zero-pad
+            parts.append(np.zeros(base + (plan.K - k_total,), dtype=want))
+        stacked = np.concatenate(parts, axis=-1)
+
+        try:
+            if direction == "alm2map":
+                out = plan.alm2map(jnp.asarray(stacked))
+            else:
+                out = plan.map2alm(jnp.asarray(stacked), iters=iters)
+            jax.block_until_ready(out)
+        except Exception as e:
+            fail_all(good, e)
+            self._log_batch(sig, direction, batch, k_total, k_plan, ok=False)
+            return len(batch)
+        t_done = time.perf_counter()
+        compute_s = t_done - t_start
+
+        out = np.asarray(out)
+        off = 0
+        for p in good:
+            res = out[..., off:off + p.k]
+            off += p.k
+            if p.squeeze:
+                res = res[..., 0]
+            self._retire(p, result=res, kind="ok", timing={
+                "queue_s": t_start - p.t_submit,
+                "compute_s": compute_s,
+                "total_s": t_done - p.t_submit,
+                "k_plan": k_plan,
+                "coalesced_with": len(good) - 1,
+            })
+        self._log_batch(sig, direction, good, k_total, k_plan, ok=True)
+        return len(batch)
+
+    # -- background serving ----------------------------------------------------
+
+    def start(self) -> "ShtEngine":
+        """Start the background serving thread (idempotent)."""
+        with self._lock:
+            if self._thread is not None:
+                return self
+            self._stop = False
+            self._thread = threading.Thread(target=self._loop,
+                                            name="sht-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+            if self.step() == 0:
+                with self._work:
+                    if self._stop:
+                        return
+                    self._work.wait(timeout=0.01)
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the background thread; ``drain=True`` (default) retires
+        the remaining queue synchronously first."""
+        t = self._thread
+        if t is not None:
+            with self._work:
+                self._stop = True
+                self._work.notify_all()
+            t.join()
+            self._thread = None
+        if drain:
+            while self.pending:
+                self.step()
+        self._join_warmups()
+
+    def close(self) -> None:
+        """Stop serving and refuse further submissions; pending requests
+        fail with RuntimeError."""
+        self.stop(drain=False)
+        with self._lock:
+            self._closed = True
+            leftovers = [p for q in self._groups.values() for p in q]
+            self._groups.clear()
+        for p in leftovers:
+            self._retire(p, exc=RuntimeError("engine closed"), kind="failed",
+                         timing={})
+
+    def __enter__(self) -> "ShtEngine":
+        return self.start()
+
+    def __exit__(self, *exc_info) -> None:
+        self.stop(drain=True)
+
+    # -- observability ---------------------------------------------------------
+
+    def stats(self) -> dict:
+        """Structured serving metrics: request counters, latency
+        percentiles (seconds), coalescing factors, plan-pool counters and
+        sustained throughput."""
+        with self._lock:
+            n_pending = sum(len(q) for q in self._groups.values())
+            nb = self._n_batches
+            elapsed = None
+            if self._t_first_submit is not None \
+                    and self._t_last_done is not None:
+                elapsed = self._t_last_done - self._t_first_submit
+            return {
+                "requests": {
+                    "submitted": self._n_submitted,
+                    "completed": self._n_completed,
+                    "failed": self._n_failed,
+                    "timed_out": self._n_timed_out,
+                    "pending": n_pending,
+                },
+                "latency": {
+                    "queue": self._lat_queue.summary(),
+                    "compute": self._lat_compute.summary(),
+                    "total": self._lat_total.summary(),
+                },
+                "coalescing": {
+                    "batches": nb,
+                    "requests_per_batch":
+                        (self._sum_batch_requests / nb) if nb
+                        else float("nan"),
+                    "k_per_batch":
+                        (self._sum_batch_k / nb) if nb else float("nan"),
+                    "k_occupancy":
+                        (self._sum_batch_k / self._sum_batch_k_plan)
+                        if self._sum_batch_k_plan else float("nan"),
+                },
+                "pool": self.pool.stats(),
+                "signatures": {s.label(): c
+                               for s, c in self._sig_counts.items()},
+                "throughput_rps":
+                    (self._n_completed / elapsed)
+                    if elapsed and elapsed > 0 else float("nan"),
+            }
+
+    def report(self) -> str:
+        """Human-readable ``stats()`` (the serving analogue of
+        ``Plan.report()``)."""
+        s = self.stats()
+        r, lat, co, pool = (s["requests"], s["latency"], s["coalescing"],
+                            s["pool"])
+
+        def ms(x):
+            return f"{x * 1e3:.2f}ms" if np.isfinite(x) else "n/a"
+
+        lines = [
+            f"ShtEngine max_k={self.max_k} queue={r['pending']}/"
+            f"{self.max_queue} pool={pool['size']}/{pool['capacity']} "
+            f"(hit_rate {pool['hit_rate']:.2f})"
+            if np.isfinite(pool["hit_rate"]) else
+            f"ShtEngine max_k={self.max_k} queue={r['pending']}/"
+            f"{self.max_queue} pool={pool['size']}/{pool['capacity']}",
+            f"  requests: {r['completed']} done / {r['failed']} failed / "
+            f"{r['timed_out']} timed out "
+            f"(throughput {s['throughput_rps']:.1f} req/s)"
+            if np.isfinite(s["throughput_rps"]) else
+            f"  requests: {r['completed']} done / {r['failed']} failed / "
+            f"{r['timed_out']} timed out",
+            f"  latency total p50={ms(lat['total']['p50_s'])} "
+            f"p95={ms(lat['total']['p95_s'])} "
+            f"p99={ms(lat['total']['p99_s'])} "
+            f"(queue p50={ms(lat['queue']['p50_s'])}, "
+            f"compute p50={ms(lat['compute']['p50_s'])})",
+        ]
+        if s["coalescing"]["batches"]:
+            lines.append(
+                f"  coalescing: x{co['requests_per_batch']:.2f} req/batch, "
+                f"K {co['k_per_batch']:.2f} "
+                f"(occupancy {co['k_occupancy']:.2f}) over "
+                f"{co['batches']} batches")
+        for label, count in sorted(s["signatures"].items()):
+            lines.append(f"    {label}: {count} request(s)")
+        return "\n".join(lines)

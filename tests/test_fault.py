@@ -1,5 +1,8 @@
 """Fault tolerance: restart-from-checkpoint reproduces the uninterrupted
-run bit-for-bit; elastic restore re-places state; serve engine smoke."""
+run bit-for-bit; elastic restore re-places state; SHT serving engine
+fault containment (backpressure, poisoned signatures, timeout eviction)."""
+
+import time
 
 import jax
 import jax.numpy as jnp
@@ -95,19 +98,85 @@ def test_elastic_restore_replaces_arrays(tmp_path):
     assert back["w"].sharding == sh["w"]
 
 
-def test_serve_engine_greedy():
-    from repro.serve.serve_loop import Request, ServeEngine
-    cfg = reduced(registry.ARCHS["qwen2-0.5b"], n_layers=2)
-    b = make_bundle(cfg, mesh=None)
-    params = b.init(KEY)
-    eng = ServeEngine(b, batch=2, max_len=64, eos_id=-123)
-    rng = np.random.default_rng(0)
-    for rid in range(3):
-        eng.submit(Request(rid=rid, prompt=rng.integers(0, cfg.vocab, 4)
-                           .astype(np.int32), max_new=4))
-    done = eng.run(params, max_steps=40)
-    finished = [r for r in done if r.done]
-    assert len(finished) >= 2
-    for r in finished:
-        assert len(r.out_tokens) == 4
-        assert all(0 <= t < cfg.vocab for t in r.out_tokens)
+# -- SHT serving engine: fault containment -----------------------------------
+
+
+def _serve_alm(seed, l_max=12):
+    from repro.core import sht
+    return np.asarray(sht.random_alm(seed=seed, l_max=l_max,
+                                     m_max=l_max))[..., 0]
+
+
+def test_serve_queue_overflow_backpressure():
+    """A full queue refuses new work with a BackpressureError instead of
+    growing without bound; draining reopens it."""
+    import pytest
+    from repro.serve import BackpressureError, ShtEngine
+    eng = ShtEngine(max_k=2, max_queue=3, mode="jnp")
+    futs = [eng.submit(direction="alm2map", payload=_serve_alm(i),
+                       grid="gl", l_max=12) for i in range(3)]
+    with pytest.raises(BackpressureError):
+        eng.submit(direction="alm2map", payload=_serve_alm(9), grid="gl",
+                   l_max=12)
+    assert eng.stats()["requests"]["submitted"] == 3    # rejected != queued
+    eng.drain()
+    assert all(f.done() for f in futs)
+    late = eng.submit(direction="alm2map", payload=_serve_alm(4), grid="gl",
+                      l_max=12)                         # accepted again
+    eng.drain()
+    assert late.done() and late.exception() is None
+
+
+def test_serve_invalid_signature_fails_only_its_future():
+    """A request whose signature cannot build a plan (unknown grid) fails
+    its own future; the engine keeps serving later requests."""
+    import pytest
+    from repro.serve import ShtEngine
+    eng = ShtEngine(max_k=2, mode="jnp")
+    bad = eng.submit(direction="alm2map",
+                     payload=np.zeros((13, 13), complex),
+                     grid="klein_bottle", l_max=12)
+    good = eng.submit(direction="alm2map", payload=_serve_alm(0), grid="gl",
+                      l_max=12)
+    eng.drain()
+    assert isinstance(bad.exception(), Exception)
+    with pytest.raises(Exception):
+        bad.result()
+    assert good.exception() is None and good.result().shape == (13, 26)
+    s = eng.stats()["requests"]
+    assert s["failed"] == 1 and s["completed"] == 1
+
+
+def test_serve_mismatched_payload_does_not_poison_batch():
+    """A payload that lies about its signature fails alone -- the
+    requests coalesced with it still complete."""
+    from repro.serve import ShtEngine
+    eng = ShtEngine(max_k=4, mode="jnp")
+    liar = eng.submit(direction="alm2map",
+                      payload=np.zeros((9, 9), complex),   # l_max=8 shape...
+                      grid="gl", l_max=12)                 # ...claims 12
+    honest = eng.submit(direction="alm2map", payload=_serve_alm(1),
+                        grid="gl", l_max=12)
+    eng.drain()
+    assert isinstance(liar.exception(), ValueError)
+    assert honest.exception() is None and honest.done()
+
+
+def test_serve_timeout_evicted_later_requests_complete():
+    """An expired request is evicted with ShtTimeoutError at batch
+    formation; requests behind it still run."""
+    import pytest
+    from repro.serve import ShtEngine, ShtTimeoutError
+    eng = ShtEngine(max_k=2, mode="jnp")
+    stale = eng.submit(direction="alm2map", payload=_serve_alm(0),
+                       grid="gl", l_max=12, timeout=0.0)
+    fresh = eng.submit(direction="alm2map", payload=_serve_alm(1),
+                       grid="gl", l_max=12)
+    time.sleep(0.01)                             # let the deadline pass
+    eng.drain()
+    with pytest.raises(ShtTimeoutError):
+        stale.result()
+    assert fresh.exception() is None and fresh.done()
+    s = eng.stats()["requests"]
+    assert s["timed_out"] == 1 and s["completed"] == 1
+    assert stale.timing["queue_s"] >= 0.0

@@ -25,9 +25,9 @@ def test_train_cli_smoke(tmp_path):
 
 
 def test_serve_cli_smoke():
-    out = _run(["-m", "repro.launch.serve", "--arch", "qwen2-0.5b",
-                "--smoke", "--requests", "2", "--max-len", "64"])
-    assert "completed" in out
+    out = _run(["-m", "repro.launch.serve", "--smoke", "--requests", "4"])
+    assert "completed 4/4" in out
+    assert "coalescing" in out
 
 
 def test_quickstart_example():

@@ -1,0 +1,366 @@
+"""The SHT serving engine: K-coalescing correctness, signature grouping,
+FIFO fairness, futures, percentile math, and the warm plan pool."""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core import cache as plancache
+from repro.core import sht, spectra, transform
+from repro.serve import (InvalidStateError, PlanPool, PlanSig, ShtEngine,
+                         ShtFuture, ShtRequest, percentile)
+
+from _hypothesis_compat import given, settings, strategies as st
+
+LMAX = 16
+
+
+@pytest.fixture(autouse=True)
+def _fresh_caches():
+    transform.clear_plan_cache()
+    plancache.reset_stats()
+    yield
+    transform.clear_plan_cache()
+    plancache.reset_stats()
+
+
+def _alm(seed, l_max=LMAX, K=None, spin=0):
+    fn = sht.random_alm_spin if spin else sht.random_alm
+    a = np.asarray(fn(seed=seed, l_max=l_max, m_max=l_max, K=K or 1))
+    return a if K else a[..., 0]
+
+
+def _engine(**kw):
+    kw.setdefault("max_k", 4)
+    kw.setdefault("mode", "jnp")
+    return ShtEngine(**kw)
+
+
+# -- coalescing correctness ---------------------------------------------------
+
+
+def test_coalesced_batch_matches_independent_plan_calls():
+    """A K-stacked batch of mixed requests returns results identical to
+    per-request Plan calls (synthesis bitwise on the f64 jnp path;
+    analysis to 1e-12 -- the contraction order over K may differ)."""
+    eng = _engine(max_k=4)
+    plan = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float64",
+                           mode="jnp")
+    alms = [_alm(seed=i) for i in range(3)]
+    maps = [np.asarray(plan.alm2map(a[..., None]))[..., 0] for a in alms]
+
+    futs_s = [eng.submit(direction="alm2map", payload=a, grid="gl",
+                         l_max=LMAX) for a in alms]
+    futs_a = [eng.submit(direction="map2alm", payload=m, grid="gl",
+                         l_max=LMAX) for m in maps]
+    eng.drain()
+
+    for f, ref in zip(futs_s, maps):
+        np.testing.assert_array_equal(f.result(), ref)     # bit-identical
+    for f, a in zip(futs_a, alms):
+        ref = np.asarray(plan.map2alm(
+            np.asarray(plan.alm2map(a[..., None]))))[..., 0]
+        assert np.max(np.abs(f.result() - ref)) < 1e-12
+    # the synthesis requests actually shared one device batch
+    synth_batches = [b for b in eng.batch_log
+                     if b["direction"] == "alm2map"]
+    assert len(synth_batches) == 1
+    assert synth_batches[0]["n_requests"] == 3
+
+
+def test_coalesced_multi_k_and_spin2_requests():
+    """Requests carrying their own K axis, and spin-2 (E,B)->(Q,U) pairs,
+    coalesce and come back allclose to independent plans (f64 <= 1e-12)."""
+    eng = _engine(max_k=8)
+    a2 = _alm(seed=0, K=2)                       # (M, L, 2)
+    a1 = _alm(seed=1)                            # (M, L)
+    s2 = _alm(seed=2, spin=2)                    # (2, M, L)
+    f2 = eng.submit(direction="alm2map", payload=a2, grid="gl", l_max=LMAX)
+    f1 = eng.submit(direction="alm2map", payload=a1, grid="gl", l_max=LMAX)
+    fs = eng.submit(direction="alm2map", payload=s2, grid="gl", l_max=LMAX,
+                    spin=2)
+    eng.drain()
+
+    p2 = repro.make_plan("gl", l_max=LMAX, K=2, dtype="float64", mode="jnp")
+    p1 = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float64", mode="jnp")
+    ps = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float64", mode="jnp",
+                         spin=2)
+    assert np.max(np.abs(f2.result() - np.asarray(p2.alm2map(a2)))) < 1e-12
+    assert np.max(np.abs(f1.result()
+                         - np.asarray(p1.alm2map(a1[..., None]))[..., 0])) \
+        < 1e-12
+    assert np.max(np.abs(fs.result()
+                         - np.asarray(ps.alm2map(s2[..., None]))[..., 0])) \
+        < 1e-12
+    # scalar requests coalesced (K=2 + K=1 -> one batch); spin-2 separate
+    scalar = [b for b in eng.batch_log if "spin0" in b["signature"]]
+    assert len(scalar) == 1 and scalar[0]["k_total"] == 3
+    assert scalar[0]["k_plan"] == 4              # padded to the K bucket
+
+
+def test_no_cross_signature_mixing():
+    """Different (grid, l_max, spin, dtype) signatures never share a
+    device batch, even when submitted interleaved."""
+    eng = _engine(max_k=8)
+    for i in range(3):
+        eng.submit(direction="alm2map", payload=_alm(seed=i), grid="gl",
+                   l_max=LMAX)
+        eng.submit(direction="alm2map", payload=_alm(seed=10 + i, l_max=24),
+                   grid="gl", l_max=24)
+    eng.drain()
+    assert len(eng.batch_log) == 2
+    for b in eng.batch_log:
+        assert b["n_requests"] == 3              # each group fully coalesced
+    assert {b["signature"] for b in eng.batch_log} == \
+        {"gl/lmax16/spin0/float64", "gl/lmax24/spin0/float64"}
+
+
+def test_direction_and_iters_split_groups():
+    """alm2map vs map2alm, and differing Jacobi iters, are separate
+    groups -- they cannot share one device call."""
+    eng = _engine(max_k=8)
+    plan = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float64",
+                           mode="jnp")
+    m = np.asarray(plan.alm2map(_alm(seed=0)[..., None]))[..., 0]
+    eng.submit(direction="alm2map", payload=_alm(seed=1), grid="gl",
+               l_max=LMAX)
+    eng.submit(direction="map2alm", payload=m, grid="gl", l_max=LMAX)
+    eng.submit(direction="map2alm", payload=m, grid="gl", l_max=LMAX,
+               iters=1)
+    eng.drain()
+    assert len(eng.batch_log) == 3
+
+
+def test_fifo_within_signature():
+    """Requests of one signature retire in submission order, across
+    however many micro-batches the max_k budget forces."""
+    eng = _engine(max_k=2)
+    futs = [eng.submit(direction="alm2map", payload=_alm(seed=i), grid="gl",
+                       l_max=LMAX) for i in range(5)]
+    eng.drain()
+    rids = [rid for b in eng.batch_log for rid in b["rids"]]
+    assert rids == [f.rid for f in futs]         # strict FIFO
+    assert [b["n_requests"] for b in eng.batch_log] == [2, 2, 1]
+
+
+def test_oldest_request_picks_next_group():
+    """Across signatures the batch former serves the group whose head
+    waited longest (no starvation of a low-traffic signature)."""
+    eng = _engine(max_k=8)
+    f_old = eng.submit(direction="alm2map", payload=_alm(seed=0, l_max=24),
+                       grid="gl", l_max=24)
+    for i in range(3):
+        eng.submit(direction="alm2map", payload=_alm(seed=1 + i), grid="gl",
+                   l_max=LMAX)
+    assert eng.step() > 0
+    assert f_old.done()                          # oldest head went first
+
+
+# -- futures ------------------------------------------------------------------
+
+
+def test_futures_resolve_exactly_once():
+    eng = _engine()
+    fut = eng.submit(direction="alm2map", payload=_alm(seed=0), grid="gl",
+                     l_max=LMAX)
+    eng.drain()
+    assert fut.done()
+    r1 = fut.result()
+    assert r1 is fut.result()                    # cached, not recomputed
+    with pytest.raises(InvalidStateError):
+        fut._resolve(None)
+    with pytest.raises(InvalidStateError):
+        fut._fail(RuntimeError("x"))
+    f = ShtFuture(rid=99)
+    f._resolve(1)
+    with pytest.raises(InvalidStateError):
+        f._resolve(2)
+
+
+def test_future_timing_populated():
+    eng = _engine()
+    fut = eng.submit(direction="alm2map", payload=_alm(seed=0), grid="gl",
+                     l_max=LMAX)
+    eng.drain()
+    t = fut.timing
+    assert t["total_s"] >= t["compute_s"] >= 0
+    assert t["queue_s"] >= 0
+    assert t["k_plan"] == 1 and t["coalesced_with"] == 0
+
+
+def test_submit_validation_is_eager():
+    eng = _engine()
+    with pytest.raises(ValueError):              # bad direction
+        eng.submit(direction="sideways", payload=_alm(seed=0))
+    with pytest.raises(ValueError):              # real payload for alm2map
+        eng.submit(direction="alm2map", payload=np.zeros((17, 17)))
+    with pytest.raises(ValueError):              # complex maps payload
+        eng.submit(direction="map2alm",
+                   payload=np.zeros((17, 34), complex))
+    with pytest.raises(ValueError):              # ndim mismatch for spin
+        eng.submit(direction="alm2map", payload=_alm(seed=0), spin=2)
+    with pytest.raises(ValueError):              # K wider than the engine
+        eng.submit(direction="alm2map", payload=_alm(seed=0, K=9),
+                   grid="gl", l_max=LMAX)
+    assert eng.pending == 0                      # nothing leaked into queue
+
+
+# -- stats() ------------------------------------------------------------------
+
+
+def test_percentile_pinned_against_numpy():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 3, 10, 101):
+        xs = rng.exponential(size=n).tolist()
+        for q in (0.0, 25.0, 50.0, 90.0, 95.0, 99.0, 100.0):
+            np.testing.assert_allclose(percentile(xs, q),
+                                       np.percentile(xs, q), rtol=1e-12)
+    assert np.isnan(percentile([], 50.0))
+
+
+def test_stats_shape_and_counters():
+    eng = _engine(max_k=4)
+    for i in range(4):
+        eng.submit(direction="alm2map", payload=_alm(seed=i), grid="gl",
+                   l_max=LMAX)
+    eng.drain()
+    s = eng.stats()
+    assert s["requests"]["submitted"] == 4
+    assert s["requests"]["completed"] == 4
+    assert s["requests"]["pending"] == 0
+    assert s["coalescing"]["batches"] == 1
+    assert s["coalescing"]["k_per_batch"] == 4.0
+    assert s["coalescing"]["k_occupancy"] == 1.0
+    lat = s["latency"]["total"]
+    assert lat["count"] == 4
+    assert lat["p50_s"] <= lat["p95_s"] <= lat["p99_s"] <= lat["max_s"]
+    assert np.isfinite(s["throughput_rps"]) and s["throughput_rps"] > 0
+    r = eng.report()
+    assert "p99" in r and "coalescing" in r and "pool" in r
+
+
+def test_stats_percentiles_match_numpy_over_recorded_latencies():
+    eng = _engine(max_k=1)                       # one batch per request
+    for i in range(5):
+        eng.submit(direction="alm2map", payload=_alm(seed=i), grid="gl",
+                   l_max=LMAX)
+    eng.drain()
+    xs = eng._lat_total.samples()
+    assert len(xs) == 5
+    s = eng.stats()["latency"]["total"]
+    np.testing.assert_allclose(s["p50_s"], np.percentile(xs, 50))
+    np.testing.assert_allclose(s["p95_s"], np.percentile(xs, 95))
+    np.testing.assert_allclose(s["p99_s"], np.percentile(xs, 99))
+
+
+# -- warm plan pool -----------------------------------------------------------
+
+
+def test_pool_hits_and_warmup():
+    eng = _engine(max_k=2)
+    eng.prewarm(grid="gl", l_max=LMAX, dtype="float64")
+    assert eng.pool.stats()["warmups"] == 1
+    for i in range(4):
+        eng.submit(direction="alm2map", payload=_alm(seed=i), grid="gl",
+                   l_max=LMAX)
+    eng.drain()
+    p = eng.pool.stats()
+    # prewarm built the (sig, max_k=2) plan; both batches then hit it
+    assert p["misses"] == 1 and p["hits"] == 2
+    assert eng.stats()["pool"]["hit_rate"] == pytest.approx(2 / 3)
+
+
+def test_pool_lru_eviction_releases_plans():
+    pool = PlanPool(capacity=2, mode="jnp")
+    sigs = [PlanSig(grid="gl", l_max=8 * (i + 1), dtype="float64")
+            for i in range(3)]
+    plans = [pool.get(s, 1) for s in sigs]
+    assert pool.stats()["evictions"] == 1
+    assert len(pool) == 2
+    # the evicted plan is also gone from make_plan's memoisation...
+    key0 = plans[0]._signature_key
+    assert key0 not in transform._PLANS
+    # ...while the survivors are still memoised
+    assert plans[2]._signature_key in transform._PLANS
+    # re-requesting the evicted signature rebuilds (a miss, not a hit)
+    misses = pool.stats()["misses"]
+    pool.get(sigs[0], 1)
+    assert pool.stats()["misses"] == misses + 1
+
+
+def test_background_thread_serves():
+    eng = _engine(max_k=4)
+    with eng:
+        futs = [eng.submit(direction="alm2map", payload=_alm(seed=i),
+                           grid="gl", l_max=LMAX) for i in range(3)]
+        res = [f.result(timeout=120) for f in futs]
+    plan = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float64",
+                           mode="jnp")
+    for a, r in zip([_alm(seed=i) for i in range(3)], res):
+        ref = np.asarray(plan.alm2map(a[..., None]))[..., 0]
+        assert np.max(np.abs(r - ref)) < 1e-12
+
+
+# -- property: random interleavings never drop/duplicate/cross-wire ----------
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n_sigs=st.integers(2, 4),
+       max_k=st.integers(1, 6))
+def test_random_interleavings_roundtrip(seed, n_sigs, max_k):
+    """Random submit interleavings across 2-4 signatures with request K in
+    1..max_k: every future resolves exactly once with *its own* payload's
+    transform (seeded random_alm per request; any cross-wiring, drop or
+    duplication shows up as a wrong result or an unresolved future)."""
+    rng = np.random.default_rng(seed)
+    transform.clear_plan_cache()
+    eng = _engine(max_k=max_k, max_queue=256)
+    lmaxes = [8, 12, 16, 20][:n_sigs]
+    plans = {L: repro.make_plan("gl", l_max=L, K=1, dtype="float64",
+                                mode="jnp") for L in lmaxes}
+    jobs = []
+    for rid in range(12):
+        L = int(rng.choice(lmaxes))
+        k = int(rng.integers(1, max_k + 1))
+        alm = np.asarray(sht.random_alm(seed=1000 + rid, l_max=L, m_max=L,
+                                        K=k))
+        if rng.integers(2) == 0:
+            fut = eng.submit(direction="alm2map", payload=alm, grid="gl",
+                             l_max=L)
+            jobs.append(("alm2map", L, alm, fut))
+        else:
+            maps = np.asarray(plans[L].alm2map(alm[..., :1]))
+            fut = eng.submit(direction="map2alm", payload=maps[..., 0],
+                             grid="gl", l_max=L)
+            jobs.append(("map2alm", L, alm[..., :1], fut))
+        if rng.integers(3) == 0:                 # interleave partial drains
+            eng.step()
+    eng.drain()
+    for direction, L, alm, fut in jobs:
+        assert fut.done(), "request dropped"
+        got = fut.result()
+        if direction == "alm2map":
+            ref = np.asarray(repro.make_plan(
+                "gl", l_max=L, K=alm.shape[-1], dtype="float64",
+                mode="jnp").alm2map(alm))
+            assert np.max(np.abs(got - ref)) < 1e-12
+        else:
+            # recovery: analysing the synthesised map returns the payload
+            err = spectra.d_err(alm[..., 0], got)
+            assert err < 1e-10, err
+    s = eng.stats()["requests"]
+    assert s["completed"] == len(jobs) and s["pending"] == 0
+
+
+# -- request object API -------------------------------------------------------
+
+
+def test_submit_request_object_and_tag():
+    eng = _engine()
+    req = ShtRequest(direction="alm2map", payload=_alm(seed=0), grid="gl",
+                     l_max=LMAX, tag="mc-chain-7")
+    fut = eng.submit(req)
+    with pytest.raises(TypeError):               # object XOR keywords
+        eng.submit(req, grid="gl")
+    eng.drain()
+    assert fut.done() and req.tag == "mc-chain-7"
