@@ -10,6 +10,7 @@ Columns: name, us_per_call, derived.
 ``REPRO_BENCH_SMOKE=1`` shrinks the sweep to one small size (CI smoke).
 """
 
+import math
 import os
 import time
 
@@ -44,8 +45,15 @@ def main():
             chosen = d["backends"][direction]
             meas = d["measured_s"].get(chosen, {}).get(direction, float("nan"))
             pred = d["predicted_s"].get(chosen, {}).get(direction, float("nan"))
-            emit(f"dispatch/{direction}/lmax{l_max}-K{K}", meas * 1e6,
-                 f"{chosen} (predicted {pred * 1e6:.1f}us)")
+            if math.isfinite(meas):
+                emit(f"dispatch/{direction}/lmax{l_max}-K{K}", meas * 1e6,
+                     f"{chosen} (predicted {pred * 1e6:.1f}us)")
+            else:
+                # chardb smoke mode skips corners missing from the DB (the
+                # decision falls back to the cost model, measured_s = inf);
+                # keep the trajectory numeric with the model's value
+                emit(f"dispatch/{direction}/lmax{l_max}-K{K}", pred * 1e6,
+                     f"{chosen} (model-fallback, unmeasured corner)")
         emit(f"dispatch/make_plan-cold/lmax{l_max}-K{K}", t_cold * 1e6,
              f"warm x{t_cold / max(t_warm, 1e-9):.0f} faster")
 

@@ -23,6 +23,15 @@ Two extra row families cover the triangular m-pair packing
     pays grid latency); the derived column carries the raw counts and
     the worked-panel ratio.  The l_max=512 row is the acceptance metric
     for the packing optimisation (>= 1.5x fewer executed panels).
+
+And two for the fused Legendre+phase pipeline (kernels/fused.py):
+
+  * ``recurrence/fused_speedup/{synth,anal}/...`` -- full staged chain vs
+    the fused single-kernel pipeline, same plan, paired interleaved
+    timing (the acceptance metric: fused synth >= 1.2x);
+  * ``recurrence/bf16_err/{synth,anal}/...`` -- max relative error of the
+    bf16-MXU-contraction fused variant against its own f32 run (the
+    measured bf16 error band; gated < 1e-2 by scripts/check.sh).
 """
 
 import jax
@@ -33,7 +42,7 @@ import repro  # noqa: F401
 from repro.core import grids, legendre, sht
 from repro.kernels import ops as kops, ref as kref
 from repro.roofline import analysis as roofline
-from benchmarks.common import emit, smoke, time_call
+from benchmarks.common import emit, smoke, time_call, time_pair
 
 KEY = jax.random.PRNGKey(1)
 
@@ -79,9 +88,12 @@ def main():
         emit(f"recurrence/synth-fold/jnp-f64/lmax{l_max}/K{K}", dt * 1e6,
              f"{fl / dt / 1e9:.2f}")
 
-    # kernels (interpret mode): small sizes only; the plain rectangular
-    # grid vs the packed triangular m-pair grid, same kernel variant
-    ksizes = ((32, 1, "vpu"),) if smoke() \
+    # kernels (interpret mode): the plain rectangular grid vs the packed
+    # min-max-paired grid, same kernel variant.  Calls are JITTED (the
+    # un-jitted dispatch re-traces the kernel every call, which dominated
+    # the wall and produced meaningless ratios) and the plain/packed pair
+    # is timed interleaved (time_pair) so host drift cancels in the ratio.
+    ksizes = ((96, 1, "vpu"),) if smoke() \
         else ((96, 1, "vpu"), (96, 8, "mxu"))
     for l_max, K, var in ksizes:
         g = grids.make_grid("gl", l_max=l_max)
@@ -94,25 +106,89 @@ def main():
         x32 = jnp.asarray(g.cos_theta, jnp.float32)
         fl = _flops(l_max, g.n_rings, K)
         dw = jnp.ones((l_max + 1, 1, g.n_rings, 2 * K), jnp.float32)
-        times = {}
-        for layout in ("plain", "packed"):
-            dt = time_call(lambda: kops.synth(a32, m_vals, x32, pmm, pms,
-                                              l_max=l_max, variant=var,
-                                              layout=layout), iters=1)
-            times[("synth", layout)] = dt
-            emit(f"recurrence/synth/pallas-{var}-{layout}/lmax{l_max}/K{K}",
-                 dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
-            dt = time_call(lambda: kops.anal(dw, m_vals, x32, pmm, pms,
+
+        # m_vals MUST be a closure constant, not a jit argument: a traced
+        # m_vals can never build a static packing, so pick_layout silently
+        # falls back to the plain grid and "packed" rows time the plain
+        # kernel (the root cause of the historical packed-anal ~0.7-1.0x
+        # rows -- both sides were the same kernel plus noise).
+        def jit_synth(layout):
+            f = jax.jit(lambda a: kops.synth(a, m_vals, x32, pmm, pms,
                                              l_max=l_max, variant=var,
-                                             layout=layout), iters=1)
-            times[("anal", layout)] = dt
-            emit(f"recurrence/anal/pallas-{var}-{layout}/lmax{l_max}/K{K}",
-                 dt * 1e6, f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
+                                             layout=layout))
+            return lambda: f(a32)
+
+        def jit_anal(layout):
+            f = jax.jit(lambda d: kops.anal(d, m_vals, x32, pmm, pms,
+                                            l_max=l_max, variant=var,
+                                            layout=layout))
+            return lambda: f(dw)
+
+        # 5 paired reps + 2 warmups even in smoke mode: the packed/plain
+        # ratio is a CI gate, and 2-rep medians drift past the +-5% band
+        times = {}
+        for d, mk in (("synth", jit_synth), ("anal", jit_anal)):
+            t_plain, t_packed = time_pair(mk("plain"), mk("packed"),
+                                          warmup=2, iters=5)
+            times[(d, "plain")], times[(d, "packed")] = t_plain, t_packed
+            for layout, dt in (("plain", t_plain), ("packed", t_packed)):
+                emit(f"recurrence/{d}/pallas-{var}-{layout}/"
+                     f"lmax{l_max}/K{K}", dt * 1e6,
+                     f"{fl / dt / 1e9:.2f} (interpret-mode wall)")
         for d in ("synth", "anal"):
             ratio = times[(d, "plain")] / max(times[(d, "packed")], 1e-12)
             emit(f"recurrence/packed_speedup/{d}/pallas-{var}/"
                  f"lmax{l_max}/K{K}", ratio,
-                 "plain_wall / packed_wall (interpret mode)")
+                 "plain_wall / packed_wall (interpret mode, paired)")
+
+    # fused Legendre+phase pipeline vs the staged chain: the full jitted
+    # alm->maps / maps->alm dispatch path of the same plan, packed staged
+    # layout vs the fused single-kernel layout, timed interleaved.
+    fsizes = ((96, 8, "vpu"),) if smoke() \
+        else ((96, 8, "vpu"), (96, 8, "mxu"))
+    for l_max, K, var in fsizes:
+        plan = repro.make_plan("gl", l_max, K=K, dtype="float32",
+                               mode=f"pallas_{var}", cache="memory")
+        alm = sht.random_alm(KEY, l_max, l_max, K=K).astype(jnp.complex64)
+        maps = jnp.asarray(
+            np.random.default_rng(0).normal(
+                size=(plan.grid.n_rings, plan.grid.max_n_phi, K)),
+            jnp.float32)
+        iters = 2 if smoke() else 3
+        for d, fn_of, arg in (("synth", plan._synth_fn, alm),
+                              ("anal", plan._anal_fn, maps)):
+            staged = fn_of(f"pallas_{var}", "packed")
+            fused = fn_of(f"pallas_{var}", "fused")
+            t_staged, t_fused = time_pair(lambda: staged(arg),
+                                          lambda: fused(arg), iters=iters)
+            emit(f"recurrence/{d}/staged-{var}/lmax{l_max}/K{K}",
+                 t_staged * 1e6, "full staged chain (interpret-mode wall)")
+            emit(f"recurrence/{d}/fused-{var}/lmax{l_max}/K{K}",
+                 t_fused * 1e6, "fused pipeline (interpret-mode wall)")
+            emit(f"recurrence/fused_speedup/{d}/pallas-{var}/"
+                 f"lmax{l_max}/K{K}", t_staged / max(t_fused, 1e-12),
+                 "staged_wall / fused_wall (interpret mode, paired)")
+
+    # bf16 MXU panel contraction: max relative error of the fused bf16
+    # variant against its own f32 run (one forward call each, no timing)
+    bsizes = ((32, 2),) if smoke() else ((32, 2), (96, 8))
+    for l_max, K in bsizes:
+        plan = repro.make_plan("gl", l_max, K=K, dtype="float32",
+                               mode="pallas_mxu", cache="memory")
+        alm = sht.random_alm(KEY, l_max, l_max, K=K).astype(jnp.complex64)
+        f32_s = jax.jit(plan._make_fused_synth("mxu", bf16=False))
+        b16_s = jax.jit(plan._make_fused_synth("mxu", bf16=True))
+        m32, m16 = f32_s(alm), b16_s(alm)
+        err = float(jnp.max(jnp.abs(m16 - m32)) / jnp.max(jnp.abs(m32)))
+        emit(f"recurrence/bf16_err/synth/pallas-mxu/lmax{l_max}/K{K}", err,
+             "max|bf16 - f32| / max|f32| (fused MXU, f32 accumulation)")
+        maps = m32
+        f32_a = jax.jit(plan._make_fused_anal("mxu", bf16=False))
+        b16_a = jax.jit(plan._make_fused_anal("mxu", bf16=True))
+        a32_, a16_ = f32_a(maps), b16_a(maps)
+        err = float(jnp.max(jnp.abs(a16_ - a32_)) / jnp.max(jnp.abs(a32_)))
+        emit(f"recurrence/bf16_err/anal/pallas-mxu/lmax{l_max}/K{K}", err,
+             "max|bf16 - f32| / max|f32| (fused MXU, f32 accumulation)")
 
     # analytic grid-step accounting at production sizes (cheap, always
     # emitted -- the lmax512 row is the packing acceptance metric)

@@ -27,6 +27,28 @@ def time_call(fn, *args, warmup=1, iters=3, **kw):
     return float(np.median(ts))
 
 
+def time_pair(fn_a, fn_b, warmup=1, iters=3):
+    """Paired interleaved wall times -> (median_a, median_b) seconds.
+
+    Interpret-mode pallas wall times drift 30-40% between runs on a noisy
+    host, which makes two independent `time_call` measurements useless for
+    an A/B ratio.  Alternating A and B inside one loop exposes both to the
+    same drift; the per-call medians stay comparable.
+    """
+    for _ in range(warmup):
+        jax.block_until_ready(fn_a())
+        jax.block_until_ready(fn_b())
+    ta, tb = [], []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_a())
+        ta.append(time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn_b())
+        tb.append(time.perf_counter() - t0)
+    return float(np.median(ta)), float(np.median(tb))
+
+
 #: every emit() row of the current process, collected so benchmarks/run.py
 #: can write its machine-readable BENCH_<date>.json summary
 ROWS: list = []

@@ -66,6 +66,10 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
     if args.smoke:
         os.environ["REPRO_BENCH_SMOKE"] = "1"
+        # bounded CI runtime: plans built by the benches reuse chardb
+        # corners but never one-shot time missing ones (cost-model
+        # fallback instead) -- see repro.roofline.chardb
+        os.environ["REPRO_CHARDB_SMOKE"] = "1"
     from benchmarks import (bench_accuracy, bench_recurrence,
                             bench_scaling_model, bench_fft, bench_speedup,
                             bench_breakdown, bench_dispatch, bench_spin,

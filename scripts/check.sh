@@ -85,6 +85,31 @@ echo "== serving smoke (K-coalesced engine, mixed-signature traffic) =="
 # call to <1e-12, so a serving-layer regression fails here loudly
 PYTHONPATH=src python examples/serve_sht.py --smoke
 
+echo "== chardb smoke (characterize once, second build re-measures zero) =="
+PYTHONPATH=src python - <<'PY'
+# the persistent autotune characterization DB: a cold auto plan measures
+# its corners exactly once; after every plan/decision cache is cleared a
+# rebuild must reuse them all (one-rep, tiny size)
+import repro
+from repro.core import cache as plancache, transform
+from repro.roofline import chardb
+chardb.clear()
+repro.make_plan("gl", l_max=8, K=1, dtype="float32", mode="auto",
+                cache="memory")
+first = chardb.stats()
+assert first["measured"] > 0, first
+transform.clear_plan_cache()
+plancache.clear_memory()
+chardb.reset_stats()
+repro.make_plan("gl", l_max=8, K=1, dtype="float32", mode="auto",
+                cache="memory")
+again = chardb.stats()
+assert again["measured"] == 0, f"chardb re-measured corners: {again}"
+assert again["reused"] >= first["measured"], (first, again)
+print(f"chardb OK: {first['measured']} corners characterized once, "
+      f"{again['reused']} reused on rebuild")
+PY
+
 echo "== spin benchmark (one-rep smoke) =="
 # standalone (also part of benchmarks.run below) so a spin-bench
 # regression fails the gate loudly -- run.py swallows per-module errors
@@ -110,6 +135,27 @@ assert not d.get("errors"), f"benchmark modules errored: {d['errors']}"
 ratio = rows.get("recurrence/panels_ratio/lmax512")
 assert ratio is not None, "packed-panel accounting row missing"
 assert ratio >= 1.5, f"packed grid no longer >=1.5x smaller: {ratio}"
+# fused Legendre+phase pipeline: the speedup rows must keep landing and
+# the fused synth must not regress below parity (committed full runs
+# show >=1.2x; the one-rep smoke gate leaves noise headroom)
+fused = {k: v for k, v in rows.items()
+         if k.startswith("recurrence/fused_speedup/")}
+assert fused, "fused_speedup rows missing"
+fs = [v for k, v in fused.items() if "/synth/" in k]
+assert fs and min(fs) >= 1.0, f"fused synth speedup regressed: {fused}"
+# packed analysis must beat the plain grid (committed runs show ~2.7x
+# once the bench stopped tracing m_vals -- a traced m_vals makes
+# pick_layout silently fall back to plain, which was the root cause of
+# the historical ~0.7-1.0x rows)
+pa = [v for k, v in rows.items()
+      if k.startswith("recurrence/packed_speedup/anal/")]
+assert pa and min(pa) >= 1.0, f"packed anal speedup regressed: {pa}"
+# bf16 MXU contraction: error band vs the same kernel's f32 run
+b16 = {k: v for k, v in rows.items()
+       if k.startswith("recurrence/bf16_err/")}
+assert b16, "bf16_err rows missing"
+assert all(0.0 < v < 1e-2 for v in b16.values()), \
+    f"bf16 error band broken: {b16}"
 # serving trajectory: throughput + tail-latency rows must keep landing
 for prefix in ("serve/throughput/", "serve/p99/"):
     hits = [k for k in rows if k.startswith(prefix)]
@@ -121,7 +167,8 @@ assert float(serve_err) < 1e-12, \
 for key in ("git_rev", "jax_version", "generated_utc"):
     assert d.get(key), f"missing {key} in {path}"
 print(f"bench JSON OK: {len(rows)} rows, panels_ratio(lmax512)="
-      f"{ratio:.2f}")
+      f"{ratio:.2f}, fused_synth_min={min(fs):.2f}, "
+      f"packed_anal_min={min(pa):.2f}")
 PY
 rm -f "$BENCH_OUT"
 

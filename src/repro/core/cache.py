@@ -42,7 +42,9 @@ __all__ = [
 
 #: Bump when the payload layout of any cached builder changes; old disk
 #: entries are then simply never matched (keys embed the version).
-CACHE_VERSION = 1
+#: v2: autotune decisions gained the "fused" layout (PR 7) -- v1 decisions
+#: would pin plans to staged-only choices.
+CACHE_VERSION = 2
 
 _MEMORY: dict[str, dict[str, np.ndarray]] = {}
 _DECISIONS: dict[str, dict] = {}
@@ -136,8 +138,9 @@ def clear_memory() -> None:
 
 def clear_disk(directory: Optional[str] = None) -> int:
     """Remove the persistent tier under ``directory`` (default resolution
-    as in :func:`cache_dir`).  Only files this module wrote are touched --
-    32-hex-digit signature names with ``.npz``/``.json`` suffixes -- so a
+    as in :func:`cache_dir`).  Only files this layer wrote are touched --
+    32-hex-digit signature names plus the ``chardb_<16-hex>`` hardware
+    characterization stores, ``.npz``/``.json`` suffixes -- so a
     mis-pointed ``$REPRO_CACHE_DIR`` cannot wipe unrelated data.  Returns
     the number of entries removed; a missing directory is a no-op.
     """
@@ -147,7 +150,13 @@ def clear_disk(directory: Optional[str] = None) -> int:
     removed = 0
     for name in os.listdir(d):
         stem, dot, ext = name.rpartition(".")
-        if ext not in ("npz", "json") or len(stem) != 32:
+        if ext not in ("npz", "json"):
+            continue
+        if stem.startswith("chardb_"):
+            stem = stem[len("chardb_"):]
+            if len(stem) != 16:
+                continue
+        elif len(stem) != 32:
             continue
         if not all(c in "0123456789abcdef" for c in stem):
             continue

@@ -61,7 +61,8 @@ from repro.core.grids import BucketLayout, RingGrid
 
 __all__ = [
     "uniform_synth", "uniform_anal", "bucket_synth", "bucket_anal",
-    "bucket_bin_maps", "phase_factors",
+    "bucket_bin_maps", "uniform_bin_maps", "uniform_rotation_tables",
+    "phase_factors",
     "PhaseStage", "UniformPhase", "BucketPhase", "make_phase",
 ]
 
@@ -114,14 +115,69 @@ def _fac_rows(m_vals, dtype):
         jnp.dtype(dtype))[:, None, None]
 
 
-def _uniform_synth_body(d_re, d_im, phi0, scale_rows, m, n, dtype):
-    cdt = _complex_dtype(dtype)
-    delta = (d_re + 1j * d_im).astype(cdt)
-    dp = delta * phase_factors(m, phi0, +1.0, dtype)[..., None]
+def uniform_bin_maps(m_vals, n):
+    """Alias-fold bin maps for the uniform engine, all numpy.
+
+    Returns ``(bins, hi, nyq)``: the rfft half-spectrum bin each m row
+    lands in, whether it wraps onto the conjugate half (``hi``: scatter /
+    gather the conjugate), and whether it sits on the Nyquist bin (real
+    part doubles on synthesis).  Shared by the host engine below and by
+    the fused Legendre+phase kernels (kernels/fused.py), which bake the
+    same maps into their per-slot rotation tables."""
+    m = np.asarray(m_vals)
     b = np.maximum(m, 0) % n
     hi = b > n // 2                                # conjugate wrap
     bins = np.where(hi, n - b, b)
     nyq = 2 * b == n                               # Nyquist: real part doubles
+    return bins, hi, nyq
+
+
+def uniform_rotation_tables(m_vals, phi0, n, direction):
+    """Real 2x2 per-(row, ring) phase-rotation tables, (M, 4, R) f64 numpy.
+
+    Encodes the uniform engine's e^{+-i m phi0(r)} rotation *and* the
+    conjugate-wrap / Nyquist handling of :func:`uniform_bin_maps` as a real
+    linear map so the fused kernels can apply the phase stage in-kernel:
+
+        h_re = t0 * d_re + t1 * d_im
+        h_im = t2 * d_re + t3 * d_im
+
+    ``direction`` is ``"synth"`` (Delta -> half-spectrum row, sign +1,
+    conjugate scattered for hi rows, doubled real part on Nyquist) or
+    ``"anal"`` (gathered half-spectrum row -> Delta, sign -1, conjugate
+    gathered for hi rows; no Nyquist term -- exactly the host engine's
+    math).  Rows with m < 0 are zeroed like :func:`phase_factors`."""
+    m = np.asarray(m_vals)
+    bins, hi, nyq = uniform_bin_maps(m, n)
+    msafe = np.maximum(m, 0).astype(np.float64)
+    ang = msafe[:, None] * np.asarray(phi0, np.float64)[None, :]
+    c, s = np.cos(ang), np.sin(ang)
+    hi_c = hi[:, None]
+    if direction == "synth":
+        ta, tb = c, -s
+        tc = np.where(hi_c, -s, s)
+        td = np.where(hi_c, -c, c)
+        nyq_c = nyq[:, None]
+        ta = np.where(nyq_c, 2.0 * c, ta)
+        tb = np.where(nyq_c, -2.0 * s, tb)
+        tc = np.where(nyq_c, 0.0, tc)
+        td = np.where(nyq_c, 0.0, td)
+    elif direction == "anal":
+        ta = c
+        tb = np.where(hi_c, -s, s)
+        tc = -s
+        td = np.where(hi_c, -c, c)
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
+    t = np.stack([ta, tb, tc, td], axis=1)         # (M, 4, R)
+    return np.where((m >= 0)[:, None, None], t, 0.0)
+
+
+def _uniform_synth_body(d_re, d_im, phi0, scale_rows, m, n, dtype):
+    cdt = _complex_dtype(dtype)
+    delta = (d_re + 1j * d_im).astype(cdt)
+    dp = delta * phase_factors(m, phi0, +1.0, dtype)[..., None]
+    bins, hi, nyq = uniform_bin_maps(m, n)
     half = n // 2 + 1
     vals = jnp.where(jnp.asarray(hi)[:, None, None], jnp.conj(dp), dp)
     vals = jnp.where(jnp.asarray(nyq)[:, None, None],
@@ -140,9 +196,7 @@ def _uniform_anal_core(maps, phi0, m, n, dtype):
     (M, R, K): the e^{-im phi} projection without the quadrature weights."""
     cdt = _complex_dtype(dtype)
     F = jnp.fft.rfft(maps.astype(dtype), axis=1)   # (R, n//2+1, K)
-    b = np.maximum(m, 0) % n
-    hi = b > n // 2
-    bins = np.where(hi, n - b, b)
+    bins, hi, _ = uniform_bin_maps(m, n)
     Fm = F[:, jnp.asarray(bins), :]                # (R, M, K)
     Fm = jnp.where(jnp.asarray(hi)[None, :, None], jnp.conj(Fm), Fm)
     Fm = jnp.moveaxis(Fm, 1, 0).astype(cdt)        # (M, R, K)

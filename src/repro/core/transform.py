@@ -41,8 +41,21 @@ Dispatch modes
 ``mode="auto"``   measure each candidate once per direction (one warm-up +
                   one timed call) and pick the fastest; the decision is
                   cached by plan signature (memory + optional disk), so the
-                  autotune pass runs once per signature, ever.
+                  autotune pass runs once per signature, ever.  The raw
+                  corner timings additionally land in the persistent
+                  per-hardware characterization DB (`repro.roofline.chardb`)
+                  keyed by workload -- NOT by plan signature or mode -- so
+                  even a decision-cache-cold rebuild re-measures zero
+                  corners, and ``REPRO_CHARDB_SMOKE=1`` runs skip missing
+                  corners entirely (cost-model fallback) instead of timing.
 ``mode=<backend>`` force one backend for both directions.
+
+Pallas plans additionally dispatch a per-direction Legendre *layout*
+(``plan.layouts``): the ``packed``/``plain`` grids of the staged pipeline,
+plus ``fused`` -- the single-kernel Legendre+phase pipeline
+(`repro.kernels.fused`) for spin-0 unfolded plans on uniform grids, which
+keeps the intermediate ``delta_m`` on-chip.  ``describe()["fusion"]``
+reports eligibility (and the fallback reason when staged).
 
 Differentiability
 -----------------
@@ -208,8 +221,9 @@ class Plan:
         self._dist = None
         self._compiled: dict = {}
         self.backends: dict = {}
-        #: packed-vs-plain Legendre grid per direction (pallas backends
-        #: only; None elsewhere) -- the tentpole's layout dispatch.
+        #: Legendre layout per direction (pallas backends only; None
+        #: elsewhere): "packed" / "plain" staged grids, or "fused" -- the
+        #: single-kernel Legendre+phase pipeline (kernels/fused.py).
         self.layouts: dict = {}
         self.candidates: list[str] = []
         self.skipped: dict = {}
@@ -309,10 +323,16 @@ class Plan:
                          else self._sht.alm2map)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             variant = backend.split("_")[1]
-            fn = (self._make_pallas_synth_spin(variant=variant,
-                                               layout=layout) if spin
-                  else self._make_pallas_synth(variant=variant,
-                                               layout=layout))
+            if layout == "fused":
+                ok, reason = self._fusion_eligibility()
+                if not ok:
+                    raise ValueError(f"fused layout unavailable: {reason}")
+                fn = self._make_fused_synth(variant=variant)
+            elif spin:
+                fn = self._make_pallas_synth_spin(variant=variant,
+                                                  layout=layout)
+            else:
+                fn = self._make_pallas_synth(variant=variant, layout=layout)
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
@@ -347,10 +367,16 @@ class Plan:
                          else self._sht.map2alm)
         elif backend in ("pallas_vpu", "pallas_mxu"):
             variant = backend.split("_")[1]
-            fn = (self._make_pallas_anal_spin(variant=variant,
-                                              layout=layout) if spin
-                  else self._make_pallas_anal(variant=variant,
-                                              layout=layout))
+            if layout == "fused":
+                ok, reason = self._fusion_eligibility()
+                if not ok:
+                    raise ValueError(f"fused layout unavailable: {reason}")
+                fn = self._make_fused_anal(variant=variant)
+            elif spin:
+                fn = self._make_pallas_anal_spin(variant=variant,
+                                                 layout=layout)
+            else:
+                fn = self._make_pallas_anal(variant=variant, layout=layout)
             fn = jax.jit(fn)
         elif backend == "dist":
             d = self._dist_engine()
@@ -480,7 +506,74 @@ class Plan:
 
         return fn
 
+    # -- fused pipeline (layout "fused") --------------------------------------
+
+    def _fusion_eligibility(self) -> tuple:
+        """(eligible, reason) for the fused Legendre+phase pipeline.
+
+        Fused kernels bake the uniform engine's phase rotation into the
+        Legendre grid, so they require the batched-uniform phase stage and
+        the scalar unfolded Legendre path; everything else stays staged.
+        """
+        if self.phase.kind != "uniform":
+            return False, (f"phase stage is {self.phase.kind!r} "
+                           "(fused pipeline needs the uniform engine)")
+        if self.spin != 0:
+            return False, "spin-2 lambda pairs are not fused (staged path)"
+        if self.fold:
+            return False, "equator fold is not fused (staged path)"
+        return True, None
+
+    def _fused_layout(self):
+        """The packed slot layout shared by both fused directions (built
+        once per plan; pure numpy)."""
+        if getattr(self, "_fused_lo", None) is None:
+            from repro.kernels import pack as kpack
+            self._fused_lo = kpack.build_layout(self._m_vals, self.l_max)
+        return self._fused_lo
+
+    def _make_fused_synth(self, variant: str, bf16: bool = False):
+        from repro.kernels import fused as kfused
+        pmm, pms, x32 = self._seeds()
+        g, lo = self.grid, self._fused_layout()
+        kw = dict(l_max=self.l_max, n=g.max_n_phi, phi0=g.phi0,
+                  variant=variant, bf16=bf16, lo=lo)
+
+        def fn(alm):
+            a32 = jnp.concatenate(
+                [jnp.real(alm), jnp.imag(alm)], axis=-1).astype(jnp.float32)
+            maps = kfused.fused_synth(a32, self._m_vals, x32, pmm, pms, **kw)
+            return maps.astype(self.dtype)
+
+        return fn
+
+    def _make_fused_anal(self, variant: str, bf16: bool = False):
+        from repro.kernels import fused as kfused
+        K = self.K
+        cdt = _complex_dtype(self.dtype)
+        pmm, pms, x32 = self._seeds()
+        g, lo = self.grid, self._fused_layout()
+        w = jnp.asarray(g.weights)
+        kw = dict(l_max=self.l_max, n=g.max_n_phi, phi0=g.phi0,
+                  variant=variant, bf16=bf16, lo=lo)
+        mask = jnp.asarray(alm_mask(self.l_max, self.m_max))[..., None]
+
+        def fn(maps):
+            out = kfused.fused_anal(maps, w, self._m_vals, x32, pmm, pms,
+                                    **kw)
+            alm = (out[..., :K] + 1j * out[..., K:]).astype(cdt)
+            return jnp.where(mask, alm, 0.0)
+
+        return fn
+
     # -- dispatch -------------------------------------------------------------
+
+    def _pallas_layouts(self) -> tuple:
+        """Candidate Legendre layouts for the pallas backends."""
+        lays = ("packed", "plain")
+        if self._fusion_eligibility()[0]:
+            lays = lays + ("fused",)
+        return lays
 
     def _predict_all(self, hw=None) -> dict:
         """Cost-model prediction per candidate per direction (seconds).
@@ -505,8 +598,11 @@ class Plan:
                           n_devices=n_dev if b == "dist" else 1,
                           fft_lengths=fl, spin=self.spin)
                 if b in ("pallas_vpu", "pallas_mxu"):
-                    per = {lay: roofline.predict_sht_time(b, layout=lay, **kw)
-                           for lay in ("packed", "plain")}
+                    per = {lay: roofline.predict_sht_time(
+                               b, layout="packed" if lay == "fused" else lay,
+                               pipeline="fused" if lay == "fused"
+                               else "staged", **kw)
+                           for lay in self._pallas_layouts()}
                     lay = min(per, key=per.get)
                     out[b][d] = per[lay]
                     out[b][f"{d}_layout"] = lay
@@ -514,8 +610,34 @@ class Plan:
                     out[b][d] = roofline.predict_sht_time(b, **kw)
         return out
 
+    def _chardb(self):
+        """The persistent per-hardware characterization DB this plan's
+        corner timings live in (disk-backed iff the plan's cache is)."""
+        from repro.roofline import chardb
+        directory = None
+        if self._cache_kind == "disk":
+            directory = plancache.cache_dir(self._cache_dir)
+        return chardb.get_db(directory)
+
+    def _corner_fields(self, backend: str, direction: str, layout) -> dict:
+        """Workload coordinates of one autotune corner.  Deliberately
+        excludes the dispatch mode and the plan signature key: any plan
+        exercising the same workload on the same hardware reuses the
+        measurement."""
+        return dict(
+            grid=self.grid.name, n_rings=self.grid.n_rings,
+            n_phi=self.grid.max_n_phi, l_max=self.l_max, m_max=self.m_max,
+            K=self.K, dtype=self.dtype, spin=self.spin, fold=self.fold,
+            backend=backend, direction=direction, layout=layout or "-",
+            n_devices=((self._n_shards or jax.device_count())
+                       if backend == "dist" else 1))
+
     def _measure_all(self) -> dict:
-        """One warm-up + one timed call per candidate per direction."""
+        """Corner timings per candidate per direction, through the chardb:
+        already-characterized corners are reused without running anything;
+        missing/stale ones get one warm-up + one timed call (or are
+        skipped entirely under ``REPRO_CHARDB_SMOKE=1``)."""
+        db = self._chardb()
         cdt = _complex_dtype(self.dtype)
         if self.spin == 0:
             alm = random_alm(jax.random.PRNGKey(0), self.l_max, self.m_max,
@@ -530,19 +652,26 @@ class Plan:
         out: dict = {}
         for b in self.candidates:
             out[b] = {}
-            layouts = (("packed", "plain") if b in ("pallas_vpu",
-                                                    "pallas_mxu")
-                       else (None,))
+            layouts = (self._pallas_layouts()
+                       if b in ("pallas_vpu", "pallas_mxu") else (None,))
             for direction, fn_of, arg in (("synth", self._synth_fn, alm),
                                           ("anal", self._anal_fn, maps)):
                 best, best_lay, errs = float("inf"), None, {}
                 for lay in layouts:
-                    try:
+
+                    def measure(b=b, lay=lay, fn_of=fn_of, arg=arg):
                         fn = fn_of(b, lay) if lay is not None else fn_of(b)
                         jax.block_until_ready(fn(arg))      # warm-up/compile
                         t0 = time.perf_counter()
                         jax.block_until_ready(fn(arg))
-                        t = time.perf_counter() - t0
+                        return (time.perf_counter() - t0) * 1e6
+
+                    try:
+                        us, status = db.get_or_measure(
+                            measure, **self._corner_fields(b, direction, lay))
+                        t = float("inf") if us is None else us * 1e-6
+                        if status == "skipped":
+                            out[b][f"{direction}_skipped"] = True
                     except Exception as e:  # unusable here: rank last
                         t = float("inf")
                         errs[lay] = f"{type(e).__name__}: {e}"
@@ -604,10 +733,24 @@ class Plan:
             self.cache_events["decision"] = "hit"
             return
         self.measured_s = self._measure_all()
-        self.backends = {
-            d: min(self.candidates, key=lambda b: self.measured_s[b][d])
-            for d in ("synth", "anal")}
+        self.backends, fell_back = {}, False
+        for d in ("synth", "anal"):
+            finite = [b for b in self.candidates
+                      if np.isfinite(self.measured_s[b][d])]
+            if finite:
+                self.backends[d] = min(
+                    finite, key=lambda b: self.measured_s[b][d])
+            else:
+                # every corner skipped (chardb smoke mode) or unusable:
+                # rank by the cost model instead of timing anything.
+                self.backends[d] = min(
+                    self.candidates, key=lambda b: self.predicted_s[b][d])
+                fell_back = True
         self._fill_layouts(self.measured_s)
+        if fell_back:
+            # an un-measured decision must not shadow a later real autotune
+            self.cache_events["decision"] = "model-fallback"
+            return
         self.cache_events["decision"] = "autotuned"
         plancache.save_decision(
             dkey, {**self.backends, "measured": self.measured_s,
@@ -717,7 +860,9 @@ class Plan:
                               self.grid.max_n_phi, self.K,
                               fft_lengths=self._sht.phase.fft_lengths,
                               spin=self.spin)
+        from repro.roofline import chardb
         layouts = dict(self.layouts)
+        fusion_ok, fusion_reason = self._fusion_eligibility()
         return {
             "signature": {
                 "grid": self.grid.name, "n_rings": self.grid.n_rings,
@@ -732,6 +877,14 @@ class Plan:
                                "rule": "adjoint (custom_jvp + linear_call)",
                                "higher_order": False},
             "layouts": layouts,
+            "fusion": {
+                "eligible": fusion_ok, "reason": fusion_reason,
+                "active": {d: layouts.get(d) == "fused"
+                           for d in ("synth", "anal")},
+                "pipelines": {d: ("fused" if layouts.get(d) == "fused"
+                                  else "staged")
+                              for d in ("synth", "anal")},
+            },
             "candidates": list(self.candidates),
             "skipped": dict(self.skipped),
             # grouped view of the packing decision; panels comes from the
@@ -743,7 +896,8 @@ class Plan:
             "work": w,
             "memory": self.memory_footprint(),
             "cache": {"events": dict(self.cache_events),
-                      **plancache.stats().to_dict()},
+                      **plancache.stats().to_dict(),
+                      "chardb": chardb.stats()},
         }
 
     def report(self) -> str:

@@ -1,0 +1,679 @@
+"""Fused Legendre+phase Pallas pipeline (single-kernel inverse/direct SHT
+stage pair for uniform grids).
+
+The staged pipeline (kernels/ops.py + core/phase.py) materialises the
+intermediate ``delta_m(r)`` rows in HBM between the Legendre kernel and the
+host phase stage -- the exact traffic the paper identifies as the GPU
+bottleneck of the inverse transform, and what libsharp's fused ring-major
+loop avoids.  The kernels here keep the per-ring accumulation on-chip:
+
+  * synthesis: the packed-slot Legendre accumulate is contracted per panel
+    and immediately rotated by a per-(row, ring) *phase table*
+    (core.phase.uniform_rotation_tables -- cos/sin of m*phi0 with the
+    conjugate-wrap and Nyquist handling of the uniform engine baked in), so
+    the kernel's only output is the rotated half-spectrum row block.  The
+    unrotated Delta never exists as a pallas output ref (asserted on the
+    jaxpr in tests/test_fused.py).
+  * analysis: the gathered rfft rows are rotated into Delta in-kernel (once
+    per ring block, hoisted out of the l loop) and contracted against the
+    recurrence panel; only packed a_lm l-streams leave the kernel.
+
+Beyond the fusion itself the kernels carry two raw-speed upgrades over the
+staged ones:
+
+  * panel-contraction accumulate: recurrence values stream into a VMEM
+    value panel (via the exact shared `_f32_step`, so fused synthesis is
+    bit-identical to staged) and are contracted against the coefficient
+    block once per panel (one dot) instead of a broadcast-FMA per l-step
+    -- the per-l cost stops scaling with K.
+  * ring-shrunk data operands: on the VPU layout the ring axis is padded
+    to 1024 lanes but only ``ceil(R/128)`` row blocks carry data, so the
+    ``f``/phase-table operands are shipped at that reduced row count and
+    the zero padding rows are rebuilt in-register (`_pad_rows`).  Input
+    block fetches are the dominant cost in interpret mode; not reading
+    megabytes of structural zeros is most of the measured fused win.
+
+The synthesis VPU kernel double-buffers its per-panel output flush
+(`hbuf` two-slot scratch): panel p's contracted+rotated block is written
+to HBM while panel p+1's recurrence values stream into the value panel --
+the manual-prefetch-in-the-carry analogue of ``pltpu.emit_pipeline`` (in
+interpret mode the schedule is sequential; on hardware the structure lets
+Mosaic overlap the flush DMA with compute).
+
+The MXU variants take ``bf16=True`` to run the panel contraction in
+bfloat16 with float32 accumulation (`preferred_element_type`); the
+measured error band rides in benchmarks/bench_recurrence.py (`bf16_err`
+rows).
+
+Only the scalar (spin == 0), unfolded path is fused; plans fall back to
+the staged pipeline otherwise (see Plan.describe()["fusion"]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.autodiff import linear_pair
+from repro.kernels.legendre_pallas import (_CompilerParams, _f32_step,
+                                           _pad_rows)
+
+__all__ = [
+    "synth_fused_vpu", "synth_fused_mxu",
+    "anal_fused_vpu", "anal_fused_mxu",
+    "fused_synth", "fused_anal",
+]
+
+def _fill_panel(panel_ref, x, m0, m1, jsw, base, lp_size, pmm0, pms0,
+                pmm1, pms1, carry):
+    """Stream the split-seam recurrence values of one panel into the VMEM
+    value panel via the exact shared `_f32_step`.  Returns the (pp, pc, sc)
+    carry.  Scalar (spin-0) path: segment l0 == m."""
+    j0 = jnp.clip(jsw - base, 0, lp_size)
+
+    def seg_gen(m, l_base, pmm, pms):
+        m_f = m.astype(jnp.float32)
+
+        def gen(j, carry):
+            pp, pc, sc = carry
+            pp, pc, sc, val = _f32_step(l_base + j, m_f, x, pp, pc, sc,
+                                        pmm, pms)
+            panel_ref[pl.ds(j, 1)] = val.reshape((1,) + panel_ref.shape[1:])
+            return pp, pc, sc
+
+        return gen
+
+    carry = jax.lax.fori_loop(
+        0, j0, seg_gen(m0, m0 + base, pmm0, pms0), carry)
+    return jax.lax.fori_loop(
+        j0, lp_size, seg_gen(m1, m1 + base - jsw, pmm1, pms1), carry)
+
+
+def _hi_row_mask(base, jsw, lp_size):
+    iot = jax.lax.broadcasted_iota(jnp.int32, (lp_size, 1), 0)
+    return (base + iot) >= jsw
+
+
+# =============================================================================
+# Fused synthesis: packed a_lm -> rotated half-spectrum rows, one kernel
+# =============================================================================
+
+
+def _synth_fused_vpu_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                            x_ref, pmm_ref, pms_ref, tab_ref, a_ref,
+                            out_ref, pp_ref, pc_ref, sc_ref, panel_ref,
+                            hbuf_ref, *, lp_size, n_k, n_sp, rf):
+    si = pl.program_id(0)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    # double-buffered flush: panel sp-1's contracted+rotated block drains
+    # to the output ref while this panel's recurrence values stream in
+    @pl.when(sp > 0)
+    def _flush_prev():
+        out_ref[0] += hbuf_ref[pl.ds((sp - 1) % 2, 1)][0]
+
+    x = x_ref[...]                            # (8, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    carry = _fill_panel(panel_ref, x, m0, m1, jsw, base, lp_size,
+                        pmm0, pms0, pmm1, pms1,
+                        (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...], pc_ref[...], sc_ref[...] = carry
+
+    panel = panel_ref[...].reshape(lp_size, -1)       # (LP, 8*128)
+    a_blk = a_ref[0]                          # (LP, 2K)
+    hi_row = _hi_row_mask(base, jsw, lp_size)
+    hs = []
+    for seg in (0, 1):
+        a_seg = jnp.where(hi_row if seg else ~hi_row, a_blk, 0.0)
+        d = jax.lax.dot_general(a_seg, panel, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        d = d.reshape(2 * n_k, 8, 128)
+        d_re, d_im = d[:n_k], d[n_k:]         # (K, 8, 128) each
+        t = _pad_rows(tab_ref[0, seg], rf)    # (4, 8, 128)
+        h_re = t[0] * d_re + t[1] * d_im
+        h_im = t[2] * d_re + t[3] * d_im
+        hs.append(jnp.concatenate([h_re, h_im], axis=0))
+    hbuf_ref[pl.ds(sp % 2, 1)] = jnp.stack(hs, axis=0)[None]
+
+    @pl.when(sp == n_sp - 1)
+    def _flush_last():
+        out_ref[0] += hbuf_ref[pl.ds(sp % 2, 1)][0]
+
+
+def synth_fused_vpu(a_pk, maps, x2d, pmm_pk, pms_pk, tab_pk, *, l_max,
+                    lp_size=128, interpret=True):
+    """VPU fused synthesis on the packed (slot, panel) grid.
+
+    a_pk   : (n_slots, S, 2K) f32 packed coefficient streams
+    maps   : (m0, m1, mp0, mp1, seed) i32 per-slot scalar-prefetch arrays
+    x2d    : (R1, 128) f32;  pmm_pk/pms_pk: (n_slots, 2, R1, 128)
+    tab_pk : (n_slots, 2, 4, Rf1, 128) f32 per-segment phase tables,
+             ring-shrunk to ``Rf1`` real row blocks (= R1 on multi-row
+             grids)
+    returns: (n_slots, 2, 2K, R1, 128) f32 rotated half-spectrum rows
+    """
+    n_slots, S, K2 = a_pk.shape
+    R1 = x2d.shape[0]
+    assert S % lp_size == 0 and R1 % 8 == 0 and K2 % 2 == 0
+    n_sp = S // lp_size
+    rf = tab_pk.shape[3] if R1 == 8 else 8
+    assert tab_pk.shape[3] == (rf if R1 == 8 else R1)
+    tab_spec = pl.BlockSpec((1, 2, 4, rf, 128),
+                            (lambda s, rb, sp, *_refs: (s, 0, 0, 0, 0))
+                            if R1 == 8 else
+                            (lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)))
+    grid = (n_slots, R1 // 8, n_sp)
+    kernel = functools.partial(_synth_fused_vpu_kernel, lp_size=lp_size,
+                               n_k=K2 // 2, n_sp=n_sp, rf=rf)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                tab_spec,
+                pl.BlockSpec((1, lp_size, K2),
+                             lambda s, rb, sp, *_refs: (s, sp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 2, K2, 8, 128),
+                                   lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 8, 128), jnp.float32),
+                pltpu.VMEM((2, 2, K2, 8, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, 2, K2, R1, 128),
+                                       jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*maps, x2d, pmm_pk, pms_pk, tab_pk, a_pk)
+
+
+def _synth_fused_mxu_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                            x_ref, pmm_ref, pms_ref, tab_ref, a_ref,
+                            out_ref, pp_ref, pc_ref, sc_ref, panel_ref, *,
+                            lp_size, n_k, bf16):
+    si = pl.program_id(0)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    x = x_ref[...]                            # (1, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    carry = _fill_panel(panel_ref, x, m0, m1, jsw, base, lp_size,
+                        pmm0, pms0, pmm1, pms1,
+                        (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...], pc_ref[...], sc_ref[...] = carry
+
+    panel = panel_ref[...]                    # (LP, 128)
+    if bf16:
+        panel = panel.astype(jnp.bfloat16)
+    a_blk = a_ref[0]                          # (LP, 2K)
+    hi_row = _hi_row_mask(base, jsw, lp_size)
+    for seg in (0, 1):
+        a_seg = jnp.where(hi_row if seg else ~hi_row, a_blk, 0.0)
+        if bf16:
+            a_seg = a_seg.astype(jnp.bfloat16)
+        c = jax.lax.dot_general(panel, a_seg, (((0,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        c_re, c_im = c[:, :n_k], c[:, n_k:]   # (128, K) each
+        t = tab_ref[0, seg][:, 0, :]          # (4, 128)
+        h_re = t[0][:, None] * c_re + t[1][:, None] * c_im
+        h_im = t[2][:, None] * c_re + t[3][:, None] * c_im
+        out_ref[0, seg] += jnp.concatenate([h_re, h_im], axis=1)
+
+
+def synth_fused_mxu(a_pk, maps, x2d, pmm_pk, pms_pk, tab_pk, *, l_max,
+                    bf16=False, lp_size=128, interpret=True):
+    """MXU fused synthesis (panel matmul + in-kernel rotation).
+
+    Layouts as :func:`synth_fused_vpu` except rings advance 128 at a time;
+    tab_pk is (n_slots, 2, 4, R1, 128); returns (n_slots, 2, R, 2K) with
+    R = R1 * 128.  ``bf16=True`` contracts the recurrence panel in
+    bfloat16 with f32 accumulation.
+    """
+    n_slots, S, K2 = a_pk.shape
+    R1 = x2d.shape[0]
+    R = R1 * 128
+    assert S % lp_size == 0 and K2 % 2 == 0
+    grid = (n_slots, R1, S // lp_size)
+    kernel = functools.partial(_synth_fused_mxu_kernel, lp_size=lp_size,
+                               n_k=K2 // 2, bf16=bf16)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 4, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
+                pl.BlockSpec((1, lp_size, K2),
+                             lambda s, rb, sp, *_refs: (s, sp, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 2, 128, K2),
+                                   lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, 2, R, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*maps, x2d, pmm_pk.reshape(n_slots, 2, R1, 128),
+      pms_pk.reshape(n_slots, 2, R1, 128),
+      tab_pk.reshape(n_slots, 2, 4, R1, 128), a_pk)
+
+
+# =============================================================================
+# Fused analysis: gathered rfft rows -> packed a_lm l-streams, one kernel
+# =============================================================================
+
+
+def _anal_fused_vpu_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                           x_ref, pmm_ref, pms_ref, tab_ref, f_ref,
+                           out_ref, pp_ref, pc_ref, sc_ref, panel_ref, *,
+                           lp_size, n_k, rf):
+    si = pl.program_id(0)
+    rb = pl.program_id(1)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+
+    # rotate the gathered half-spectrum rows into Delta once per grid step
+    # (l-independent, so hoisted out of the recurrence loop entirely)
+    f = _pad_rows(f_ref[0], rf)               # (2, 2K, 8, 128)
+    ds = []
+    for seg in (0, 1):
+        f_re, f_im = f[seg, :n_k], f[seg, n_k:]
+        t = _pad_rows(tab_ref[0, seg], rf)    # (4, 8, 128)
+        d_re = t[0] * f_re + t[1] * f_im
+        d_im = t[2] * f_re + t[3] * f_im
+        ds.append(jnp.concatenate([d_re, d_im], axis=0)
+                  .reshape(2 * n_k, -1))      # (2K, 8*128)
+
+    carry = _fill_panel(panel_ref, x, m0, m1, jsw, base, lp_size,
+                        pmm0, pms0, pmm1, pms1,
+                        (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...], pc_ref[...], sc_ref[...] = carry
+
+    panel = panel_ref[...].reshape(lp_size, -1)       # (LP, 8*128)
+    dims = (((1,), (1,)), ((), ()))           # NT gemm over the ring tile
+    c0 = jax.lax.dot_general(panel, ds[0], dims,
+                             preferred_element_type=jnp.float32)
+    c1 = jax.lax.dot_general(panel, ds[1], dims,
+                             preferred_element_type=jnp.float32)
+    hi_row = _hi_row_mask(base, jsw, lp_size)
+    out_ref[0] += jnp.where(hi_row, c1, c0)   # (LP, 2K)
+
+
+def anal_fused_vpu(f_pk, maps, x2d, pmm_pk, pms_pk, tab_pk, *, l_max, s_len,
+                   lp_size=128, interpret=True):
+    """VPU fused analysis on the packed grid.
+
+    f_pk   : (n_slots, 2, 2K, Rf1, 128) gathered rfft rows per segment,
+             ring-shrunk like ``tab_pk`` (Rf1 = R1 on multi-row grids)
+    tab_pk : (n_slots, 2, 4, Rf1, 128) f32 anal-direction phase tables
+    returns: (n_slots, S, 2K) f32 packed l-stream rows
+    """
+    n_slots, n_seg, K2 = f_pk.shape[:3]
+    R1 = x2d.shape[0]
+    assert n_seg == 2 and R1 % 8 == 0 and K2 % 2 == 0
+    rf = f_pk.shape[3] if R1 == 8 else 8
+    assert f_pk.shape[3] == tab_pk.shape[3] == (rf if R1 == 8 else R1)
+    idx = ((lambda s, rb, sp, *_refs: (s, 0, 0, 0, 0)) if R1 == 8 else
+           (lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)))
+    S = int(s_len)
+    assert S % lp_size == 0
+    grid = (n_slots, R1 // 8, S // lp_size)
+    kernel = functools.partial(_anal_fused_vpu_kernel, lp_size=lp_size,
+                               n_k=K2 // 2, rf=rf)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((8, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 8, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 4, rf, 128), idx),
+                pl.BlockSpec((1, 2, K2, rf, 128), idx),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda s, rb, sp, *_refs: (s, sp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.float32),
+                pltpu.VMEM((8, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 8, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, S, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(*maps, x2d, pmm_pk, pms_pk, tab_pk, f_pk)
+
+
+def _anal_fused_mxu_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
+                           x_ref, pmm_ref, pms_ref, tab_ref, f_ref,
+                           out_ref, pp_ref, pc_ref, sc_ref, panel_ref, *,
+                           lp_size, n_k, bf16):
+    si = pl.program_id(0)
+    rb = pl.program_id(1)
+    sp = pl.program_id(2)
+    m0, m1 = m0_ref[si], m1_ref[si]
+    jsw = seed_ref[si]
+    base = sp * lp_size
+
+    @pl.when(sp == 0)
+    def _init_carry():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        pc_ref[...] = jnp.zeros_like(pc_ref)
+        sc_ref[...] = jnp.zeros_like(sc_ref)
+
+    @pl.when(rb == 0)
+    def _init_out():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    x = x_ref[...]                            # (1, 128)
+    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
+    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+
+    f = f_ref[0]                              # (2, 128, 2K)
+    ds = []
+    for seg in (0, 1):
+        f_re, f_im = f[seg][:, :n_k], f[seg][:, n_k:]
+        t = tab_ref[0, seg][:, 0, :]          # (4, 128)
+        d_re = t[0][:, None] * f_re + t[1][:, None] * f_im
+        d_im = t[2][:, None] * f_re + t[3][:, None] * f_im
+        d = jnp.concatenate([d_re, d_im], axis=1)     # (128, 2K)
+        ds.append(d.astype(jnp.bfloat16) if bf16 else d)
+
+    carry = _fill_panel(panel_ref, x, m0, m1, jsw, base, lp_size,
+                        pmm0, pms0, pmm1, pms1,
+                        (pp_ref[...], pc_ref[...], sc_ref[...]))
+    pp_ref[...], pc_ref[...], sc_ref[...] = carry
+
+    panel = panel_ref[...]                    # (LP, 128)
+    if bf16:
+        panel = panel.astype(jnp.bfloat16)
+    dims = (((1,), (0,)), ((), ()))           # contract over rings(128)
+    c0 = jax.lax.dot_general(panel, ds[0], dims,
+                             preferred_element_type=jnp.float32)
+    c1 = jax.lax.dot_general(panel, ds[1], dims,
+                             preferred_element_type=jnp.float32)
+    hi_row = _hi_row_mask(base, jsw, lp_size)
+    out_ref[0] += jnp.where(hi_row, c1, c0)
+
+
+def anal_fused_mxu(f_pk, maps, x2d, pmm_pk, pms_pk, tab_pk, *, l_max, s_len,
+                   bf16=False, lp_size=128, interpret=True):
+    """MXU fused analysis (ring-contraction matmul + in-kernel rotation).
+
+    f_pk   : (n_slots, 2, R, 2K) gathered rfft rows (ring-major)
+    returns: (n_slots, S, 2K) f32 packed l-stream rows
+    """
+    n_slots, n_seg, R, K2 = f_pk.shape
+    R1 = R // 128
+    assert n_seg == 2 and R % 128 == 0 and K2 % 2 == 0
+    S = int(s_len)
+    assert S % lp_size == 0
+    grid = (n_slots, R1, S // lp_size)
+    kernel = functools.partial(_anal_fused_mxu_kernel, lp_size=lp_size,
+                               n_k=K2 // 2, bf16=bf16)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 128), lambda s, rb, sp, *_refs: (rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 4, 1, 128),
+                             lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
+                pl.BlockSpec((1, 2, 128, K2),
+                             lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, lp_size, K2),
+                                   lambda s, rb, sp, *_refs: (s, sp, 0)),
+            scratch_shapes=[
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.float32),
+                pltpu.VMEM((1, 128), jnp.int32),
+                pltpu.VMEM((lp_size, 128), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((n_slots, S, K2), jnp.float32),
+        interpret=interpret,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary")),
+    )(*maps, x2d, pmm_pk.reshape(n_slots, 2, R1, 128),
+      pms_pk.reshape(n_slots, 2, R1, 128),
+      tab_pk.reshape(n_slots, 2, 4, R1, 128), f_pk)
+
+
+# =============================================================================
+# Host chains: packing + FFT around the kernels, adjoint-paired
+# =============================================================================
+
+
+def _prep(lo, x, pmm, pms, var):
+    """Ring padding + per-slot packing shared by both directions.
+
+    ``Rf1`` is the ring-shrunk row-block count for data operands (f rows,
+    phase tables): on a single-row-block VPU grid only the rows holding
+    real rings ship to the kernel (interpret-mode block fetches are slow
+    per byte); the zero padding rows are rebuilt in-kernel (`_pad_rows`).
+    """
+    from repro.kernels import ops as kops
+    R = x.shape[0]
+    Rp = kops._pad_to(R, 1024 if var == "vpu" else 128)
+    x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
+    pmm_pk = kops._pack_rows(jnp.pad(pmm, ((0, 0), (0, Rp - R))), lo)
+    pms_pk = kops._pack_rows(jnp.pad(pms, ((0, 0), (0, Rp - R))), lo)
+    R1 = Rp // 128
+    Rf1 = kops._pad_to(R, 128) // 128 if (var == "vpu" and R1 == 8) else R1
+    return (Rp, R1, Rf1, x_p.reshape(R1, 128),
+            pmm_pk.reshape(lo.n_slots, 2, R1, 128),
+            pms_pk.reshape(lo.n_slots, 2, R1, 128))
+
+
+def _pack_tables(m_vals, phi0, n, direction, lo, Rf1):
+    """(M, 4, R) f64 rotation tables -> (n_slots, 2, 4, Rf1, 128) f32,
+    ring-shrunk to the kernels' data-operand row count."""
+    from repro.core import phase
+    from repro.kernels import ops as kops
+    tabs = phase.uniform_rotation_tables(m_vals, phi0, n, direction)
+    R = tabs.shape[-1]
+    t = jnp.asarray(np.pad(tabs, ((0, 0), (0, 0), (0, Rf1 * 128 - R))),
+                    jnp.float32)
+    return kops._pack_rows(t, lo).reshape(lo.n_slots, 2, 4, Rf1, 128)
+
+
+def _synth_chain(a, m_vals, x, pmm, pms, *, l_max, n, phi0, var, bf16, lo,
+                 lp_size, interpret):
+    """Weight-free fused synthesis: a (M, L1, 2K) f32 -> maps (R, n, K)."""
+    from repro.core import phase
+    from repro.kernels import ops as kops
+    M, L1, K2 = a.shape
+    n_k = K2 // 2
+    R = x.shape[0]
+    a_pk = kops._pack_a(a, lo)
+    Rp, R1, Rf1, x2d, pmm2, pms2 = _prep(lo, x, pmm, pms, var)
+    tab_pk = _pack_tables(m_vals, phi0, n, "synth", lo, Rf1)
+    pmaps = kops._pack_maps(lo)
+    if var == "vpu":
+        out = synth_fused_vpu(a_pk, pmaps, x2d, pmm2, pms2, tab_pk,
+                              l_max=l_max, lp_size=lp_size,
+                              interpret=interpret)
+        out = jnp.moveaxis(out, 2, -1).reshape(lo.n_slots, 2, Rp, K2)
+    else:
+        out = synth_fused_mxu(a_pk, pmaps, x2d, pmm2, pms2, tab_pk,
+                              l_max=l_max, bf16=bf16, lp_size=lp_size,
+                              interpret=interpret)
+    seg = out.reshape(lo.n_slots * 2, Rp, K2)
+    h = kops._unpack_rows(seg, lo, M)[:, :R, :]       # (M, R, 2K) H rows
+    bins, _, _ = phase.uniform_bin_maps(m_vals, n)
+    half = n // 2 + 1
+    hc = (h[..., :n_k] + 1j * h[..., n_k:]).astype(jnp.complex64)
+    H = jnp.zeros((R, half, n_k), jnp.complex64)
+    H = H.at[:, jnp.asarray(bins)].add(jnp.moveaxis(hc, 0, 1))
+    return (jnp.fft.irfft(H, n=n, axis=1) * n).astype(jnp.float32)
+
+
+def _anal_chain(maps_w, m_vals, x, pmm, pms, *, l_max, n, phi0, var, bf16,
+                lo, lp_size, interpret):
+    """Weight-free fused analysis core: (already ring-weighted) maps
+    (R, n, K) f32 -> a (M, L1, 2K) f32."""
+    from repro.core import phase
+    from repro.kernels import ops as kops
+    R = maps_w.shape[0]
+    F = jnp.fft.rfft(maps_w.astype(jnp.float32), axis=1)   # (R, half, K)
+    bins, _, _ = phase.uniform_bin_maps(m_vals, n)
+    Fm = F[:, jnp.asarray(bins), :]                        # (R, M, K)
+    f = jnp.concatenate([jnp.moveaxis(jnp.real(Fm), 1, 0),
+                         jnp.moveaxis(jnp.imag(Fm), 1, 0)],
+                        axis=-1).astype(jnp.float32)       # (M, R, 2K)
+    K2 = f.shape[-1]
+    Rp, R1, Rf1, x2d, pmm2, pms2 = _prep(lo, x, pmm, pms, var)
+    f_pk = kops._pack_rows(
+        jnp.pad(f, ((0, 0), (0, Rf1 * 128 - R), (0, 0))), lo)
+    tab_pk = _pack_tables(m_vals, phi0, n, "anal", lo, Rf1)
+    pmaps = kops._pack_maps(lo)
+    if var == "vpu":
+        fk = jnp.moveaxis(f_pk.reshape(lo.n_slots, 2, Rf1, 128, K2), -1, 2)
+        out = anal_fused_vpu(fk, pmaps, x2d, pmm2, pms2, tab_pk,
+                             l_max=l_max, s_len=lo.S, lp_size=lp_size,
+                             interpret=interpret)
+    else:
+        out = anal_fused_mxu(f_pk.reshape(lo.n_slots, 2, Rp, K2), pmaps,
+                             x2d, pmm2, pms2, tab_pk, l_max=l_max,
+                             s_len=lo.S, bf16=bf16, lp_size=lp_size,
+                             interpret=interpret)
+    return kops._unpack_alm(out, lo)
+
+
+def _resolve(m_vals, l_max, lp_size, lo, interpret):
+    from repro.kernels import pack as kpack
+    from repro.kernels.ops import should_interpret
+    if lo is None:
+        lo = kpack.build_layout(np.asarray(m_vals), l_max, lp_size=lp_size)
+    if interpret is None:
+        interpret = should_interpret()
+    return lo, interpret
+
+
+def fused_synth(a, m_vals, x, pmm, pms, *, l_max, n, phi0, variant="vpu",
+                bf16=False, lo=None, lp_size=128, interpret=None):
+    """Differentiable fused synthesis: a (M, L1, 2K) f32 -> maps (R, n, K).
+
+    Adjoint: the VJP is the per-m fac-compensated fused analysis core of
+    the (unweighted) map cotangent -- the whole-chain analogue of the
+    staged pipeline's composed transposes (fac commutes with the Legendre
+    stage because it is block-diagonal per m)."""
+    from repro.core.phase import _fac_rows
+    lo, interpret = _resolve(m_vals, l_max, lp_size, lo, interpret)
+    kw = dict(l_max=l_max, n=n, phi0=phi0, var=variant, bf16=bf16, lo=lo,
+              lp_size=lp_size, interpret=interpret)
+    fac = _fac_rows(m_vals, jnp.float32)
+
+    def fwd(res, a_):
+        x_, pmm_, pms_ = res
+        return _synth_chain(a_, m_vals, x_, pmm_, pms_, **kw)
+
+    def bwd(res, t):
+        x_, pmm_, pms_ = res
+        return fac * _anal_chain(t, m_vals, x_, pmm_, pms_, **kw)
+
+    return linear_pair(fwd, bwd, (x, pmm, pms), a)
+
+
+def fused_anal(maps, weights, m_vals, x, pmm, pms, *, l_max, n, phi0,
+               variant="vpu", bf16=False, lo=None, lp_size=128,
+               interpret=None):
+    """Differentiable fused analysis: maps (R, n, K) -> a (M, L1, 2K) f32.
+
+    Ring quadrature weights are applied to the maps *outside* the linear
+    core (they commute with the phi-axis FFT), keeping the core's adjoint
+    the weight-free fused synthesis of the fac-normalised cotangent."""
+    from repro.core.phase import _fac_rows
+    lo, interpret = _resolve(m_vals, l_max, lp_size, lo, interpret)
+    kw = dict(l_max=l_max, n=n, phi0=phi0, var=variant, bf16=bf16, lo=lo,
+              lp_size=lp_size, interpret=interpret)
+    fac = _fac_rows(m_vals, jnp.float32)
+    w = jnp.asarray(weights, jnp.float32)
+    maps_w = jnp.asarray(maps, jnp.float32) * w[:, None, None]
+
+    def fwd(res, mw):
+        x_, pmm_, pms_ = res
+        return _anal_chain(mw, m_vals, x_, pmm_, pms_, **kw)
+
+    def bwd(res, g):
+        x_, pmm_, pms_ = res
+        return _synth_chain(g / fac, m_vals, x_, pmm_, pms_, **kw)
+
+    return linear_pair(fwd, bwd, (x, pmm, pms), maps_w)

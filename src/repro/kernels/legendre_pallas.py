@@ -61,6 +61,18 @@ _CompilerParams = getattr(pltpu, "CompilerParams", None) \
     or getattr(pltpu, "TPUCompilerParams")
 
 
+def _pad_rows(blk, rf):
+    """Zero-pad a ring-shrunk operand block back to the full (..., 8, 128)
+    VPU tile.  Interpret-mode input-block fetches are slow per byte, so
+    operands whose rings fit one row block ship only their ``rf`` real
+    128-lane rows; the padding rows (pure ring padding, zero by
+    construction) are rebuilt here as cheap vector zeros."""
+    if rf == 8:
+        return blk
+    pad = blk.shape[:-2] + (8 - rf, 128)
+    return jnp.concatenate([blk, jnp.zeros(pad, blk.dtype)], axis=-2)
+
+
 def _f32_step(l, m_f, x, pp, pc, sc, pmm, pms):
     """One scaled-recurrence step, float32, branch-free.
 
@@ -487,17 +499,6 @@ def anal_vpu(dw, m_vals, x2d, pmm, pms, *, l_max, l1p, fold=False,
 # =============================================================================
 
 
-def _packed_scalars(g, m0, m1, mp0, mp1, jsw):
-    """Per-step (segment?, m, m', l) from the slot maps; all i32 scalars."""
-    hi = (g >= jsw).astype(jnp.int32)
-    m = jnp.where(hi == 1, m1, m0)
-    mp_v = jnp.where(hi == 1, mp1, mp0)
-    l00 = jnp.maximum(m0, jnp.abs(mp0))
-    l01 = jnp.maximum(m1, jnp.abs(mp1))
-    l = jnp.where(hi == 1, l01 + g - jsw, l00 + g)
-    return hi, m, mp_v, l
-
-
 def _packed_row_masks(base, jsw, m0, m1, mp0, mp1, lp_size, n_par, fold):
     """Per-panel-row (lp_size, 1) bool masks selecting each fused output
     component q = segment * n_par + parity (the MXU kernels' row splits)."""
@@ -540,27 +541,47 @@ def _synth_vpu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
     x = x_ref[...]                           # (8, 128)
     pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
     pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
-    n_q = 2 * n_par
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
+    # Split the panel at the intra-slot seam: steps below j0 serve segment
+    # 0, steps at/after j0 serve segment 1.  Each half runs a select-free
+    # body (constant m / seed operands, static output slot) instead of the
+    # per-step `where` chains over both fused rows -- those selects were
+    # eating the packed grid-step win on analysis.  The (pp, pc, sc) carry
+    # still re-seeds itself at the seam because segment 1's first step
+    # lands exactly on l == l01 (duplicate slots have jsw == S, so their
+    # segment-1 loop is empty).
+    j0 = jnp.clip(jsw - base, 0, lp_size)
 
-    def body(j, carry):
-        acc, pp, pc, sc = carry
-        g = base + j
-        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
+    def seg_body(seg, m, mp_v, l_base, pmm, pms):
         m_f = m.astype(jnp.float32)
         mp_f = mp_v.astype(jnp.float32)
-        pmm = jnp.where(hi == 1, pmm1, pmm0)
-        pms = jnp.where(hi == 1, pms1, pms0)
-        pp, pc, sc, val = _step(spin, l, m_f, mp_f, x, pp, pc, sc, pmm, pms)
-        av = a_ref[0, j, :]                  # (2K,)
-        contrib = av[:, None, None] * val[None, :, :]     # (2K, 8, 128)
-        q = hi * n_par + ((l + m) % 2 if fold else 0)
-        sel = jnp.arange(n_q, dtype=jnp.int32) == q
-        acc = acc + jnp.where(sel[:, None, None, None], contrib[None], 0.0)
-        return acc, pp, pc, sc
+        lo = seg * n_par
 
+        def body(j, carry):
+            acc, pp, pc, sc = carry
+            l = l_base + j
+            pp, pc, sc, val = _step(spin, l, m_f, mp_f, x, pp, pc, sc,
+                                    pmm, pms)
+            av = a_ref[0, j, :]              # (2K,)
+            contrib = av[:, None, None] * val[None, :, :]   # (2K, 8, 128)
+            if fold:
+                par = (l + m) % 2
+                sel = (jnp.arange(n_par, dtype=jnp.int32) == par)
+                upd = jnp.where(sel[:, None, None, None], contrib[None], 0.0)
+            else:
+                upd = contrib[None]
+            acc = acc.at[lo:lo + n_par].add(upd)
+            return acc, pp, pc, sc
+
+        return body
+
+    carry = (out_ref[0], pp_ref[...], pc_ref[...], sc_ref[...])
+    carry = jax.lax.fori_loop(
+        0, j0, seg_body(0, m0, mp0, l00 + base, pmm0, pms0), carry)
     acc, pp, pc, sc = jax.lax.fori_loop(
-        0, lp_size, body,
-        (out_ref[0], pp_ref[...], pc_ref[...], sc_ref[...]))
+        j0, lp_size, seg_body(1, m1, mp1, l01 + base - jsw, pmm1, pms1),
+        carry)
     out_ref[0] = acc
     pp_ref[...] = pp
     pc_ref[...] = pc
@@ -636,21 +657,28 @@ def _synth_mxu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
     x = x_ref[...]                           # (1, 128)
     pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
     pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
+    j0 = jnp.clip(jsw - base, 0, lp_size)    # seam split (see VPU kernel)
 
-    def gen(j, carry):
-        pp, pc, sc = carry
-        g = base + j
-        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
-        pmm = jnp.where(hi == 1, pmm1, pmm0)
-        pms = jnp.where(hi == 1, pms1, pms0)
-        pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
-                                mp_v.astype(jnp.float32), x, pp, pc, sc,
-                                pmm, pms)
-        panel_ref[pl.ds(j, 1), :] = val
-        return pp, pc, sc
+    def seg_gen(m, mp_v, l_base, pmm, pms):
+        m_f = m.astype(jnp.float32)
+        mp_f = mp_v.astype(jnp.float32)
 
+        def gen(j, carry):
+            pp, pc, sc = carry
+            pp, pc, sc, val = _step(spin, l_base + j, m_f, mp_f, x,
+                                    pp, pc, sc, pmm, pms)
+            panel_ref[pl.ds(j, 1), :] = val
+            return pp, pc, sc
+
+        return gen
+
+    carry = (pp_ref[...], pc_ref[...], sc_ref[...])
+    carry = jax.lax.fori_loop(
+        0, j0, seg_gen(m0, mp0, l00 + base, pmm0, pms0), carry)
     pp, pc, sc = jax.lax.fori_loop(
-        0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+        j0, lp_size, seg_gen(m1, mp1, l01 + base - jsw, pmm1, pms1), carry)
     pp_ref[...] = pp
     pc_ref[...] = pc
     sc_ref[...] = sc
@@ -718,7 +746,7 @@ def synth_mxu_packed(a_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, fold=False,
 def _anal_vpu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
                             x_ref, pmm_ref, pms_ref, dw_ref, out_ref,
                             pp_ref, pc_ref, sc_ref, acc_ref, *, lp_size,
-                            n_par, fold, spin):
+                            n_par, fold, spin, rf, l_max):
     si = pl.program_id(0)
     rb = pl.program_id(1)
     sp = pl.program_id(2)
@@ -738,23 +766,39 @@ def _anal_vpu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     x = x_ref[...]
-    pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
-    pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
-    dw = dw_ref[0]                           # (Q, 2K, 8, 128)
-    n_q = 2 * n_par
+    pmm = _pad_rows(pmm_ref[0], rf)          # (2, 8, 128)
+    pms = _pad_rows(pms_ref[0], rf)
+    dw = _pad_rows(dw_ref[0], rf)            # (Q, 2K, 8, 128)
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
 
+    # ONE static-bound loop with a branch-free where-selected seam (the
+    # ref oracle's schedule): a pair of dynamic-bound loops split at the
+    # seam lowers to while_loops whose per-step overhead roughly doubles
+    # the panel cost vs the plain kernel's scan; the per-step selects are
+    # a handful of (8, 128) ops and _step reseeds itself at l == l0.
     def body(j, carry):
         pp, pc, sc = carry
         g = base + j
-        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
-        pmm = jnp.where(hi == 1, pmm1, pmm0)
-        pms = jnp.where(hi == 1, pms1, pms0)
+        hi = g >= jsw
+        m = jnp.where(hi, m1, m0)
+        mp_v = jnp.where(hi, mp1, mp0)
+        l = jnp.where(hi, l01 + g - jsw, l00 + g)
+        pmm_s = jnp.where(hi, pmm[1], pmm[0])
+        pms_s = jnp.where(hi, pms[1], pms[0])
         pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
                                 mp_v.astype(jnp.float32), x, pp, pc, sc,
-                                pmm, pms)
-        q = hi * n_par + ((l + m) % 2 if fold else 0)
-        sel = jnp.arange(n_q, dtype=jnp.int32) == q
-        d = jnp.sum(jnp.where(sel[:, None, None, None], dw, 0.0), axis=0)
+                                pmm_s, pms_s)
+        # positions past the real stream (l > l_max) are padding the host
+        # unpack discards; zero them so the packed rows match the oracle
+        val = jnp.where(l <= l_max, val, 0.0)
+        if fold:
+            q = hi.astype(jnp.int32) * n_par + (l + m) % 2
+            sel = (jnp.arange(2 * n_par, dtype=jnp.int32) == q)
+            d = jnp.sum(jnp.where(sel[:, None, None, None], dw, 0.0),
+                        axis=0)
+        else:
+            d = jnp.where(hi, dw[1], dw[0])
         row = jnp.sum(d * val[None, :, :], axis=(1, 2))   # (2K,)
         acc_ref[pl.ds(j, 1), :] = row[None, :]
         return pp, pc, sc
@@ -771,19 +815,32 @@ def anal_vpu_packed(dw_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, s_len,
                     fold=False, spin=False, lp_size=128, interpret=True):
     """VPU analysis on the packed grid.
 
-    dw_pk  : (n_slots, Q, 2K, R1, 128) weighted Delta per fused component
+    dw_pk  : (n_slots, Q, 2K, Rw, 128) weighted Delta per fused component.
+             ``Rw`` is either the full ``R1`` row count of ``x2d``, or --
+             when the ring axis fits one 8-row grid block (R1 == 8) -- the
+             ring-shrunk ``ceil(R/128)`` real rows; the kernel rebuilds the
+             zero padding rows in-register (`_pad_rows`), so the slow
+             interpret-mode input fetch only ships real data.  The
+             ``pmm_pk``/``pms_pk`` seed tables (n_slots, 2, Rw, 128) shrink
+             with it (their padding entries are zero by construction).
     s_len  : packed l-stream length per slot (layout.S)
     returns: (n_slots, S, 2K) f32 packed l-stream rows
     """
-    n_slots, n_q, K2, R1 = dw_pk.shape[:4]
+    n_slots, n_q, K2, n_rows = dw_pk.shape[:4]
+    R1 = x2d.shape[0]
+    rf = n_rows if (R1 == 8 and n_rows < 8) else 8
     n_par = 2 if fold else 1
     assert n_q == 2 * n_par and R1 % 8 == 0
+    assert n_rows == (rf if rf < 8 else R1), (n_rows, R1, rf)
+    assert pmm_pk.shape[2] == pms_pk.shape[2] == n_rows, \
+        (pmm_pk.shape, n_rows)
     assert not (spin and fold), "fold is not supported on the spin path"
     S = int(s_len)
     assert S % lp_size == 0
     grid = (n_slots, R1 // 8, S // lp_size)
     kernel = functools.partial(_anal_vpu_packed_kernel, lp_size=lp_size,
-                               n_par=n_par, fold=fold, spin=spin)
+                               n_par=n_par, fold=fold, spin=spin, rf=rf,
+                               l_max=l_max)
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -791,11 +848,11 @@ def anal_vpu_packed(dw_pk, maps, x2d, pmm_pk, pms_pk, *, l_max, s_len,
             grid=grid,
             in_specs=[
                 pl.BlockSpec((8, 128), lambda s, rb, sp, *_refs: (rb, 0)),
-                pl.BlockSpec((1, 2, 8, 128),
+                pl.BlockSpec((1, 2, rf, 128),
                              lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
-                pl.BlockSpec((1, 2, 8, 128),
+                pl.BlockSpec((1, 2, rf, 128),
                              lambda s, rb, sp, *_refs: (s, 0, rb, 0)),
-                pl.BlockSpec((1, n_q, K2, 8, 128),
+                pl.BlockSpec((1, n_q, K2, rf, 128),
                              lambda s, rb, sp, *_refs: (s, 0, 0, rb, 0)),
             ],
             out_specs=pl.BlockSpec((1, lp_size, K2),
@@ -839,21 +896,28 @@ def _anal_mxu_packed_kernel(m0_ref, m1_ref, mp0_ref, mp1_ref, seed_ref,
     x = x_ref[...]                           # (1, 128)
     pmm0, pmm1 = pmm_ref[0, 0], pmm_ref[0, 1]
     pms0, pms1 = pms_ref[0, 0], pms_ref[0, 1]
+    l00 = jnp.maximum(m0, jnp.abs(mp0))
+    l01 = jnp.maximum(m1, jnp.abs(mp1))
+    j0 = jnp.clip(jsw - base, 0, lp_size)    # seam split (see VPU kernel)
 
-    def gen(j, carry):
-        pp, pc, sc = carry
-        g = base + j
-        hi, m, mp_v, l = _packed_scalars(g, m0, m1, mp0, mp1, jsw)
-        pmm = jnp.where(hi == 1, pmm1, pmm0)
-        pms = jnp.where(hi == 1, pms1, pms0)
-        pp, pc, sc, val = _step(spin, l, m.astype(jnp.float32),
-                                mp_v.astype(jnp.float32), x, pp, pc, sc,
-                                pmm, pms)
-        panel_ref[pl.ds(j, 1), :] = val
-        return pp, pc, sc
+    def seg_gen(m, mp_v, l_base, pmm, pms):
+        m_f = m.astype(jnp.float32)
+        mp_f = mp_v.astype(jnp.float32)
 
+        def gen(j, carry):
+            pp, pc, sc = carry
+            pp, pc, sc, val = _step(spin, l_base + j, m_f, mp_f, x,
+                                    pp, pc, sc, pmm, pms)
+            panel_ref[pl.ds(j, 1), :] = val
+            return pp, pc, sc
+
+        return gen
+
+    carry = (pp_ref[...], pc_ref[...], sc_ref[...])
+    carry = jax.lax.fori_loop(
+        0, j0, seg_gen(m0, mp0, l00 + base, pmm0, pms0), carry)
     pp, pc, sc = jax.lax.fori_loop(
-        0, lp_size, gen, (pp_ref[...], pc_ref[...], sc_ref[...]))
+        j0, lp_size, seg_gen(m1, mp1, l01 + base - jsw, pmm1, pms1), carry)
     pp_ref[...] = pp
     pc_ref[...] = pc
     sc_ref[...] = sc

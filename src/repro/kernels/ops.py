@@ -228,8 +228,6 @@ def _anal_packed(dw, lo, x, pmm, pms, *, l_max, fold, var, spin, lp_size,
                  interpret):
     Mp, n_par, R, K2 = dw.shape
     Rp = _pad_to(R, 1024 if var == "vpu" else 128)
-    dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
-    dw_pk = _pack_rows(dw_p, lo).reshape(lo.n_slots, 2 * n_par, Rp, K2)
     x_p = jnp.pad(jnp.asarray(x, jnp.float32), (0, Rp - R))
     pmm_pk = _pack_rows(jnp.pad(pmm, ((0, 0), (0, Rp - R))), lo)
     pms_pk = _pack_rows(jnp.pad(pms, ((0, 0), (0, Rp - R))), lo)
@@ -239,12 +237,26 @@ def _anal_packed(dw, lo, x, pmm, pms, *, l_max, fold, var, spin, lp_size,
     pms2 = pms_pk.reshape(lo.n_slots, 2, R1, 128)
     maps = _pack_maps(lo)
     if var == "vpu":
+        # Ring-shrink the data operands when the ring axis fits one grid
+        # row-block: ship only the ceil(R/128) real 128-lane rows of dw
+        # and the seed tables and let the kernel rebuild the zero padding
+        # rows in-register (the slow interpret-mode input fetch then only
+        # moves real data; same technique as kernels/fused.py).
+        rn = _pad_to(R, 128) if Rp == 1024 else Rp
+        dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, rn - R), (0, 0)))
         dwk = jnp.moveaxis(
-            dw_pk.reshape(lo.n_slots, 2 * n_par, R1, 128, K2), -1, 2)
-        out = lk.anal_vpu_packed(dwk, maps, x2d, pmm2, pms2, l_max=l_max,
+            _pack_rows(dw_p, lo).reshape(
+                lo.n_slots, 2 * n_par, rn // 128, 128, K2), -1, 2)
+        pmm2s = _pack_rows(jnp.pad(pmm, ((0, 0), (0, rn - R))), lo) \
+            .reshape(lo.n_slots, 2, rn // 128, 128)
+        pms2s = _pack_rows(jnp.pad(pms, ((0, 0), (0, rn - R))), lo) \
+            .reshape(lo.n_slots, 2, rn // 128, 128)
+        out = lk.anal_vpu_packed(dwk, maps, x2d, pmm2s, pms2s, l_max=l_max,
                                  s_len=lo.S, fold=fold, spin=spin,
                                  lp_size=lp_size, interpret=interpret)
     else:
+        dw_p = jnp.pad(dw, ((0, 0), (0, 0), (0, Rp - R), (0, 0)))
+        dw_pk = _pack_rows(dw_p, lo).reshape(lo.n_slots, 2 * n_par, Rp, K2)
         out = lk.anal_mxu_packed(dw_pk, maps, x2d, pmm2, pms2, l_max=l_max,
                                  s_len=lo.S, fold=fold, spin=spin,
                                  lp_size=lp_size, interpret=interpret)

@@ -224,6 +224,10 @@ def anal_packed_ref(dw_pk, layout, x, pmm_pk, pms_pk, *, fold: bool = False):
         pp, pc, sc = carry
         pp, pc, sc, val, hi, m, l = _packed_step_ref(
             g, maps, spin, x32, pmm_pk, pms_pk, pp, pc, sc)
+        # positions past the real stream (l > l_max) are padding the host
+        # unpack discards; the vpu kernel stops its loops there, so the
+        # oracle zeroes them to stay bit-matched
+        val = jnp.where(l <= layout.l_max, val, 0.0)
         q = hi * n_par + ((l + m) % 2 if fold else 0)  # (n_slots, 1)
         d = jnp.take_along_axis(dw_pk, q[:, :, None, None], axis=1)[:, 0]
         row = jnp.einsum("sr,srk->sk", val, d)

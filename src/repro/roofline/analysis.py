@@ -154,7 +154,7 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
                      n_phi: int, K: int, direction: str = "synth",
                      hw: Hardware = HW_V5E, n_devices: int = 1,
                      fft_lengths=None, spin: int = 0, layout: str = None,
-                     lp_size: int = 128) -> float:
+                     lp_size: int = 128, pipeline: str = "staged") -> float:
     """Predicted seconds for one transform on ``backend`` (3-term model).
 
     compute = recurrence/vector + accumulation/(matrix or vector) + fft;
@@ -169,12 +169,24 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
     Legendre terms by that grid's executed-step overhead over the ideal
     triangular count (`legendre_panel_counts`), so the packed-vs-plain
     dispatch decision is modelled honestly.
+
+    ``pipeline="fused"`` (pallas backends only) models the single-kernel
+    Legendre+phase pipeline (`repro.kernels.fused`): the intermediate
+    Delta block never round-trips HBM, so its bytes term is dropped --
+    the fused pipeline's advantage in this model is purely the removed
+    memory traffic (the flop terms are identical).
     """
     if backend not in BACKEND_MODELS:
         raise ValueError(f"unknown backend {backend!r}")
+    if pipeline not in ("staged", "fused"):
+        raise ValueError(f"unknown pipeline {pipeline!r}")
     m = BACKEND_MODELS[backend]
     w = sht_work(l_max, m_max, n_rings, n_phi, K, fft_lengths=fft_lengths,
                  spin=spin)
+    byts = w["bytes"]
+    if pipeline == "fused" and backend.startswith("pallas"):
+        ncomp = 1 if spin == 0 else 2
+        byts -= 16.0 * (m_max + 1) * n_rings * K * ncomp   # Delta stays on-chip
     leg_scale = 1.0
     if layout in ("plain", "packed") and backend.startswith("pallas"):
         pc = w["panels"] if lp_size == 128 else legendre_panel_counts(
@@ -190,7 +202,7 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
         t += w["accum_flops"] * leg_scale / (hw.peak_flops * m.matrix_eff)
     else:
         t += w["accum_flops"] * leg_scale / vec_rate
-    t += w["bytes"] / hw.hbm_bw
+    t += byts / hw.hbm_bw
     if backend == "dist" and n_devices > 1:
         t /= n_devices
         # one tiled all_to_all of the (M, R, ncomp*2K) Delta block

@@ -111,6 +111,7 @@ class PlanPool:
         return plan
 
     def stats(self) -> dict:
+        from repro.roofline import chardb
         with self._lock:
             total = self.hits + self.misses
             return {
@@ -121,4 +122,7 @@ class PlanPool:
                 "evictions": self.evictions,
                 "warmups": self.warmups,
                 "hit_rate": (self.hits / total) if total else float("nan"),
+                # autotune corners behind the pooled plans: a warm pool
+                # should show reuse, not re-measurement
+                "chardb": chardb.stats(),
             }

@@ -224,8 +224,9 @@ def test_describe_well_formed():
         assert all(d["predicted_s"][b][direction] > 0
                    for direction in ("synth", "anal"))
         if b.startswith("pallas"):
-            # pallas candidates carry the packed-vs-plain layout decision
-            assert d["predicted_s"][b]["synth_layout"] in ("packed", "plain")
+            # pallas candidates carry the packed/plain/fused layout decision
+            assert d["predicted_s"][b]["synth_layout"] in (
+                "packed", "plain", "fused")
         for direction in ("synth", "anal"):
             assert direction in d["measured_s"][b]
     assert d["memory"]["total_bytes"] > 0
