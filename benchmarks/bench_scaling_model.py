@@ -31,6 +31,20 @@ def main():
             c = CM.crossover_nproc(nside, params)
             emit(f"scaling-model/{params.name}/crossover/nside{nside}",
                  0.0, f"crossover_nproc={c}")
+        # overlapped-pipeline model: chunked exchange hides min(comp, comm)
+        # behind the adjacent chunks' compute (PR 8); the `hidden` rows
+        # carry the realised hidden fraction as the numeric value so the
+        # check.sh gate can assert the comm-bound corners stay > 0.5
+        for nside, p in ((1024, 256), (2048, 512), (4096, 1024)):
+            t = CM.sht_times_overlap(nside, p, params)
+            emit(f"scaling-model/overlap/{params.name}/nside{nside}/p{p}",
+                 t["overlap"] * 1e6,
+                 f"C={t['chunks']} serial={t['serial']*1e6:.0f}us "
+                 f"hidden_frac={t['hidden_frac']:.3f}")
+            emit(f"scaling-model/overlap/hidden/{params.name}"
+                 f"/nside{nside}/p{p}", t["hidden_frac"],
+                 f"C={t['chunks']} of hideable min(comp,comm)"
+                 f"={min(t['compute'], t['comm'])*1e6:.0f}us")
 
 
 if __name__ == "__main__":

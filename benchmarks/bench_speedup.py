@@ -7,6 +7,9 @@ amortisation (the MXU story at the algorithmic level).  Every engine is
 reached through the unified Plan API -- no hand-wired kernels.
 
 Columns: name, us_per_call (optimised path), derived = speedup vs baseline.
+Every ratio comes from ONE paired interleaved loop (`common.time_pair`):
+independent timings drift 30-40% between runs on a noisy host, which made
+the old A/B ratios meaningless.
 """
 
 import jax
@@ -14,15 +17,9 @@ import jax.numpy as jnp
 
 import repro
 from repro.core import sht
-from benchmarks.common import emit, smoke, time_call
+from benchmarks.common import emit, smoke, time_pair
 
 KEY = jax.random.PRNGKey(3)
-
-
-def _plan_times(plan, alm, maps):
-    ts = time_call(plan.alm2map, alm, iters=2)
-    ta = time_call(plan.map2alm, maps, iters=2)
-    return ts, ta
 
 
 def main():
@@ -31,14 +28,16 @@ def main():
         base = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64",
                                mode="jnp")
         maps64 = base.alm2map(alm64)
-        tb_s, tb_a = _plan_times(base, alm64, maps64)
 
         alm32 = alm64.astype(jnp.complex64)
         maps32 = jnp.asarray(maps64, jnp.float32)
         for mode in ("jnp", "pallas_vpu", "pallas_mxu"):
             p = repro.make_plan("gl", l_max=l_max, K=1, dtype="float32",
                                 mode=mode)
-            ts, ta = _plan_times(p, alm32, maps32)
+            tb_s, ts = time_pair(lambda: base.alm2map(alm64),
+                                 lambda: p.alm2map(alm32), iters=2)
+            tb_a, ta = time_pair(lambda: base.map2alm(maps64),
+                                 lambda: p.map2alm(maps32), iters=2)
             emit(f"speedup/{mode}-f32-synth/lmax{l_max}", ts * 1e6,
                  f"x{tb_s / ts:.2f} vs f64 jnp")
             emit(f"speedup/{mode}-f32-anal/lmax{l_max}", ta * 1e6,
@@ -47,21 +46,24 @@ def main():
         # fold optimisation through the plan layer (synthesis only)
         pf = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64",
                              mode="jnp", fold=True)
-        tf_s = time_call(pf.alm2map, alm64, iters=2)
+        tb_s, tf_s = time_pair(lambda: base.alm2map(alm64),
+                               lambda: pf.alm2map(alm64), iters=2)
         emit(f"speedup/fold-vs-unfold/lmax{l_max}", tf_s * 1e6,
              f"x{tb_s / tf_s:.2f}")
 
     # batched-K amortisation: per-map time shrinks as K grows because
     # P_lm generation is shared across the Monte-Carlo batch.
     l_max = 32 if smoke() else 128
-    t1 = None
+    alm1 = sht.random_alm(KEY, l_max, l_max, K=1)
+    p1 = repro.make_plan("gl", l_max=l_max, K=1, dtype="float64", mode="jnp")
     for K in ((1, 4) if smoke() else (1, 4, 16)):
         alm = sht.random_alm(KEY, l_max, l_max, K=K)
         p = repro.make_plan("gl", l_max=l_max, K=K, dtype="float64",
                             mode="jnp")
-        t = time_call(p.alm2map, alm, iters=2)
+        t1, t = time_pair(lambda: p1.alm2map(alm1),
+                          lambda: p.alm2map(alm), iters=2)
         if K == 1:
-            t1 = t
+            t1 = t          # same plan: the ratio is 1.0 by definition
         emit(f"speedup/batched-K{K}/lmax{l_max}", t / K * 1e6,
              f"per-map x{t1 / (t / K):.2f} vs K=1")
 

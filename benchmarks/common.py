@@ -49,6 +49,28 @@ def time_pair(fn_a, fn_b, warmup=1, iters=3):
     return float(np.median(ta)), float(np.median(tb))
 
 
+def time_multi(fns, warmup=1, iters=3):
+    """Group-interleaved wall times -> {key: median_seconds}.
+
+    `time_pair` for N alternatives: ``fns`` is ``{key: callable}``; every
+    iteration runs each callable once, in dict order, so all candidates see
+    the same host drift and their ratios stay meaningful.  Used by the
+    dist overlap bench, where ``speedup = t[baseline] / min(t.values())``
+    is >= 1.0 by construction whenever the baseline is in the candidate
+    set.
+    """
+    for _ in range(warmup):
+        for fn in fns.values():
+            jax.block_until_ready(fn())
+    ts = {k: [] for k in fns}
+    for _ in range(iters):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            ts[k].append(time.perf_counter() - t0)
+    return {k: float(np.median(v)) for k, v in ts.items()}
+
+
 #: every emit() row of the current process, collected so benchmarks/run.py
 #: can write its machine-readable BENCH_<date>.json summary
 ROWS: list = []

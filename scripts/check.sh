@@ -156,6 +156,25 @@ b16 = {k: v for k, v in rows.items()
 assert b16, "bf16_err rows missing"
 assert all(0.0 < v < 1e-2 for v in b16.values()), \
     f"bf16 error band broken: {b16}"
+# chunked-exchange overlap (PR 8): the measured dist speedup rows must
+# land and never lose to the monolithic baseline (C=1 is always in the
+# candidate set, so < 1.0 means the bench or the pipeline broke)
+ov = {k: v for k, v in rows.items() if k.startswith("dist/overlap_speedup/")}
+assert "dist/overlap_speedup/synth" in ov, "dist overlap speedup row missing"
+assert all(isinstance(v, (int, float)) and math.isfinite(v)
+           for v in ov.values()), f"non-numeric overlap rows: {ov}"
+assert ov["dist/overlap_speedup/synth"] >= 1.0, \
+    f"chunked exchange lost to monolithic: {ov}"
+# modelled overlap rows: present, numeric, and the comm-bound TPU corner
+# must hide more than half of the hideable time
+model_ov = {k: v for k, v in rows.items()
+            if k.startswith("scaling-model/overlap/")}
+assert model_ov, "scaling-model overlap rows missing"
+assert all(isinstance(v, (int, float)) and math.isfinite(v)
+           for v in model_ov.values()), f"non-numeric model rows: {model_ov}"
+hidden = rows.get("scaling-model/overlap/hidden/tpu-v5e/nside4096/p1024")
+assert hidden is not None, "tpu-v5e nside4096/p1024 hidden-frac row missing"
+assert hidden > 0.5, f"modelled hidden-comm fraction regressed: {hidden}"
 # serving trajectory: throughput + tail-latency rows must keep landing
 for prefix in ("serve/throughput/", "serve/p99/"):
     hits = [k for k in rows if k.startswith(prefix)]
@@ -168,7 +187,9 @@ for key in ("git_rev", "jax_version", "generated_utc"):
     assert d.get(key), f"missing {key} in {path}"
 print(f"bench JSON OK: {len(rows)} rows, panels_ratio(lmax512)="
       f"{ratio:.2f}, fused_synth_min={min(fs):.2f}, "
-      f"packed_anal_min={min(pa):.2f}")
+      f"packed_anal_min={min(pa):.2f}, "
+      f"overlap_speedup={ov['dist/overlap_speedup/synth']:.2f}, "
+      f"hidden_frac(tpu-v5e,4096/1024)={hidden:.2f}")
 PY
 rm -f "$BENCH_OUT"
 

@@ -15,7 +15,7 @@ import dataclasses
 import numpy as np
 
 __all__ = ["CommParams", "MPICH_CLUSTER", "TPU_V5E_ICI", "sht_times",
-           "crossover_nproc"]
+           "sht_times_overlap", "best_chunks", "crossover_nproc"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -96,6 +96,60 @@ def sht_times(n_side: int, n_proc: int, p: CommParams,
     comm = t_comm(r_n, m_max, n_proc, p)
     return {"compute": comp, "comm": comm, "total": comp + comm,
             "msg_bytes": message_size(r_n, m_max, n_proc)}
+
+
+def sht_times_overlap(n_side: int, n_proc: int, p: CommParams,
+                      chunks: int | None = None, l_max: int | None = None,
+                      fold: bool = False, max_chunks: int = 256) -> dict:
+    """Chunked-exchange pipeline model (the comm/compute-overlap analogue
+    of the paper's eq. 16-17 serial sum).
+
+    The Delta block is split into C chunks; chunk i's collective is
+    issued while chunk i+1 computes, so the steady state advances at
+    ``max(comp_chunk, comm_chunk)`` per chunk with one compute chunk of
+    pipeline *fill* and one comm chunk of *drain*:
+
+        t_overlap = comp/C + comm_chunk + (C-1) * max(comp/C, comm_chunk)
+        comm_chunk = comm/C + alpha        (chunking splits the payload;
+                                            every extra chunk pays one more
+                                            collective-launch latency)
+
+    ``chunks=None`` scans powers of two up to ``max_chunks`` and keeps the
+    argmin.  ``hidden_frac`` reports the realised fraction of the
+    *hideable* time ``min(comp, comm)`` -- the serial term a perfect
+    pipeline removes from the critical path (in the communication-bound
+    regime the paper's Fig. 4 predicts everywhere at scale, that is the
+    whole compute stage disappearing behind the wire).
+    """
+    base = sht_times(n_side, n_proc, p, l_max=l_max, fold=fold)
+    comp, comm = base["compute"], base["comm"]
+    serial = comp + comm
+
+    def total(c: int) -> float:
+        if c <= 1 or n_proc <= 1 or comm <= 0.0:
+            return serial
+        comp_c = comp / c
+        comm_c = comm / c + p.alpha
+        return comp_c + comm_c + (c - 1) * max(comp_c, comm_c)
+
+    if chunks is None:
+        cands = [1 << k for k in range(0, 17) if (1 << k) <= max_chunks]
+        chunks = min(cands, key=total)
+    chunks = max(1, int(chunks))
+    t = total(chunks)
+    hideable = min(comp, comm)
+    hidden = max(0.0, serial - t)
+    return {**base, "chunks": chunks, "serial": serial, "overlap": t,
+            "total": t, "hidden": hidden,
+            "hidden_frac": hidden / hideable if hideable > 0 else 0.0}
+
+
+def best_chunks(n_side: int, n_proc: int, p: CommParams,
+                max_chunks: int = 256, l_max: int | None = None,
+                fold: bool = False) -> int:
+    """Model-optimal chunk count (argmin of `sht_times_overlap`)."""
+    return int(sht_times_overlap(n_side, n_proc, p, chunks=None, l_max=l_max,
+                                 fold=fold, max_chunks=max_chunks)["chunks"])
 
 
 def crossover_nproc(n_side: int, p: CommParams, n_max: int = 1 << 16) -> int:

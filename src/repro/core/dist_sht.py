@@ -21,6 +21,19 @@ Design notes (DESIGN.md §2):
   the paper explicitly leaves lossy-compressed communication to future work
   (§4.1.2); we implement it and measure the accuracy cost in tests.
 * `stage1` selects the jnp reference path or the Pallas kernel path.
+* `comm_chunks = C > 1` replaces the monolithic exchange with a chunked,
+  software-pipelined one: the Delta block is split into C chunks along the
+  K map-batch axis (or the local m rows when K is too small, see
+  `SHTPlan.chunk_schedule`), and each chunk runs its own stage-1 compute +
+  all_to_all.  The chunks are data-independent, so XLA's latency-hiding
+  scheduler can keep chunk i's collective in flight while chunk i+1's
+  Legendre recurrence (synthesis) or chunk i-1's projection (analysis)
+  computes -- the libsharp-style comm/compute overlap the scaling model
+  says the distributed path is starved for.  Chunking is a pure
+  reordering of independent per-(m, k) work: outputs are bit-identical to
+  the monolithic path (tests/helpers/dist_chunk_check.py), and every
+  chunk exchange is still `lax.all_to_all`, so the adjoint contract
+  (transposed reverse exchange) survives unchanged.
 * Both transforms are differentiable inside shard_map: stage 1 and the
   phase stage carry adjoint-based custom VJP/JVP rules (linear_call
   transposes), and `lax.all_to_all` transposes to the reverse exchange --
@@ -69,12 +82,21 @@ class DistSHT:
     fold: bool = False
     comm_dtype: Optional[str] = None      # e.g. "bfloat16" for compressed Delta
     stage1: str = "jnp"                    # "jnp" | "pallas"
+    comm_chunks: Optional[int] = None      # None -> plan.comm_chunks; C>1 =
+                                           # chunked pipelined exchange
 
     def __post_init__(self):
         n = int(np.prod([self.mesh.shape[a] for a in self.axis_names]))
         assert n == self.plan.n_shards, (n, self.plan.n_shards)
         if self.fold:
             assert self.plan.grid.equator_symmetric
+        assert self._comm_chunks >= 1, self.comm_chunks
+
+    @property
+    def _comm_chunks(self) -> int:
+        c = self.plan.comm_chunks if self.comm_chunks is None \
+            else self.comm_chunks
+        return max(1, int(c))
 
     # -- shardings -------------------------------------------------------------
 
@@ -226,11 +248,21 @@ class DistSHT:
     # -- collective ---------------------------------------------------------------
 
     def _exchange(self, x, *, to_rings: bool):
-        """The paper's single global communication step.
+        """The paper's global communication step (one per chunk).
 
         to_rings:  (m_local, R_pad, C) -> (Mp, r_local, C)
         else:      (Mp, r_local, C)    -> (m_local, R_pad, C)
         """
+        n = self.plan.n_shards
+        split_axis = 1 if to_rings else 0
+        what = "dealt ring-pair slot" if to_rings else "dealt m-row slot"
+        if x.shape[split_axis] % n != 0:
+            raise ValueError(
+                f"all_to_all(tiled=True) needs the {what} count to be a "
+                f"multiple of the device count: axis {split_axis} has "
+                f"{x.shape[split_axis]} slots but the mesh "
+                f"{dict(self.mesh.shape)} spans {n} devices over axes "
+                f"{self.axis_names} (shape {x.shape})")
         if self.comm_dtype is not None:
             x = x.astype(self.comm_dtype)
         if to_rings:
@@ -240,6 +272,41 @@ class DistSHT:
             out = jax.lax.all_to_all(x, self._axis, split_axis=0,
                                      concat_axis=1, tiled=True)
         return out.astype(self.dtype)
+
+    # -- chunked pipelined exchange helpers ----------------------------------
+    #
+    # Each chunk is an independent (stage-1 compute, all_to_all) pair: the
+    # loops below emit C data-independent collectives interleaved with the
+    # adjacent chunks' compute, which is exactly the dependence structure an
+    # async/latency-hiding scheduler needs to keep the wire and the ALUs
+    # busy at the same time.  Numerically this is a pure reordering of
+    # per-(m, k)-independent work, so results match the monolithic path
+    # bit-for-bit.
+
+    def _schedule(self, K: int, ncomp: int = 1):
+        return self.plan.chunk_schedule(K, ncomp=ncomp,
+                                        chunks=self._comm_chunks)
+
+    def _merge_m_chunks(self, parts):
+        """Exchanged m-chunks [(n*mc_j, r_local, C)] -> (Mp, r_local, C).
+
+        Each chunk's global rows are shard-major over that chunk's slice
+        of the local m rows; re-interleave so the full plan slot order
+        (shard-major over m_local) is restored exactly.
+        """
+        n = self.plan.n_shards
+        segs = [p.reshape((n, p.shape[0] // n) + p.shape[1:]) for p in parts]
+        cat = jnp.concatenate(segs, axis=1)
+        return cat.reshape((n * cat.shape[1],) + cat.shape[2:])
+
+    def _split_m_chunk(self, packed, m0: int, m1: int):
+        """(Mp, r_local, C) plan-order rows -> the (n*(m1-m0), r_local, C)
+        block holding local rows [m0, m1) of every shard (inverse of one
+        `_merge_m_chunks` segment)."""
+        n = self.plan.n_shards
+        g = packed.reshape((n, packed.shape[0] // n) + packed.shape[1:])
+        piece = g[:, m0:m1]
+        return piece.reshape((n * (m1 - m0),) + packed.shape[1:])
 
     # -- public transforms ---------------------------------------------------------
 
@@ -279,15 +346,69 @@ class DistSHT:
     def _build_uncached(self, K: int):
         consts = self._consts()
         synth_ops, anal_ops = consts["synth_ops"], consts["anal_ops"]
+        axis, bounds = self._schedule(K)
 
         def synth_shard(a_re, a_im, m_loc, phi0_loc, valid_loc, *fft_ops):
-            d_re, d_im = self._stage1_synth(a_re, a_im, m_loc)
-            packed = jnp.concatenate([d_re, d_im], axis=-1)     # (m_local, R_pad, 2K)
-            packed = self._exchange(packed, to_rings=True)       # (Mp, r_local, 2K)
-            d_re, d_im = packed[..., :K], packed[..., K:]
+            if axis == "k":
+                # chunk i's collective is issued while chunk i+1's Legendre
+                # recurrence runs (the chunks share no data)
+                parts = []
+                for k0, k1 in bounds:
+                    d_re, d_im = self._stage1_synth(
+                        a_re[..., k0:k1], a_im[..., k0:k1], m_loc)
+                    parts.append(self._exchange(
+                        jnp.concatenate([d_re, d_im], axis=-1),
+                        to_rings=True))                 # (Mp, r_local, 2kc)
+                d_re = jnp.concatenate(
+                    [p[..., : p.shape[-1] // 2] for p in parts], axis=-1)
+                d_im = jnp.concatenate(
+                    [p[..., p.shape[-1] // 2:] for p in parts], axis=-1)
+            elif axis == "m":
+                parts = []
+                for m0, m1 in bounds:
+                    d_re, d_im = self._stage1_synth(
+                        a_re[m0:m1], a_im[m0:m1], m_loc[m0:m1])
+                    parts.append(self._exchange(
+                        jnp.concatenate([d_re, d_im], axis=-1),
+                        to_rings=True))              # (n*mc, r_local, 2K)
+                packed = self._merge_m_chunks(parts)   # (Mp, r_local, 2K)
+                d_re, d_im = packed[..., :K], packed[..., K:]
+            else:
+                d_re, d_im = self._stage1_synth(a_re, a_im, m_loc)
+                packed = jnp.concatenate([d_re, d_im], axis=-1)  # (m_local, R_pad, 2K)
+                packed = self._exchange(packed, to_rings=True)   # (Mp, r_local, 2K)
+                d_re, d_im = packed[..., :K], packed[..., K:]
             return self._synth_fft(d_re, d_im, phi0_loc, valid_loc, fft_ops)
 
         def anal_shard(maps_loc, m_loc, phi0_loc, w_loc, *fft_ops):
+            if axis == "k":
+                # chunk i's collective overlaps chunk i-1's projection and
+                # chunk i+1's FFT
+                res = []
+                for k0, k1 in bounds:
+                    dw_re, dw_im = self._anal_fft(
+                        maps_loc[..., k0:k1], phi0_loc, w_loc, fft_ops)
+                    packed = self._exchange(
+                        jnp.concatenate([dw_re, dw_im], axis=-1),
+                        to_rings=False)              # (m_local, R_pad, 2kc)
+                    kc = k1 - k0
+                    res.append(self._stage1_anal(
+                        packed[..., :kc], packed[..., kc:], m_loc))
+                return (jnp.concatenate([r[0] for r in res], axis=-1),
+                        jnp.concatenate([r[1] for r in res], axis=-1))
+            if axis == "m":
+                dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc,
+                                              fft_ops)
+                full = jnp.concatenate([dw_re, dw_im], axis=-1)  # (Mp, r, 2K)
+                res = []
+                for m0, m1 in bounds:
+                    packed = self._exchange(
+                        self._split_m_chunk(full, m0, m1),
+                        to_rings=False)                  # (mc, R_pad, 2K)
+                    res.append(self._stage1_anal(
+                        packed[..., :K], packed[..., K:], m_loc[m0:m1]))
+                return (jnp.concatenate([r[0] for r in res], axis=0),
+                        jnp.concatenate([r[1] for r in res], axis=0))
             dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc, fft_ops)
             packed = jnp.concatenate([dw_re, dw_im], axis=-1)    # (Mp, r_local, 2K)
             packed = self._exchange(packed, to_rings=False)      # (m_local, R_pad, 2K)
@@ -318,25 +439,77 @@ class DistSHT:
         assert not self.fold, "fold is not supported for spin transforms"
         consts = self._consts()
         synth_ops, anal_ops = consts["synth_ops"], consts["anal_ops"]
+        # the (Q, U) pair is coupled through the Wigner lambda^{+/-} pair,
+        # so chunk boundaries ride the K axis only (ncomp channels stay
+        # inside each chunk) -- or fall back to m rows for small K.
+        axis, bounds = self._schedule(K, ncomp=2)
 
-        def synth_shard(e_re, e_im, b_re, b_im, m_loc, phi0_loc, valid_loc,
-                        *fft_ops):
+        def _synth_one(e_re, e_im, b_re, b_im, m_loc):
+            """Stage 1 + exchange for one chunk -> packed (Mp, r, 4kc)."""
             dq_re, dq_im, du_re, du_im = self._stage1_synth_spin(
                 e_re, e_im, b_re, b_im, m_loc)
             packed = jnp.concatenate([dq_re, du_re, dq_im, du_im],
-                                     axis=-1)             # (m_local, R_pad, 4K)
-            packed = self._exchange(packed, to_rings=True)  # (Mp, r_local, 4K)
-            d_re, d_im = packed[..., :2 * K], packed[..., 2 * K:]
+                                     axis=-1)          # (m_local, R_pad, 4kc)
+            return self._exchange(packed, to_rings=True)
+
+        def synth_shard(e_re, e_im, b_re, b_im, m_loc, phi0_loc, valid_loc,
+                        *fft_ops):
+            if axis == "k":
+                parts = [_synth_one(e_re[..., k0:k1], e_im[..., k0:k1],
+                                    b_re[..., k0:k1], b_im[..., k0:k1], m_loc)
+                         for k0, k1 in bounds]
+                quad = [[p.reshape(p.shape[:-1] + (4, p.shape[-1] // 4))
+                         [..., c, :] for p in parts] for c in range(4)]
+                d_re = jnp.concatenate(quad[0] + quad[1], axis=-1)  # [Q|U] re
+                d_im = jnp.concatenate(quad[2] + quad[3], axis=-1)  # [Q|U] im
+            elif axis == "m":
+                parts = [_synth_one(e_re[m0:m1], e_im[m0:m1], b_re[m0:m1],
+                                    b_im[m0:m1], m_loc[m0:m1])
+                         for m0, m1 in bounds]
+                packed = self._merge_m_chunks(parts)     # (Mp, r_local, 4K)
+                d_re, d_im = packed[..., :2 * K], packed[..., 2 * K:]
+            else:
+                packed = _synth_one(e_re, e_im, b_re, b_im, m_loc)
+                d_re, d_im = packed[..., :2 * K], packed[..., 2 * K:]
             return self._synth_fft(d_re, d_im, phi0_loc, valid_loc, fft_ops)
+
+        def _anal_one(maps_c, kc, m_loc, phi0_loc, w_loc, fft_ops):
+            """FFT + exchange + stage 1 for one (r_local, n_phi, 2kc) chunk."""
+            dw_re, dw_im = self._anal_fft(maps_c, phi0_loc, w_loc, fft_ops)
+            packed = jnp.concatenate([dw_re, dw_im], axis=-1)  # (Mp, r, 4kc)
+            packed = self._exchange(packed, to_rings=False)
+            dq_re, du_re = packed[..., :kc], packed[..., kc:2 * kc]
+            dq_im, du_im = packed[..., 2 * kc:3 * kc], packed[..., 3 * kc:]
+            return self._stage1_anal_spin(dq_re, dq_im, du_re, du_im, m_loc)
 
         def anal_shard(maps_loc, m_loc, phi0_loc, w_loc, *fft_ops):
             # maps_loc: (r_local, n_phi, 2K) = [Q | U] channels
-            dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc, fft_ops)
-            packed = jnp.concatenate([dw_re, dw_im], axis=-1)   # (Mp, r, 4K)
-            packed = self._exchange(packed, to_rings=False)  # (m_local, R_pad, 4K)
-            dq_re, du_re = packed[..., :K], packed[..., K:2 * K]
-            dq_im, du_im = packed[..., 2 * K:3 * K], packed[..., 3 * K:]
-            return self._stage1_anal_spin(dq_re, dq_im, du_re, du_im, m_loc)
+            if axis == "k":
+                res = []
+                for k0, k1 in bounds:
+                    maps_c = jnp.concatenate(
+                        [maps_loc[..., k0:k1], maps_loc[..., K + k0:K + k1]],
+                        axis=-1)
+                    res.append(_anal_one(maps_c, k1 - k0, m_loc, phi0_loc,
+                                         w_loc, fft_ops))
+                return tuple(jnp.concatenate([r[c] for r in res], axis=-1)
+                             for c in range(4))
+            if axis == "m":
+                dw_re, dw_im = self._anal_fft(maps_loc, phi0_loc, w_loc,
+                                              fft_ops)
+                full = jnp.concatenate([dw_re, dw_im], axis=-1)  # (Mp, r, 4K)
+                res = []
+                for m0, m1 in bounds:
+                    packed = self._exchange(
+                        self._split_m_chunk(full, m0, m1), to_rings=False)
+                    dq_re, du_re = packed[..., :K], packed[..., K:2 * K]
+                    dq_im = packed[..., 2 * K:3 * K]
+                    du_im = packed[..., 3 * K:]
+                    res.append(self._stage1_anal_spin(
+                        dq_re, dq_im, du_re, du_im, m_loc[m0:m1]))
+                return tuple(jnp.concatenate([r[c] for r in res], axis=0)
+                             for c in range(4))
+            return _anal_one(maps_loc, K, m_loc, phi0_loc, w_loc, fft_ops)
 
         spec = self._spec_sharded()
         synth = jax.jit(compat.shard_map(

@@ -61,12 +61,20 @@ def minmax_m_order(m_max: int) -> np.ndarray:
 
 @dataclasses.dataclass(frozen=True)
 class SHTPlan:
-    """Distribution plan for a (grid, l_max, m_max, n_shards) problem."""
+    """Distribution plan for a (grid, l_max, m_max, n_shards) problem.
+
+    ``comm_chunks`` is the default chunk count of the chunked-exchange
+    pipeline (`DistSHT` overrides it per engine): the Delta block is
+    split into C chunks so each chunk's all_to_all overlaps the adjacent
+    chunk's Legendre/FFT compute.  ``chunk_schedule`` resolves which axis
+    the split rides on for a given K.
+    """
 
     grid: RingGrid
     l_max: int
     m_max: int
     n_shards: int
+    comm_chunks: int = 1
 
     # ---- m axis ------------------------------------------------------------
 
@@ -133,6 +141,36 @@ class SHTPlan:
             out[idx] = packed[valid]
             return out
         return out.at[xp.asarray(idx)].set(packed[xp.asarray(valid)])
+
+    # ---- chunked-exchange dealing -------------------------------------------
+
+    def chunk_schedule(self, K: int, ncomp: int = 1,
+                       chunks: int | None = None) -> tuple[str, tuple]:
+        """Resolve the chunked-exchange split for a C-chunk pipeline.
+
+        Returns ``(axis, bounds)`` where ``axis`` is ``"none"`` (C=1,
+        monolithic exchange), ``"k"`` (split the K map-batch axis -- the
+        ``ncomp`` spin components and the re/im pair ride *inside* each
+        chunk, so chunk boundaries never cut a coupled channel group), or
+        ``"m"`` (K too small: split the local m rows instead), and
+        ``bounds`` is a tuple of half-open ``(start, stop)`` index pairs
+        along that axis.  C is clamped to what the chosen axis can carry;
+        pure host-side arithmetic (no jax).
+        """
+        C = int(self.comm_chunks if chunks is None else chunks)
+        if C <= 1:
+            return "none", ()
+        if K >= C:
+            axis, n = "k", int(K)
+        else:
+            axis, n = "m", int(self.m_local)
+            C = min(C, n)
+            if C <= 1:
+                return "none", ()
+        edges = np.linspace(0, n, C + 1).astype(np.int64)
+        bounds = tuple((int(a), int(b)) for a, b in zip(edges[:-1], edges[1:]))
+        assert all(b > a for a, b in bounds), bounds
+        return axis, bounds
 
     # ---- ring axis -----------------------------------------------------------
 

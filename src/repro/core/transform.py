@@ -199,7 +199,8 @@ class Plan:
     def __init__(self, grid: RingGrid, l_max: int, m_max: int, K: int,
                  dtype: str, *, mode: str, fold: bool, spin: int,
                  cache_kind: str, cache_dir: Optional[str],
-                 n_shards: Optional[int], signature_key: str):
+                 n_shards: Optional[int], signature_key: str,
+                 comm_chunks: Union[int, str] = "auto"):
         self.grid = grid
         self.l_max = int(l_max)
         self.m_max = int(m_max)
@@ -218,13 +219,18 @@ class Plan:
         self._m_vals = np.arange(self.m_max + 1)
         self._seeds_cache: Optional[tuple] = None
         self._seeds_spin_cache: Optional[tuple] = None
-        self._dist = None
+        self._dists: dict = {}          # comm_chunks C -> DistSHT engine
+        self._dist_splan = None
+        self._comm_spec = comm_chunks   # "auto" or a forced chunk count
         self._compiled: dict = {}
         self.backends: dict = {}
         #: Legendre layout per direction (pallas backends only; None
         #: elsewhere): "packed" / "plain" staged grids, or "fused" -- the
         #: single-kernel Legendre+phase pipeline (kernels/fused.py).
         self.layouts: dict = {}
+        #: Exchange chunk count per direction (dist backend only; None
+        #: elsewhere): C > 1 runs the chunked pipelined all_to_all.
+        self.comm_chunks: dict = {}
         self.candidates: list[str] = []
         self.skipped: dict = {}
         self.predicted_s: dict = {}
@@ -294,26 +300,36 @@ class Plan:
                                   m2, mp2)
         return self._seeds_spin_cache
 
-    def _dist_engine(self):
-        if self._dist is None:
+    def _dist_engine(self, comm_chunks: int = 1):
+        """The distributed engine for one exchange chunk count (engines are
+        cached per C; the dealing plan and mesh are shared)."""
+        C = max(1, int(comm_chunks))
+        if C not in self._dists:
             from repro.core.dist_sht import DistSHT
             from repro.core.plan import SHTPlan
             n = self._n_shards or jax.device_count()
-            mesh = jax.make_mesh((n,), ("sht",))
-            splan = SHTPlan(self.grid, self.l_max, self.m_max, n)
+            if self._dist_splan is None:
+                self._dist_splan = (jax.make_mesh((n,), ("sht",)),
+                                    SHTPlan(self.grid, self.l_max,
+                                            self.m_max, n))
+            mesh, splan = self._dist_splan
             stage1 = "pallas" if self.dtype == "float32" else "jnp"
-            self._dist = DistSHT(splan, mesh, ("sht",), dtype=self.dtype,
-                                 fold=False, stage1=stage1)
-        return self._dist
+            self._dists[C] = DistSHT(splan, mesh, ("sht",), dtype=self.dtype,
+                                     fold=False, stage1=stage1,
+                                     comm_chunks=C)
+        return self._dists[C]
 
     # -- per-backend execution ------------------------------------------------
 
     def _synth_fn(self, backend: str, layout: Optional[str] = None):
         """Synthesis callable alm -> maps for ``backend`` (jitted; compiled
         executables are cached on the plan).  ``layout`` overrides the
-        plan's packed-vs-plain choice (autotune measures both)."""
+        plan's packed-vs-plain choice (autotune measures both); for the
+        dist backend it carries the exchange chunk count C instead."""
         if layout is None:
             layout = self.layouts.get("synth")
+        if backend == "dist" and layout is None:
+            layout = self.comm_chunks.get("synth") or 1
         key = ("synth", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
@@ -335,7 +351,7 @@ class Plan:
                 fn = self._make_pallas_synth(variant=variant, layout=layout)
             fn = jax.jit(fn)
         elif backend == "dist":
-            d = self._dist_engine()
+            d = self._dist_engine(comm_chunks=int(layout or 1))
             splan = d.plan
 
             if spin:
@@ -355,9 +371,12 @@ class Plan:
         return fn
 
     def _anal_fn(self, backend: str, layout: Optional[str] = None):
-        """Analysis callable maps -> alm for ``backend``."""
+        """Analysis callable maps -> alm for ``backend`` (``layout``: see
+        :meth:`_synth_fn` -- chunk count C for the dist backend)."""
         if layout is None:
             layout = self.layouts.get("anal")
+        if backend == "dist" and layout is None:
+            layout = self.comm_chunks.get("anal") or 1
         key = ("anal", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
@@ -379,7 +398,7 @@ class Plan:
                 fn = self._make_pallas_anal(variant=variant, layout=layout)
             fn = jax.jit(fn)
         elif backend == "dist":
-            d = self._dist_engine()
+            d = self._dist_engine(comm_chunks=int(layout or 1))
             splan = d.plan
 
             if spin:
@@ -606,9 +625,35 @@ class Plan:
                     lay = min(per, key=per.get)
                     out[b][d] = per[lay]
                     out[b][f"{d}_layout"] = lay
+                elif b == "dist":
+                    # overlapped pipeline model: pick the exchange chunk
+                    # count C that minimizes the modelled time.
+                    per = {c: roofline.predict_sht_time(
+                               b, overlap=True, comm_chunks=c, **kw)
+                           for c in self._dist_chunk_variants(d)}
+                    c_best = min(per, key=per.get)
+                    out[b][d] = per[c_best]
+                    out[b][f"{d}_chunks"] = c_best
                 else:
                     out[b][d] = roofline.predict_sht_time(b, **kw)
         return out
+
+    def _dist_chunk_variants(self, direction: str) -> tuple:
+        """Candidate exchange chunk counts for the dist backend: the
+        monolithic baseline plus the overlap model's pick (or just the
+        forced count when ``comm_chunks`` was given as an int)."""
+        if isinstance(self._comm_spec, (int, np.integer)):
+            return (max(1, int(self._comm_spec)),)
+        g = self.grid
+        n_dev = self._n_shards or jax.device_count()
+        hw = (roofline.HW_HOST if jax.default_backend() == "cpu"
+              else roofline.HW_V5E)
+        c = roofline.predict_comm_chunks(
+            l_max=self.l_max, m_max=self.m_max, n_rings=g.n_rings,
+            n_phi=g.max_n_phi, K=self.K, direction=direction, hw=hw,
+            n_devices=n_dev, fft_lengths=self._sht.phase.fft_lengths,
+            spin=self.spin)
+        return tuple(sorted({1, int(c)}))
 
     def _chardb(self):
         """The persistent per-hardware characterization DB this plan's
@@ -623,14 +668,19 @@ class Plan:
         """Workload coordinates of one autotune corner.  Deliberately
         excludes the dispatch mode and the plan signature key: any plan
         exercising the same workload on the same hardware reuses the
-        measurement."""
-        return dict(
+        measurement.  For the dist backend the variant slot carries the
+        exchange chunk count instead of a Legendre layout."""
+        fields = dict(
             grid=self.grid.name, n_rings=self.grid.n_rings,
             n_phi=self.grid.max_n_phi, l_max=self.l_max, m_max=self.m_max,
             K=self.K, dtype=self.dtype, spin=self.spin, fold=self.fold,
             backend=backend, direction=direction, layout=layout or "-",
             n_devices=((self._n_shards or jax.device_count())
                        if backend == "dist" else 1))
+        if backend == "dist":
+            fields["layout"] = "-"
+            fields["comm_chunks"] = max(1, int(layout or 1))
+        return fields
 
     def _measure_all(self) -> dict:
         """Corner timings per candidate per direction, through the chardb:
@@ -652,10 +702,14 @@ class Plan:
         out: dict = {}
         for b in self.candidates:
             out[b] = {}
-            layouts = (self._pallas_layouts()
-                       if b in ("pallas_vpu", "pallas_mxu") else (None,))
             for direction, fn_of, arg in (("synth", self._synth_fn, alm),
                                           ("anal", self._anal_fn, maps)):
+                if b in ("pallas_vpu", "pallas_mxu"):
+                    layouts = self._pallas_layouts()
+                elif b == "dist":
+                    layouts = self._dist_chunk_variants(direction)
+                else:
+                    layouts = (None,)
                 best, best_lay, errs = float("inf"), None, {}
                 for lay in layouts:
 
@@ -686,7 +740,8 @@ class Plan:
                     out[b][f"{direction}_error"] = \
                         "; ".join(errs.values())            # unusable
                 if best_lay is not None:
-                    out[b][f"{direction}_layout"] = best_lay
+                    slot = "chunks" if b == "dist" else "layout"
+                    out[b][f"{direction}_{slot}"] = best_lay
         return out
 
     def _fill_layouts(self, source: dict) -> None:
@@ -703,18 +758,38 @@ class Plan:
                 or self.predicted_s.get(b, {}).get(f"{d}_layout")
             self.layouts[d] = lay or "packed"
 
+    def _fill_comm_chunks(self, source: dict) -> None:
+        """Set ``self.comm_chunks`` per direction: the forced count when
+        ``comm_chunks`` was an int, else the measured winner from ``source``
+        (``{"dist": {"<dir>_chunks": C}}``) with the overlap model's pick
+        filling any gap.  Non-dist directions get None."""
+        self.comm_chunks = {}
+        for d in ("synth", "anal"):
+            if self.backends.get(d) != "dist":
+                self.comm_chunks[d] = None
+                continue
+            if isinstance(self._comm_spec, (int, np.integer)):
+                self.comm_chunks[d] = max(1, int(self._comm_spec))
+                continue
+            c = source.get("dist", {}).get(f"{d}_chunks")
+            if c is None:
+                c = self.predicted_s.get("dist", {}).get(f"{d}_chunks")
+            self.comm_chunks[d] = max(1, int(c or 1))
+
     def _choose_backends(self) -> None:
         """Fill ``self.backends``/``self.layouts`` according to ``mode``."""
         self.predicted_s = self._predict_all()
         if self.mode in BACKENDS:                   # forced backend
             self.backends = {"synth": self.mode, "anal": self.mode}
             self._fill_layouts(self.predicted_s)
+            self._fill_comm_chunks(self.predicted_s)
             return
         if self.mode == "model":
             self.backends = {
                 d: min(self.candidates, key=lambda b: self.predicted_s[b][d])
                 for d in ("synth", "anal")}
             self._fill_layouts(self.predicted_s)
+            self._fill_comm_chunks(self.predicted_s)
             return
         assert self.mode == "auto", self.mode
         dkey = plancache.signature_key("decision", sig=self._signature_key)
@@ -725,11 +800,17 @@ class Plan:
             self.backends = {d: cached[d] for d in ("synth", "anal")}
             self.measured_s = cached.get("measured", {})
             self._fill_layouts(self.measured_s)
+            self._fill_comm_chunks(self.measured_s)
             cached_lay = cached.get("layouts")
             if cached_lay:
                 self.layouts.update({d: cached_lay.get(d)
                                      for d in ("synth", "anal")
                                      if d in cached_lay})
+            cached_cc = cached.get("comm_chunks")
+            if cached_cc:
+                self.comm_chunks.update(
+                    {d: cached_cc.get(d) for d in ("synth", "anal")
+                     if d in cached_cc})
             self.cache_events["decision"] = "hit"
             return
         self.measured_s = self._measure_all()
@@ -747,6 +828,7 @@ class Plan:
                     self.candidates, key=lambda b: self.predicted_s[b][d])
                 fell_back = True
         self._fill_layouts(self.measured_s)
+        self._fill_comm_chunks(self.measured_s)
         if fell_back:
             # an un-measured decision must not shadow a later real autotune
             self.cache_events["decision"] = "model-fallback"
@@ -754,7 +836,8 @@ class Plan:
         self.cache_events["decision"] = "autotuned"
         plancache.save_decision(
             dkey, {**self.backends, "measured": self.measured_s,
-                   "layouts": dict(self.layouts)},
+                   "layouts": dict(self.layouts),
+                   "comm_chunks": dict(self.comm_chunks)},
             cache=self._cache_kind, directory=self._cache_dir)
 
     # -- public API -----------------------------------------------------------
@@ -885,6 +968,12 @@ class Plan:
                                   else "staged")
                               for d in ("synth", "anal")},
             },
+            "comm": {
+                "spec": self._comm_spec,
+                "chunks": dict(self.comm_chunks),
+                "pipelined": {d: (self.comm_chunks.get(d) or 1) > 1
+                              for d in ("synth", "anal")},
+            },
             "candidates": list(self.candidates),
             "skipped": dict(self.skipped),
             # grouped view of the packing decision; panels comes from the
@@ -936,6 +1025,9 @@ class Plan:
             lay = d["layouts"].get(direction)
             if lay:
                 bits[0] += f"[{lay}]"
+            cc = d["comm"]["chunks"].get(direction)
+            if chosen == "dist" and cc:
+                bits[0] += f"[C={cc}]"
             if pred is not None:
                 bits.append(f"predicted {pred * 1e6:.1f} us")
             if meas is not None and np.isfinite(meas):
@@ -997,7 +1089,8 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
               K: int = 1, dtype: str = "float64", mode: str = "auto",
               fold: bool = False, spin: int = 0, cache: str = "auto",
               cache_dir: Optional[str] = None,
-              n_shards: Optional[int] = None) -> Plan:
+              n_shards: Optional[int] = None,
+              comm_chunks: Union[int, str] = "auto") -> Plan:
     """Build (or fetch) the transform plan for a problem signature.
 
     Parameters
@@ -1022,6 +1115,12 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
         ``"memory"``, ``"disk"``, or ``"off"``.
     cache_dir : override the on-disk cache location.
     n_shards : device count for the ``dist`` backend (default: all).
+    comm_chunks : exchange chunk count for the ``dist`` backend.
+        ``"auto"`` (default) picks C from the overlapped roofline model
+        (measured against the monolithic C=1 baseline under
+        ``mode="auto"``); an int forces that chunk count.  ``C > 1``
+        splits the Delta all_to_all into C chunks pipelined against the
+        adjacent chunks' compute (bit-identical results).
 
     Returns the memoised :class:`Plan`: calling ``make_plan`` twice with an
     identical signature returns the same object and reuses every cached
@@ -1034,6 +1133,11 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
                          f"or a backend name {BACKENDS}")
     if spin not in (0, 2):
         raise ValueError(f"unsupported spin {spin!r}: expected 0 or 2")
+    if comm_chunks != "auto":
+        if not isinstance(comm_chunks, (int, np.integer)) or comm_chunks < 1:
+            raise ValueError(f"comm_chunks must be 'auto' or an int >= 1, "
+                             f"got {comm_chunks!r}")
+        comm_chunks = int(comm_chunks)
     if spin and fold:
         raise ValueError("fold is not supported for spin transforms")
     if cache == "auto":
@@ -1060,14 +1164,15 @@ def make_plan(grid: Union[str, RingGrid] = "gl", l_max: Optional[int] = None,
     sig_key = plancache.signature_key(
         "plan", l_max=l_max, m_max=m_max, K=K, dtype=dtype, mode=mode,
         fold=fold, spin=spin, n_shards=n_shards, cache_kind=cache_kind,
-        cache_dir=cache_dir, **grid_sig)
+        cache_dir=cache_dir, comm_chunks=comm_chunks, **grid_sig)
     if sig_key in _PLANS:
         plancache.stats().memory_hits += 1
         return _PLANS[sig_key]
 
     plan = Plan(g, l_max, m_max, K, dtype, mode=mode, fold=fold, spin=spin,
                 cache_kind=cache_kind, cache_dir=cache_dir,
-                n_shards=n_shards, signature_key=sig_key)
+                n_shards=n_shards, signature_key=sig_key,
+                comm_chunks=comm_chunks)
     elig = backend_eligibility(g, dtype, n_shards)
     cand = [b for b in BACKENDS if elig[b] is None]
     if mode in BACKENDS and mode not in cand:

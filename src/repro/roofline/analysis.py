@@ -26,7 +26,7 @@ import numpy as np
 __all__ = ["HW_V5E", "HW_HOST", "Roofline", "collective_bytes",
            "analyze_compiled", "parse_hlo_collectives",
            "sht_work", "legendre_panel_counts", "predict_sht_time",
-           "BACKEND_MODELS", "BackendModel"]
+           "predict_comm_chunks", "BACKEND_MODELS", "BackendModel"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -35,14 +35,17 @@ class Hardware:
     peak_flops: float        # bf16 FLOP/s per chip
     hbm_bw: float            # bytes/s per chip
     link_bw: float           # bytes/s per ICI link
+    coll_latency: float = 1e-6   # launch latency per collective [s]
 
 
 HW_V5E = Hardware("tpu-v5e", 197e12, 819e9, 50e9)
 
 #: Crude single-host CPU model (this container's baseline).  Used by the
 #: ``mode="model"`` dispatch when no accelerator is attached; the absolute
-#: numbers matter less than the *relative* per-backend ranking.
-HW_HOST = Hardware("host-cpu", 2e11, 5e10, 1e10)
+#: numbers matter less than the *relative* per-backend ranking.  Simulated
+#: host "collectives" are memcpys behind a dispatch, so the per-collective
+#: launch latency is an order worse than real ICI.
+HW_HOST = Hardware("host-cpu", 2e11, 5e10, 1e10, coll_latency=1e-5)
 
 
 # ---------------------------------------------------------------------------
@@ -154,7 +157,8 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
                      n_phi: int, K: int, direction: str = "synth",
                      hw: Hardware = HW_V5E, n_devices: int = 1,
                      fft_lengths=None, spin: int = 0, layout: str = None,
-                     lp_size: int = 128, pipeline: str = "staged") -> float:
+                     lp_size: int = 128, pipeline: str = "staged",
+                     overlap: bool = False, comm_chunks: int = 1) -> float:
     """Predicted seconds for one transform on ``backend`` (3-term model).
 
     compute = recurrence/vector + accumulation/(matrix or vector) + fft;
@@ -175,6 +179,17 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
     Delta block never round-trips HBM, so its bytes term is dropped --
     the fused pipeline's advantage in this model is purely the removed
     memory traffic (the flop terms are identical).
+
+    ``overlap=True`` with ``comm_chunks=C > 1`` (dist backend only) models
+    the chunked software-pipelined exchange (`DistSHT(comm_chunks=C)`):
+    instead of ``comp + comm``, the distributed time is the pipeline
+
+        comp/C + comm_chunk + (C-1) * max(comp/C, comm_chunk)
+
+    where ``comm_chunk = comm/C + hw.coll_latency`` -- each chunk's
+    collective hides behind the adjacent chunk's compute, at the price of
+    one extra collective-launch latency per chunk.  ``C=1`` reproduces
+    the serial sum exactly.
     """
     if backend not in BACKEND_MODELS:
         raise ValueError(f"unknown backend {backend!r}")
@@ -209,10 +224,42 @@ def predict_sht_time(backend: str, *, l_max: int, m_max: int, n_rings: int,
         ncomp = 1 if spin == 0 else 2
         wire = 16.0 * (m_max + 1) * n_rings * K * ncomp / n_devices \
             * (n_devices - 1) / n_devices
-        t += wire / hw.link_bw
+        comm = wire / hw.link_bw
+        C = max(1, int(comm_chunks))
+        if overlap and C > 1 and comm > 0.0:
+            comp_c = t / C
+            comm_c = comm / C + hw.coll_latency
+            t = comp_c + comm_c + (C - 1) * max(comp_c, comm_c)
+        else:
+            t += comm
     if direction == "anal":
         t *= m.anal_penalty
     return float(t)
+
+
+def predict_comm_chunks(*, l_max: int, m_max: int, n_rings: int, n_phi: int,
+                        K: int, direction: str = "synth",
+                        hw: Hardware = HW_V5E, n_devices: int = 1,
+                        fft_lengths=None, spin: int = 0,
+                        max_chunks: int = 64) -> int:
+    """Model-optimal ``comm_chunks`` for the dist backend's chunked
+    exchange: argmin over powers of two of the overlapped
+    `predict_sht_time`.  The cap is additionally clamped to what the plan
+    can actually split -- the K channel axis, falling back to the local
+    m rows (`SHTPlan.chunk_schedule` applies the same rule)."""
+    if n_devices <= 1:
+        return 1
+    m_local = max(1, -(-(m_max + 2) // (2 * max(1, n_devices))) * 2)
+    cap = min(max_chunks, max(int(K), m_local))
+    cands = [1]
+    while cands[-1] * 2 <= cap:
+        cands.append(cands[-1] * 2)
+    t_of = {c: predict_sht_time(
+        "dist", l_max=l_max, m_max=m_max, n_rings=n_rings, n_phi=n_phi,
+        K=K, direction=direction, hw=hw, n_devices=n_devices,
+        fft_lengths=fft_lengths, spin=spin, overlap=True, comm_chunks=c)
+        for c in cands}
+    return int(min(t_of, key=t_of.get))
 
 _DTYPE_BYTES = {
     "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,

@@ -25,6 +25,16 @@ def test_dist_sht_matches_serial():
     assert out.count("OK") == 11   # incl. the 2 shard_map gradcheck lines
 
 
+def test_dist_chunked_exchange_matches_monolithic():
+    # chunked pipelined all_to_all (C=2,4) vs the monolithic C=1 path:
+    # bit-identical synthesis, <1e-12 analysis, spin 0 + spin 2, K-axis
+    # and m-axis schedules, grad through the chunked pipeline, and the
+    # fail-fast mesh ValueError (4 simulated devices).
+    out = _run("dist_chunk_check.py")
+    assert out.count("OK") == 10
+    assert "bit-identical=True" in out
+
+
 def test_moe_expert_parallel_matches_local():
     out = _run("moe_dist_check.py")
     assert "a2a_err" in out

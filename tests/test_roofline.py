@@ -72,3 +72,51 @@ def test_comm_model_fold_reduces_compute():
     b = CM.sht_times(2048, 256, p, fold=True)
     assert b["compute"] < a["compute"]
     assert b["comm"] == a["comm"]
+
+
+def test_overlap_model_chunked_pipeline():
+    for p in (CM.MPICH_CLUSTER, CM.TPU_V5E_ICI):
+        serial = CM.sht_times(4096, 1024, p)
+        # C=1 degenerates to the serial comp + comm sum
+        t1 = CM.sht_times_overlap(4096, 1024, p, chunks=1)
+        assert abs(t1["overlap"] - serial["total"]) < 1e-12
+        assert t1["hidden_frac"] == 0.0
+        # the auto pick never loses to serial, and hidden_frac is a fraction
+        tb = CM.sht_times_overlap(4096, 1024, p)
+        assert tb["chunks"] >= 1
+        assert tb["overlap"] <= serial["total"] + 1e-15
+        assert 0.0 <= tb["hidden_frac"] <= 1.0
+        assert CM.best_chunks(4096, 1024, p) == tb["chunks"]
+    # acceptance corner: comm-bound TPU mesh hides > half the hideable time
+    corner = CM.sht_times_overlap(4096, 1024, CM.TPU_V5E_ICI)
+    assert corner["chunks"] > 1
+    assert corner["hidden_frac"] > 0.5, corner
+
+
+def test_overlap_model_single_process_is_serial():
+    t = CM.sht_times_overlap(1024, 1, CM.MPICH_CLUSTER, chunks=8)
+    assert t["overlap"] == t["serial"]
+    assert t["hidden_frac"] == 0.0
+
+
+def test_predict_sht_time_overlap_and_chunk_pick():
+    kw = dict(l_max=2048, m_max=2048, n_rings=4097, n_phi=8192, K=4,
+              hw=RA.HW_V5E, n_devices=16)
+    serial = RA.predict_sht_time("dist", **kw)
+    over1 = RA.predict_sht_time("dist", overlap=True, comm_chunks=1, **kw)
+    assert abs(over1 - serial) < 1e-15          # C=1 == blocking exchange
+    c = RA.predict_comm_chunks(**kw)
+    assert c >= 1
+    over = RA.predict_sht_time("dist", overlap=True, comm_chunks=c, **kw)
+    assert over <= serial + 1e-15
+    # the pick must beat (or tie) a deliberately bad chunk count
+    worse = RA.predict_sht_time("dist", overlap=True, comm_chunks=4096, **kw)
+    assert over <= worse + 1e-15
+
+
+def test_predict_comm_chunks_respects_axis_bounds():
+    # K=1 on a single dealt m row leaves nothing to chunk -> C=1
+    c = RA.predict_comm_chunks(l_max=8, m_max=8, n_rings=17, n_phi=34,
+                               K=1, hw=RA.HW_V5E, n_devices=8, max_chunks=64)
+    assert c >= 1
+    assert c <= max(1, 64)
