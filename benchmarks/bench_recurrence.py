@@ -26,9 +26,14 @@ Two extra row families cover the triangular m-pair packing
 
 And two for the fused Legendre+phase pipeline (kernels/fused.py):
 
-  * ``recurrence/fused_speedup/{synth,anal}/...`` -- full staged chain vs
-    the fused single-kernel pipeline, same plan, paired interleaved
-    timing (the acceptance metric: fused synth >= 1.2x);
+  * ``recurrence/fused_speedup/{synth,anal}/pallas-<var>/<shape>/...`` --
+    full staged chain vs the fused single-kernel pipeline, same plan,
+    paired interleaved timing, one corner per covered plan shape
+    (``gl`` scalar uniform, ``gl-fold``, ``gl-spin2``, ``healpix``
+    bucketed).  The uniform ``synth/pallas-mxu`` row is the acceptance
+    gate (>= 1.0) and every ``synth/pallas-vpu`` row must beat staged;
+    the spin-2/bucket MXU rows are reported honestly (staged MXU still
+    wins there, and the plan autotuner keeps dispatching it);
   * ``recurrence/bf16_err/{synth,anal}/...`` -- max relative error of the
     bf16-MXU-contraction fused variant against its own f32 run (the
     measured bf16 error band; gated < 1e-2 by scripts/check.sh).
@@ -143,17 +148,33 @@ def main():
 
     # fused Legendre+phase pipeline vs the staged chain: the full jitted
     # alm->maps / maps->alm dispatch path of the same plan, packed staged
-    # layout vs the fused single-kernel layout, timed interleaved.
-    fsizes = ((96, 8, "vpu"),) if smoke() \
-        else ((96, 8, "vpu"), (96, 8, "mxu"))
-    for l_max, K, var in fsizes:
-        plan = repro.make_plan("gl", l_max, K=K, dtype="float32",
-                               mode=f"pallas_{var}", cache="memory")
-        alm = sht.random_alm(KEY, l_max, l_max, K=K).astype(jnp.complex64)
+    # layout vs the fused single-kernel layout, timed interleaved.  One
+    # corner per covered plan shape (scalar uniform, spin-2, equator
+    # folded, bucketed HEALPix); the uniform pallas-mxu synth row is the
+    # acceptance gate (>= 1.0, scripts/check.sh).
+    fcorners = (("gl", "vpu"), ("gl", "mxu")) if smoke() \
+        else (("gl", "vpu"), ("gl", "mxu"), ("gl-fold", "vpu"),
+              ("gl-spin2", "vpu"), ("gl-spin2", "mxu"),
+              ("healpix", "vpu"), ("healpix", "mxu"))
+    for tag, var in fcorners:
+        kw = dict(K=8, dtype="float32", mode=f"pallas_{var}",
+                  cache="memory")
+        if tag == "gl":
+            plan = repro.make_plan("gl", 96, **kw)
+        elif tag == "gl-fold":
+            plan = repro.make_plan("gl", 96, fold=True, **kw)
+        elif tag == "gl-spin2":
+            plan = repro.make_plan("gl", 96, spin=2, **kw)
+        else:
+            plan = repro.make_plan("healpix", nside=32, **kw)
+        l_max, K = plan.l_max, plan.K
+        mk_alm = sht.random_alm_spin if plan.spin else sht.random_alm
+        alm = mk_alm(KEY, l_max, plan.m_max, K=K).astype(jnp.complex64)
+        mshape = (plan.grid.n_rings, plan.grid.max_n_phi, K)
+        if plan.spin:
+            mshape = (2,) + mshape
         maps = jnp.asarray(
-            np.random.default_rng(0).normal(
-                size=(plan.grid.n_rings, plan.grid.max_n_phi, K)),
-            jnp.float32)
+            np.random.default_rng(0).normal(size=mshape), jnp.float32)
         iters = 2 if smoke() else 3
         for d, fn_of, arg in (("synth", plan._synth_fn, alm),
                               ("anal", plan._anal_fn, maps)):
@@ -161,11 +182,11 @@ def main():
             fused = fn_of(f"pallas_{var}", "fused")
             t_staged, t_fused = time_pair(lambda: staged(arg),
                                           lambda: fused(arg), iters=iters)
-            emit(f"recurrence/{d}/staged-{var}/lmax{l_max}/K{K}",
+            emit(f"recurrence/{d}/staged-{var}/{tag}/lmax{l_max}/K{K}",
                  t_staged * 1e6, "full staged chain (interpret-mode wall)")
-            emit(f"recurrence/{d}/fused-{var}/lmax{l_max}/K{K}",
+            emit(f"recurrence/{d}/fused-{var}/{tag}/lmax{l_max}/K{K}",
                  t_fused * 1e6, "fused pipeline (interpret-mode wall)")
-            emit(f"recurrence/fused_speedup/{d}/pallas-{var}/"
+            emit(f"recurrence/fused_speedup/{d}/pallas-{var}/{tag}/"
                  f"lmax{l_max}/K{K}", t_staged / max(t_fused, 1e-12),
                  "staged_wall / fused_wall (interpret mode, paired)")
 

@@ -62,7 +62,7 @@ from repro.core.grids import BucketLayout, RingGrid
 __all__ = [
     "uniform_synth", "uniform_anal", "bucket_synth", "bucket_anal",
     "bucket_bin_maps", "uniform_bin_maps", "uniform_rotation_tables",
-    "phase_factors",
+    "bucket_rotation_tables", "phase_factors",
     "PhaseStage", "UniformPhase", "BucketPhase", "make_phase",
 ]
 
@@ -170,6 +170,32 @@ def uniform_rotation_tables(m_vals, phi0, n, direction):
     else:
         raise ValueError(f"unknown direction {direction!r}")
     t = np.stack([ta, tb, tc, td], axis=1)         # (M, 4, R)
+    return np.where((m >= 0)[:, None, None], t, 0.0)
+
+
+def bucket_rotation_tables(m_vals, phi0, direction):
+    """Real 2x2 per-(row, ring) phase tables for the bucket engine,
+    (M, 4, R) f64 numpy.
+
+    Unlike :func:`uniform_rotation_tables` there is no conjugate-wrap or
+    Nyquist folding here -- the bucket engine's alias fold is a pure index
+    map (:func:`bucket_bin_maps`), applied by the host-side scatter/gather
+    around the fused kernels.  The tables only encode e^{+-i m phi0(r)}:
+
+        synth  h = e^{+i m phi0} d   ->  (c, -s, s, c)
+        anal   d = e^{-i m phi0} f   ->  (c, s, -s, c)
+
+    Rows with m < 0 are zeroed like :func:`phase_factors`."""
+    m = np.asarray(m_vals)
+    msafe = np.maximum(m, 0).astype(np.float64)
+    ang = msafe[:, None] * np.asarray(phi0, np.float64)[None, :]
+    c, s = np.cos(ang), np.sin(ang)
+    if direction == "synth":
+        t = np.stack([c, -s, s, c], axis=1)
+    elif direction == "anal":
+        t = np.stack([c, s, -s, c], axis=1)
+    else:
+        raise ValueError(f"unknown direction {direction!r}")
     return np.where((m >= 0)[:, None, None], t, 0.0)
 
 

@@ -53,9 +53,13 @@ Dispatch modes
 Pallas plans additionally dispatch a per-direction Legendre *layout*
 (``plan.layouts``): the ``packed``/``plain`` grids of the staged pipeline,
 plus ``fused`` -- the single-kernel Legendre+phase pipeline
-(`repro.kernels.fused`) for spin-0 unfolded plans on uniform grids, which
-keeps the intermediate ``delta_m`` on-chip.  ``describe()["fusion"]``
-reports eligibility (and the fallback reason when staged).
+(`repro.kernels.fused`), which keeps the intermediate ``delta_m`` on-chip
+for every plan shape: spin 0 and 2, equator-folded, uniform and bucketed
+(ragged HEALPix) grids.  The fused panel length (``lp_size``) is
+chardb-autotuned per corner.  ``describe()["fusion"]`` reports
+eligibility, the chosen ``lp_size``, and the fallback reason for the two
+residual staged shapes (fold on a bucket phase stage; spin-2 at the
+uniform Nyquist alias point).
 
 Differentiability
 -----------------
@@ -321,6 +325,26 @@ class Plan:
 
     # -- per-backend execution ------------------------------------------------
 
+    def _apply_layout_env(self, backend: str, layout):
+        """Honour ``$REPRO_LEGENDRE_LAYOUT=fused`` at the plan level.
+
+        The staged wrappers reject the value (`ops.pick_layout`); here the
+        override routes an eligible pallas direction onto the fused
+        pipeline, and raises (naming the eligibility reason) instead of
+        silently falling back when the plan cannot be fused -- the same
+        silent-fallback bug class as the PR-7 packed-anal mistiming.
+        """
+        if backend not in ("pallas_vpu", "pallas_mxu") or layout == "fused":
+            return layout
+        if os.environ.get("REPRO_LEGENDRE_LAYOUT") != "fused":
+            return layout
+        ok, reason = self._fusion_eligibility()
+        if not ok:
+            raise ValueError(
+                "$REPRO_LEGENDRE_LAYOUT=fused requested, but the fused "
+                f"pipeline is ineligible for this plan: {reason}")
+        return "fused"
+
     def _synth_fn(self, backend: str, layout: Optional[str] = None):
         """Synthesis callable alm -> maps for ``backend`` (jitted; compiled
         executables are cached on the plan).  ``layout`` overrides the
@@ -330,6 +354,7 @@ class Plan:
             layout = self.layouts.get("synth")
         if backend == "dist" and layout is None:
             layout = self.comm_chunks.get("synth") or 1
+        layout = self._apply_layout_env(backend, layout)
         key = ("synth", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
@@ -377,6 +402,7 @@ class Plan:
             layout = self.layouts.get("anal")
         if backend == "dist" and layout is None:
             layout = self.comm_chunks.get("anal") or 1
+        layout = self._apply_layout_env(backend, layout)
         key = ("anal", backend, layout)
         if key in self._compiled:
             return self._compiled[key]
@@ -530,58 +556,177 @@ class Plan:
     def _fusion_eligibility(self) -> tuple:
         """(eligible, reason) for the fused Legendre+phase pipeline.
 
-        Fused kernels bake the uniform engine's phase rotation into the
-        Legendre grid, so they require the batched-uniform phase stage and
-        the scalar unfolded Legendre path; everything else stays staged.
+        The fused kernels now cover spin 0 and 2, equator-folded, uniform
+        and bucketed (ragged HEALPix) plans.  Two residual shapes stay
+        staged: the equator fold combine is baked into the uniform-engine
+        rotation tables (no folded bucket tables), and spin-2 at the
+        uniform Nyquist alias point would need the real-part doubling --
+        which is not complex-linear and so cannot commute with the
+        lambda^{+/-} pair unpacking that follows the in-kernel rotation.
         """
-        if self.phase.kind != "uniform":
-            return False, (f"phase stage is {self.phase.kind!r} "
-                           "(fused pipeline needs the uniform engine)")
-        if self.spin != 0:
-            return False, "spin-2 lambda pairs are not fused (staged path)"
-        if self.fold:
-            return False, "equator fold is not fused (staged path)"
+        if self.fold and self.phase.kind != "uniform":
+            return False, (f"equator fold on a {self.phase.kind!r} phase "
+                           "stage is not fused (staged path)")
+        if (self.spin != 0 and self.phase.kind == "uniform"
+                and self.grid.max_n_phi == 2 * self.m_max):
+            return False, ("spin-2 at the Nyquist alias point "
+                           "(n_phi == 2*m_max) is not fused (staged path)")
         return True, None
 
-    def _fused_layout(self):
-        """The packed slot layout shared by both fused directions (built
-        once per plan; pure numpy)."""
-        if getattr(self, "_fused_lo", None) is None:
+    def _fused_lp_size(self) -> int:
+        """The fused pipeline's panel length, chardb-autotuned per corner.
+
+        Candidate block shapes come from `pack.fused_lp_candidates`; under
+        ``mode="auto"`` each candidate is timed once per hardware through
+        the characterization DB (a second plan build re-measures zero
+        corners), otherwise (model mode, chardb smoke) the roofline model
+        ranks them.  Memoized on the plan.
+        """
+        if getattr(self, "_fused_lp", None) is not None:
+            return self._fused_lp
+        from repro.kernels import pack as kpack
+        from repro.roofline import chardb
+        cands = kpack.fused_lp_candidates(self.l_max)
+        if len(cands) == 1:
+            self._fused_lp = int(cands[0])
+            return self._fused_lp
+        times: dict = {}
+        if self.mode == "auto" and not chardb.smoke_mode():
+            db = self._chardb()
+            cdt = _complex_dtype(self.dtype)
+            arg = jnp.zeros(self._alm_shape, cdt)
+            for c in cands:
+
+                def measure(c=c):
+                    fn = jax.jit(self._make_fused_synth(
+                        variant="vpu", lp_size=int(c)))
+                    jax.block_until_ready(fn(arg))      # warm-up/compile
+                    t0 = time.perf_counter()
+                    jax.block_until_ready(fn(arg))
+                    return (time.perf_counter() - t0) * 1e6
+
+                # base fields on the *staged* corner and override: the
+                # fused fields would recurse into this very chooser.
+                fields = self._corner_fields("pallas_vpu", "synth", "packed")
+                fields["layout"] = "fused"
+                fields["lp_size"] = int(c)
+                try:
+                    us, _ = db.get_or_measure(measure, **fields)
+                except Exception:
+                    us = None
+                times[int(c)] = float("inf") if us is None else float(us)
+        if not times or not np.isfinite(min(times.values())):
+            g = self.grid
+            hw = (roofline.HW_HOST if jax.default_backend() == "cpu"
+                  else roofline.HW_V5E)
+            times = {int(c): roofline.predict_sht_time(
+                "pallas_vpu", layout="packed", pipeline="fused",
+                lp_size=int(c), l_max=self.l_max, m_max=self.m_max,
+                n_rings=g.n_rings, n_phi=g.max_n_phi, K=self.K,
+                direction="synth", hw=hw,
+                fft_lengths=self._sht.phase.fft_lengths, spin=self.spin)
+                for c in cands}
+        self._fused_lp = int(min(times, key=times.get))
+        return self._fused_lp
+
+    def _fused_layout(self, lp_size: Optional[int] = None):
+        """The packed slot layout shared by both fused directions (pure
+        numpy; one per panel length).  Spin-2 plans pack the stacked
+        lambda^{+/-} row set (`legendre._spin_rows`)."""
+        if getattr(self, "_fused_los", None) is None:
+            self._fused_los = {}
+        lp = int(lp_size) if lp_size else self._fused_lp_size()
+        if lp not in self._fused_los:
             from repro.kernels import pack as kpack
-            self._fused_lo = kpack.build_layout(self._m_vals, self.l_max)
-        return self._fused_lo
+            if self.spin:
+                m2, mp2 = legendre._spin_rows(self._m_vals)
+                self._fused_los[lp] = kpack.build_layout(
+                    m2, self.l_max, lp_size=lp, mp_vals=mp2)
+            else:
+                self._fused_los[lp] = kpack.build_layout(
+                    self._m_vals, self.l_max, lp_size=lp)
+        return self._fused_los[lp]
 
-    def _make_fused_synth(self, variant: str, bf16: bool = False):
+    def _fused_parts(self, variant: str, bf16: bool, lp_size):
+        """Shared fused-dispatch plumbing: seeds, layout, the phase-flavour
+        keyword block, and the (synth_fn, anal_fn) kernel-chain pair for
+        this plan's shape (scalar/spin x uniform/fold/bucket)."""
         from repro.kernels import fused as kfused
-        pmm, pms, x32 = self._seeds()
-        g, lo = self.grid, self._fused_layout()
-        kw = dict(l_max=self.l_max, n=g.max_n_phi, phi0=g.phi0,
-                  variant=variant, bf16=bf16, lo=lo)
+        g, ph = self.grid, self.phase
+        lp = int(lp_size) if lp_size else self._fused_lp_size()
+        lo = self._fused_layout(lp)
+        if self.spin == 0:
+            pmm, pms, x32 = self._seeds()
+            m_vals, mp2 = self._m_vals, None
+        else:
+            pmm, pms, x32, m2, mp2 = self._seeds_spin()
+            m_vals = m2
+        kw = dict(l_max=self.l_max, variant=variant, bf16=bf16, lo=lo,
+                  lp_size=lp, mp_vals=mp2)
+        if ph.kind == "uniform":
+            kw.update(n=ph.n, phi0=g.phi0,
+                      fold_rings=(g.n_rings if self.fold else None))
+            pair = (kfused.fused_synth, kfused.fused_anal)
+        else:
+            kw.update(layout=ph.layout, pos=ph._pos, neg=ph._neg,
+                      n_phi=g.n_phi, phi0=g.phi0)
+            pair = (kfused.fused_synth_bucket, kfused.fused_anal_bucket)
+        return m_vals, x32, pmm, pms, kw, pair
 
-        def fn(alm):
-            a32 = jnp.concatenate(
-                [jnp.real(alm), jnp.imag(alm)], axis=-1).astype(jnp.float32)
-            maps = kfused.fused_synth(a32, self._m_vals, x32, pmm, pms, **kw)
-            return maps.astype(self.dtype)
+    def _make_fused_synth(self, variant: str, bf16: bool = False,
+                          lp_size: Optional[int] = None):
+        from repro.core import legendre as leg
+        K = self.K
+        m_vals, x32, pmm, pms, kw, (fsynth, _) = \
+            self._fused_parts(variant, bf16, lp_size)
+        if self.phase.kind == "bucket":
+            kw = dict(kw, out_width=self.grid.max_n_phi)
+
+        if self.spin == 0:
+            def fn(alm):
+                a32 = jnp.concatenate(
+                    [jnp.real(alm), jnp.imag(alm)],
+                    axis=-1).astype(jnp.float32)
+                maps = fsynth(a32, m_vals, x32, pmm, pms, **kw)
+                return maps.astype(self.dtype)
+        else:
+            def fn(alm_eb):
+                e, b = alm_eb[0], alm_eb[1]
+                a2_re, a2_im = leg.spin_pack_alm(
+                    jnp.real(e), jnp.imag(e), jnp.real(b), jnp.imag(b))
+                a32 = jnp.concatenate([a2_re, a2_im],
+                                      axis=-1).astype(jnp.float32)
+                s = fsynth(a32, m_vals, x32, pmm, pms, **kw)
+                s = s.astype(self.dtype)
+                return jnp.stack([s[..., :K], s[..., K:]], axis=0)
 
         return fn
 
-    def _make_fused_anal(self, variant: str, bf16: bool = False):
-        from repro.kernels import fused as kfused
+    def _make_fused_anal(self, variant: str, bf16: bool = False,
+                         lp_size: Optional[int] = None):
+        from repro.core import legendre as leg
         K = self.K
         cdt = _complex_dtype(self.dtype)
-        pmm, pms, x32 = self._seeds()
-        g, lo = self.grid, self._fused_layout()
-        w = jnp.asarray(g.weights)
-        kw = dict(l_max=self.l_max, n=g.max_n_phi, phi0=g.phi0,
-                  variant=variant, bf16=bf16, lo=lo)
-        mask = jnp.asarray(alm_mask(self.l_max, self.m_max))[..., None]
+        m_vals, x32, pmm, pms, kw, (_, fanal) = \
+            self._fused_parts(variant, bf16, lp_size)
+        w = jnp.asarray(self.grid.weights)
+        mask = jnp.asarray(
+            alm_mask(self.l_max, self.m_max, spin=self.spin))[..., None]
 
-        def fn(maps):
-            out = kfused.fused_anal(maps, w, self._m_vals, x32, pmm, pms,
-                                    **kw)
-            alm = (out[..., :K] + 1j * out[..., K:]).astype(cdt)
-            return jnp.where(mask, alm, 0.0)
+        if self.spin == 0:
+            def fn(maps):
+                out = fanal(maps, w, m_vals, x32, pmm, pms, **kw)
+                alm = (out[..., :K] + 1j * out[..., K:]).astype(cdt)
+                return jnp.where(mask, alm, 0.0)
+        else:
+            def fn(maps_qu):
+                m2d = jnp.concatenate([maps_qu[0], maps_qu[1]], axis=-1)
+                out = fanal(m2d, w, m_vals, x32, pmm, pms, **kw)
+                e_re, e_im, b_re, b_im = leg.spin_unpack_alm(
+                    out[..., :K], out[..., K:])
+                alm = jnp.stack([e_re + 1j * e_im, b_re + 1j * b_im],
+                                axis=0).astype(cdt)
+                return jnp.where(mask[None], alm, 0.0)
 
         return fn
 
@@ -677,6 +822,10 @@ class Plan:
             backend=backend, direction=direction, layout=layout or "-",
             n_devices=((self._n_shards or jax.device_count())
                        if backend == "dist" else 1))
+        # block-shape coordinate: fused corners are only comparable at one
+        # panel length (staged kernels are pinned to 128)
+        fields["lp_size"] = (self._fused_lp_size() if layout == "fused"
+                             else 128)
         if backend == "dist":
             fields["layout"] = "-"
             fields["comm_chunks"] = max(1, int(layout or 1))
@@ -962,6 +1111,10 @@ class Plan:
             "layouts": layouts,
             "fusion": {
                 "eligible": fusion_ok, "reason": fusion_reason,
+                # the eligibility reason again, under the name the env
+                # override error uses -- None when nothing was skipped
+                "skipped": fusion_reason,
+                "lp_size": getattr(self, "_fused_lp", None),
                 "active": {d: layouts.get(d) == "fused"
                            for d in ("synth", "anal")},
                 "pipelines": {d: ("fused" if layouts.get(d) == "fused"

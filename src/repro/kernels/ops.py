@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import functools
 import os
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -118,19 +119,46 @@ def _concrete_rows(v):
         return None
 
 
+#: one-time traced-row degradation warning (see pick_layout); benches that
+#: accidentally jit m_vals as an argument silently timed the plain kernel
+#: under a packed label once (the PR-7 "packed anal slowdown") -- never again.
+_TRACED_WARNED = False
+
+
 def pick_layout(m_vals, layout: str | None = None, mp_vals=None) -> str:
     """packed-vs-plain selection.
 
     Traced row sets (the distributed stage-1 path) can never build a
     static packing and always run the plain rectangular grid, whatever
-    the caller asked for.  Otherwise ``$REPRO_LEGENDRE_LAYOUT`` is the
-    global debugging override (it outranks the per-call argument, so it
-    also forces plans whose autotuner passes an explicit layout), then
-    the explicit ``layout`` argument, then packed by default."""
+    the caller asked for -- warned once per process, because a traced
+    ``m_vals`` usually means a bench/jit boundary mistake timing the
+    wrong kernel.  Otherwise ``$REPRO_LEGENDRE_LAYOUT`` is the global
+    debugging override (it outranks the per-call argument, so it also
+    forces plans whose autotuner passes an explicit layout), then the
+    explicit ``layout`` argument, then packed by default.  The override
+    value ``fused`` is rejected here: the fused pipeline dispatches at
+    the plan level, not through the staged wrappers."""
+    global _TRACED_WARNED
     if _concrete_rows(m_vals) is None or \
             (mp_vals is not None and _concrete_rows(mp_vals) is None):
+        if not _TRACED_WARNED:
+            _TRACED_WARNED = True
+            warnings.warn(
+                "ops.synth/ops.anal received traced m_vals/mp_vals and are "
+                "degrading to the plain rectangular layout (a static "
+                "packing needs concrete rows). If this is a benchmark or a "
+                "jit boundary, close over m_vals instead of passing it as "
+                "a jit argument -- otherwise the packed/fused kernels are "
+                "never the ones being timed.", RuntimeWarning, stacklevel=3)
         return "plain"
     env = os.environ.get("REPRO_LEGENDRE_LAYOUT")
+    if env == "fused":
+        raise ValueError(
+            "$REPRO_LEGENDRE_LAYOUT=fused cannot be served by the staged "
+            "kernel wrappers (ops.synth/ops.anal) -- the fused "
+            "Legendre+phase pipeline dispatches at the plan level "
+            "(repro.make_plan, layout 'fused'). Use a Plan, or set the "
+            "override to 'plain' or 'packed'.")
     if env in ("plain", "packed"):
         return env
     if layout in ("plain", "packed"):

@@ -42,7 +42,22 @@ import functools
 
 import numpy as np
 
-__all__ = ["PackedLayout", "build_layout", "panel_counts"]
+__all__ = ["PackedLayout", "build_layout", "panel_counts",
+           "fused_lp_candidates"]
+
+
+def fused_lp_candidates(l_max: int) -> tuple:
+    """Candidate panel lengths (``lp_size``) for the fused pipeline's
+    chardb-driven block autotune.
+
+    128 is the VPU-native sublane multiple; 256 halves the grid-step
+    count (fewer per-panel block fetches, one dot over a taller panel)
+    at double the VMEM value-panel footprint, which only has a chance of
+    paying off once a slot actually spans multiple 128-panels.  Small
+    bands where the whole slot fits one 128-panel have nothing to fuse
+    further, so they keep the single candidate.
+    """
+    return (128, 256) if l_max + 1 > 128 else (128,)
 
 
 @dataclasses.dataclass(frozen=True)

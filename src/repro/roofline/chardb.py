@@ -33,8 +33,10 @@ __all__ = [
     "reset_stats", "clear",
 ]
 
-#: bump when the timing methodology changes; older corners become stale
-SCHEMA = 1
+#: bump when the timing methodology changes; older corners become stale.
+#: 2: fused corners gained an ``lp_size`` coordinate (block-shape autotune)
+#: and the fused-MXU kernels were restructured, invalidating old timings.
+SCHEMA = 2
 
 _SMOKE_ENV = "REPRO_CHARDB_SMOKE"
 

@@ -169,25 +169,188 @@ def test_fusion_eligible_on_uniform_spin0():
             plan.layouts[direction] == "fused")
 
 
-def test_fusion_ineligible_spin2():
-    plan = repro.make_plan("gl", l_max=LMAX, K=1, dtype="float32", spin=2,
+# ---------------------------------------------------------------------------
+# full coverage: spin-2, equator fold, bucketed (HEALPix) through the
+# fused pipeline
+# ---------------------------------------------------------------------------
+
+SHAPES = ["fold", "spin2", "bucket", "spin2-bucket"]
+
+
+def _shape_plan(shape, var="vpu", k=K):
+    kw = dict(K=k, dtype="float32", mode=f"pallas_{var}", cache="memory")
+    if shape == "fold":
+        return repro.make_plan("gl", l_max=LMAX, fold=True, **kw)
+    if shape == "spin2":
+        return repro.make_plan("gl", l_max=LMAX, spin=2, **kw)
+    if shape == "bucket":
+        return repro.make_plan("healpix", nside=8, **kw)
+    assert shape == "spin2-bucket", shape
+    return repro.make_plan("healpix", nside=8, spin=2, **kw)
+
+
+def _shape_alm(plan, key=KEY):
+    mk = sht.random_alm_spin if plan.spin else sht.random_alm
+    return mk(key, plan.l_max, plan.m_max, K=plan.K).astype(jnp.complex64)
+
+
+def _assert_fused_matches_staged(plan, var="vpu", tol=1e-5):
+    ok, reason = plan._fusion_eligibility()
+    assert ok, reason
+    alm = _shape_alm(plan)
+    got = plan._synth_fn(f"pallas_{var}", "fused")(alm)
+    want = plan._synth_fn(f"pallas_{var}", "packed")(alm)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=0,
+        atol=tol * float(jnp.max(jnp.abs(want))))
+    ga = plan._anal_fn(f"pallas_{var}", "fused")(want)
+    wa = plan._anal_fn(f"pallas_{var}", "packed")(want)
+    np.testing.assert_allclose(
+        np.asarray(ga), np.asarray(wa), rtol=0,
+        atol=tol * float(jnp.max(jnp.abs(wa))))
+
+
+@pytest.mark.parametrize("var", ["vpu", "mxu"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_matches_staged_all_shapes(shape, var):
+    _assert_fused_matches_staged(_shape_plan(shape, var=var), var=var)
+
+
+@pytest.mark.parametrize("var", ["vpu", "mxu"])
+@pytest.mark.parametrize("shape", SHAPES)
+def test_fused_gradients_match_staged_all_shapes(shape, var):
+    """linear_pair wiring per variant: the fused VJPs must equal the
+    staged VJPs (property-tested in tests/test_adjoint.py) both ways."""
+    plan = _shape_plan(shape, var=var)
+    alm = _shape_alm(plan)
+    maps, vjp_f = jax.vjp(plan._synth_fn(f"pallas_{var}", "fused"), alm)
+    _, vjp_s = jax.vjp(plan._synth_fn(f"pallas_{var}", "packed"), alm)
+    t = jax.random.normal(jax.random.PRNGKey(8), maps.shape, maps.dtype)
+    (cf,), (cs,) = vjp_f(t), vjp_s(t)
+    rel = float(jnp.max(jnp.abs(cf - cs)) / (jnp.max(jnp.abs(cs)) + 1e-30))
+    assert rel < 1e-4, (shape, var, rel)
+    _, vjpa_f = jax.vjp(plan._anal_fn(f"pallas_{var}", "fused"), maps)
+    _, vjpa_s = jax.vjp(plan._anal_fn(f"pallas_{var}", "packed"), maps)
+    g = _shape_alm(plan, key=jax.random.PRNGKey(9))
+    (mf,), (ms,) = vjpa_f(g), vjpa_s(g)
+    rel = float(jnp.max(jnp.abs(mf - ms)) / (jnp.max(jnp.abs(ms)) + 1e-30))
+    assert rel < 1e-4, (shape, var, rel)
+
+
+def test_fused_edge_fold_odd_rings_k1():
+    """Odd ring count exercises the folded equator zero-pad; K=1 the
+    minimal channel block."""
+    plan = repro.make_plan("gl", l_max=16, K=1, dtype="float32",
+                           mode="pallas_vpu", cache="memory", fold=True)
+    assert plan.grid.n_rings % 2 == 1
+    _assert_fused_matches_staged(plan)
+
+
+def test_fused_edge_spin2_odd_lmax_k1():
+    plan = repro.make_plan("gl", l_max=17, K=1, dtype="float32",
+                           mode="pallas_vpu", cache="memory", spin=2)
+    _assert_fused_matches_staged(plan)
+
+
+def test_fused_edge_single_bucket_healpix():
+    """nside=2 collapses every HEALPix ring into one FFT bucket -- the
+    degenerate bin-map scatter."""
+    plan = repro.make_plan("healpix", nside=2, K=1, dtype="float32",
+                           mode="pallas_vpu", cache="memory")
+    assert plan.phase.layout.n_buckets == 1
+    _assert_fused_matches_staged(plan)
+
+
+def test_fused_bucket_synth_is_one_kernel():
+    """The bucket engine must also skip the Delta HBM round-trip."""
+    plan = _shape_plan("bucket")
+    alm = _shape_alm(plan)
+    txt = str(jax.make_jaxpr(plan._synth_fn("pallas_vpu", "fused"))(alm))
+    assert txt.count("pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
+# residual ineligible shapes + the $REPRO_LEGENDRE_LAYOUT override
+# ---------------------------------------------------------------------------
+
+
+def test_fusion_ineligible_fold_on_bucket():
+    plan = repro.make_plan("healpix", nside=8, fold=True, dtype="float32",
                            mode="pallas_vpu", cache="memory")
     ok, reason = plan._fusion_eligibility()
-    assert not ok and "spin" in reason
+    assert not ok and "fold" in reason
     assert "fused" not in plan._pallas_layouts()
     with pytest.raises(ValueError, match="fused layout unavailable"):
         plan._synth_fn("pallas_vpu", "fused")
-    assert plan.describe()["fusion"]["eligible"] is False
+    d = plan.describe()["fusion"]
+    assert d["eligible"] is False
+    assert d["skipped"] == reason
 
 
-def test_fusion_ineligible_bucketed_phase():
-    plan = repro.make_plan("healpix", nside=8, mode="pallas_vpu",
-                           dtype="float32", cache="memory")
+def test_fusion_ineligible_spin2_nyquist():
+    from repro.core import grids
+    g = grids.gauss_legendre_grid(LMAX, n_phi=2 * LMAX)
+    plan = repro.make_plan(g, l_max=LMAX, K=1, dtype="float32", spin=2,
+                           mode="pallas_vpu", cache="memory")
     ok, reason = plan._fusion_eligibility()
-    assert not ok and "uniform" in reason
+    assert not ok and "Nyquist" in reason
     assert "fused" not in plan._pallas_layouts()
     with pytest.raises(ValueError, match="fused layout unavailable"):
         plan._anal_fn("pallas_vpu", "fused")
+    assert plan.describe()["fusion"]["skipped"] == reason
+
+
+def test_layout_env_override_raises_on_ineligible(monkeypatch):
+    plan = repro.make_plan("healpix", nside=8, fold=True, dtype="float32",
+                           mode="pallas_vpu", cache="memory")
+    monkeypatch.setenv("REPRO_LEGENDRE_LAYOUT", "fused")
+    with pytest.raises(ValueError, match="ineligible"):
+        plan._synth_fn("pallas_vpu", "packed")
+    with pytest.raises(ValueError, match="equator fold"):
+        plan._anal_fn("pallas_vpu", "packed")
+
+
+def test_layout_env_override_routes_eligible_to_fused(monkeypatch):
+    plan = _plan()
+    monkeypatch.setenv("REPRO_LEGENDRE_LAYOUT", "fused")
+    fn = plan._synth_fn("pallas_vpu", "packed")
+    alm = sht.random_alm(KEY, LMAX, LMAX, K=K).astype(jnp.complex64)
+    txt = str(jax.make_jaxpr(fn)(alm))
+    assert txt.count("pallas_call") == 1    # rerouted onto the fused kernel
+
+
+def test_ops_pick_layout_env_fused_rejected(monkeypatch):
+    from repro.kernels import ops
+    monkeypatch.setenv("REPRO_LEGENDRE_LAYOUT", "fused")
+    with pytest.raises(ValueError, match="plan level"):
+        ops.pick_layout(np.arange(4))
+
+
+def test_ops_pick_layout_traced_warns_once_then_degrades():
+    import warnings as _warnings
+
+    from repro.kernels import ops
+    ops._TRACED_WARNED = False
+    picked = []
+
+    @jax.jit
+    def probe(m):
+        picked.append(ops.pick_layout(m))
+        return m
+
+    with pytest.warns(RuntimeWarning, match="plain rectangular"):
+        probe(jnp.arange(4))
+    assert picked == ["plain"]
+
+    @jax.jit
+    def probe2(m):
+        picked.append(ops.pick_layout(m, layout="packed"))
+        return m
+
+    with _warnings.catch_warnings():        # one-time: no second warning
+        _warnings.simplefilter("error")
+        probe2(jnp.arange(5))
+    assert picked[-1] == "plain"
 
 
 # ---------------------------------------------------------------------------
@@ -311,3 +474,38 @@ def test_auto_plan_smoke_mode_model_fallback(monkeypatch):
     alm = sht.random_alm(KEY, 10, 10, K=1).astype(jnp.complex64)
     maps = plan.alm2map(alm)        # the fallback plan still transforms
     assert np.all(np.isfinite(np.asarray(maps)))
+
+
+def test_fused_lp_candidates_schedule():
+    from repro.kernels import pack as kpack
+    assert kpack.fused_lp_candidates(24) == (128,)
+    assert kpack.fused_lp_candidates(127) == (128,)
+    assert kpack.fused_lp_candidates(128) == (128, 256)
+
+
+def test_chardb_lp_corners_remeasured_zero(monkeypatch):
+    """Block-shape (lp_size) autotune corners persist in the chardb: a
+    second plan build after clearing every plan/decision cache re-measures
+    zero corners, and picks the same panel length."""
+    from repro.kernels import pack as kpack
+    monkeypatch.setattr(kpack, "fused_lp_candidates",
+                        lambda l_max: (128, 256))
+    plan = repro.make_plan("gl", l_max=8, K=1, dtype="float32", mode="auto",
+                           cache="memory")
+    lp1 = plan._fused_lp_size()
+    assert lp1 in (128, 256)
+    db = chardb.get_db()
+    lp_sizes = {rec["fields"].get("lp_size")
+                for rec in db._store.values()
+                if rec["fields"].get("layout") == "fused"}
+    assert {128, 256} <= lp_sizes        # both candidates characterized
+    assert db.counters["measured"] > 0
+    transform.clear_plan_cache()
+    plancache.clear_memory()
+    chardb.reset_stats()
+    plan2 = repro.make_plan("gl", l_max=8, K=1, dtype="float32",
+                            mode="auto", cache="memory")
+    assert plan2._fused_lp_size() == lp1
+    again = dict(chardb.get_db().counters)
+    assert again["measured"] == 0, again
+    assert plan2.describe()["fusion"]["lp_size"] == lp1

@@ -268,6 +268,10 @@ def test_pool_hits_and_warmup():
     # prewarm built the (sig, max_k=2) plan; both batches then hit it
     assert p["misses"] == 1 and p["hits"] == 2
     assert eng.stats()["pool"]["hit_rate"] == pytest.approx(2 / 3)
+    # fused-pipeline coverage of the warm set: the gl plan is eligible
+    f = p["fusion"]
+    assert f["eligible"] == 1 and f["staged"] == 0
+    assert f["active"] in (0, 1)        # autotune decides the dispatch
 
 
 def test_pool_lru_eviction_releases_plans():
