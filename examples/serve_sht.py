@@ -7,7 +7,13 @@ independent per-request Plan call, and prints the serving stats table
 (latency percentiles, coalescing factor, plan-pool hit rate).
 
     PYTHONPATH=src python examples/serve_sht.py --requests 12
+    PYTHONPATH=src python examples/serve_sht.py --p99-target-ms 50
     PYTHONPATH=src python examples/serve_sht.py --smoke      # CI one-rep
+
+``--p99-target-ms`` switches coalescing from the fixed ``--max-k`` cap to
+roofline admission control: per signature, the widest power-of-two K
+whose *predicted* batch time fits the target (the admission verdicts and
+predicted-vs-measured calibration show up in the stats table).
 """
 
 import argparse
@@ -25,13 +31,20 @@ def main():
     ap.add_argument("--max-k", type=int, default=4)
     ap.add_argument("--lmax", type=int, default=24)
     ap.add_argument("--nside", type=int, default=8)
+    ap.add_argument("--p99-target-ms", type=float, default=None,
+                    help="tail-latency target: roofline admission caps "
+                         "each group's coalesced K so predicted batch "
+                         "time fits the target (default: off, max-k "
+                         "rules)")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny sizes, few requests (CI)")
     a = ap.parse_args()
     if a.smoke:
         a.requests, a.lmax, a.nside = min(a.requests, 6), 12, 4
 
-    eng = ShtEngine(max_k=a.max_k, mode="jnp", warm_after=2)
+    target_s = None if a.p99_target_ms is None else a.p99_target_ms * 1e-3
+    eng = ShtEngine(max_k=a.max_k, mode="jnp", warm_after=2,
+                    p99_target_s=target_s)
     eng.prewarm(grid="gl", l_max=a.lmax, dtype="float64")
 
     # a traffic mix: GL spin-0, GL spin-2 (polarisation), HEALPix spin-0

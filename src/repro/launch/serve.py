@@ -1,10 +1,14 @@
 """Serving CLI: the SHT request-coalescing engine under synthetic load.
 
     PYTHONPATH=src python -m repro.launch.serve --requests 8 --smoke
+    PYTHONPATH=src python -m repro.launch.serve --p99-target-ms 50
 
-Runs the background serving thread, submits a mixed spin-0/spin-2 request
-stream, waits for every future, and prints the stats table (p50/p95/p99
-latency, coalescing factor, plan-pool hit rate).
+Runs the double-buffered serving threads (batch i+1 stages while batch i
+computes), submits a mixed spin-0/spin-2 request stream, waits for every
+future, and prints the stats table (p50/p95/p99 latency, coalescing
+factor, admission caps, plan-pool hit rate).  ``--p99-target-ms`` turns
+on roofline admission control: the coalesced K per signature is capped by
+the latency target instead of ``--max-k`` alone.
 """
 
 import argparse
@@ -24,13 +28,18 @@ def main():
     ap.add_argument("--mode", default="jnp",
                     help="plan dispatch mode for pooled plans "
                          "(jnp | auto | model | pallas_*)")
+    ap.add_argument("--p99-target-ms", type=float, default=None,
+                    help="roofline admission: cap each group's coalesced "
+                         "K to fit this tail-latency target")
     ap.add_argument("--smoke", action="store_true")
     a = ap.parse_args()
     if a.smoke:
         a.lmax = min(a.lmax, 16)
 
-    eng = ShtEngine(max_k=a.max_k, mode=a.mode, warm_after=2)
-    with eng:                                    # background serving thread
+    target_s = None if a.p99_target_ms is None else a.p99_target_ms * 1e-3
+    eng = ShtEngine(max_k=a.max_k, mode=a.mode, warm_after=2,
+                    p99_target_s=target_s)
+    with eng:                          # double-buffered form/exec threads
         futs = []
         for rid in range(a.requests):
             if rid % 2 == 0:

@@ -1,7 +1,8 @@
 # Roofline analysis: compiled-artifact cost extraction + 3-term model,
-# plus the analytic SHT cost model that drives make_plan's dispatch and
-# the persistent per-hardware characterization DB behind mode="auto".
-from repro.roofline import chardb  # noqa: F401
+# plus the analytic SHT cost model that drives make_plan's dispatch, the
+# persistent per-hardware characterization DB behind mode="auto", and the
+# serving engine's latency-target admission control.
+from repro.roofline import admission, chardb  # noqa: F401
 from repro.roofline.analysis import (  # noqa: F401
     BACKEND_MODELS, BackendModel, HW_HOST, HW_V5E, Hardware, Roofline,
     analyze_compiled, collective_bytes, parse_hlo_collectives,

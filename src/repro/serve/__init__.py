@@ -2,16 +2,16 @@
 channel axis over a warm pool of plans.
 
     from repro.serve import ShtEngine
-    eng = ShtEngine(max_k=8, mode="jnp")
+    eng = ShtEngine(max_k=8, mode="jnp", p99_target_s=0.050)
     fut = eng.submit(direction="alm2map", payload=alm, grid="gl", l_max=64)
-    eng.drain()                       # or: with eng: ... (background thread)
-    maps = fut.result()
-    print(eng.report())               # p50/p95/p99, coalescing, pool hits
+    eng.drain()                       # or: with eng: ... (double-buffered
+    maps = fut.result()               #     formation/execute threads)
+    print(eng.report())               # p50/p95/p99, coalescing, admission
 
 See docs/architecture.md ("Serving layer").
 """
 
-from repro.serve.metrics import LatencyWindow, percentile  # noqa: F401
+from repro.serve.metrics import Calibration, LatencyWindow, percentile  # noqa: F401
 from repro.serve.pool import PlanPool, PlanSig  # noqa: F401
 from repro.serve.serve_loop import (  # noqa: F401
     BackpressureError, InvalidStateError, ShtEngine, ShtFuture, ShtRequest,
@@ -21,5 +21,5 @@ from repro.serve.serve_loop import (  # noqa: F401
 __all__ = [
     "ShtEngine", "ShtRequest", "ShtFuture", "PlanPool", "PlanSig",
     "BackpressureError", "ShtTimeoutError", "InvalidStateError",
-    "LatencyWindow", "percentile",
+    "LatencyWindow", "Calibration", "percentile",
 ]

@@ -17,7 +17,7 @@ from __future__ import annotations
 import math
 from typing import Sequence
 
-__all__ = ["percentile", "LatencyWindow"]
+__all__ = ["percentile", "LatencyWindow", "Calibration"]
 
 
 def percentile(xs: Sequence[float], q: float) -> float:
@@ -74,3 +74,37 @@ class LatencyWindow:
             "p95_s": percentile(xs, 95.0),
             "p99_s": percentile(xs, 99.0),
         }
+
+
+class Calibration:
+    """Predicted-vs-measured batch compute, for admission control.
+
+    The admission controller prices micro-batches with the roofline model
+    (`repro.roofline.admission`); this tracker records, per executed
+    batch, the model's prediction next to the measured device wall time
+    so ``stats()`` can report how honest the model is on this host.
+    ``ratio > 1`` means the model is optimistic (the device runs slower
+    than predicted, so the admitted K is wider than the target warrants).
+    """
+
+    def __init__(self):
+        self.count = 0
+        self.sum_predicted_s = 0.0
+        self.sum_measured_s = 0.0
+
+    def record(self, predicted_s: float, measured_s: float) -> None:
+        self.count += 1
+        self.sum_predicted_s += float(predicted_s)
+        self.sum_measured_s += float(measured_s)
+
+    @property
+    def ratio(self) -> float:
+        if self.sum_predicted_s <= 0.0:
+            return float("nan")
+        return self.sum_measured_s / self.sum_predicted_s
+
+    def summary(self) -> dict:
+        return {"count": self.count,
+                "predicted_s": self.sum_predicted_s,
+                "measured_s": self.sum_measured_s,
+                "ratio": self.ratio}

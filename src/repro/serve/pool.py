@@ -46,11 +46,13 @@ class PlanSig:
 class PlanPool:
     """Bounded LRU of warm plans on top of ``make_plan``'s signature cache.
 
-    Thread-safe: ``get``/``warm`` may be called from the engine loop and
-    from background warm-up threads concurrently.  Building a plan happens
-    under the lock (make_plan's module caches are not locked themselves),
-    which also means a warm-up in flight blocks a concurrent ``get`` for
-    the same signature instead of double-building.
+    Thread-safe: ``get``/``warm`` may be called from the engine's
+    formation thread and from background warm-up threads concurrently.
+    The pool lock only guards the LRU map; *building* a plan happens
+    outside it behind a per-key build event, so a warm-up compiling one
+    signature never blocks ``get`` for a different signature (the
+    double-buffered engine's formation thread must keep staging), while
+    two concurrent requests for the *same* key still build it once.
     """
 
     def __init__(self, capacity: int = 8, *, mode: str = "auto",
@@ -60,6 +62,7 @@ class PlanPool:
         self.cache_dir = cache_dir
         self._lock = threading.RLock()
         self._lru = plancache.LRU(capacity, on_evict=self._release)
+        self._building: dict = {}           # key -> threading.Event
         self.hits = 0
         self.misses = 0
         self.warmups = 0
@@ -87,18 +90,33 @@ class PlanPool:
         """The pooled plan for ``(sig, k_plan)``, building it on a miss."""
         import repro
         key = self._key(sig, k_plan)
-        with self._lock:
-            plan = self._lru.get(key)
-            if plan is not None:
-                self.hits += 1
-                return plan
-            self.misses += 1
+        while True:
+            with self._lock:
+                plan = self._lru.get(key)
+                if plan is not None:
+                    self.hits += 1
+                    return plan
+                done = self._building.get(key)
+                if done is None:
+                    done = threading.Event()
+                    self._building[key] = done
+                    self.misses += 1
+                    break
+            # another thread is building this key: wait it out, then
+            # re-check the LRU (on build failure we retry as the builder)
+            done.wait()
+        try:
             plan = repro.make_plan(
                 sig.grid, sig.l_max, nside=sig.nside, m_max=sig.m_max,
                 K=int(k_plan), dtype=sig.dtype, spin=sig.spin,
                 mode=self.mode, cache=self.cache, cache_dir=self.cache_dir)
-            self._lru.put(key, plan)
+            with self._lock:
+                self._lru.put(key, plan)
             return plan
+        finally:
+            with self._lock:
+                del self._building[key]
+            done.set()
 
     def warm(self, sig: PlanSig, k_plan: int,
              directions=("synth", "anal")):

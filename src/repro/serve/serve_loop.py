@@ -1,5 +1,5 @@
 """SHT serving engine: coalesce concurrent transform requests into the K
-channel axis.
+channel axis, double-buffered against a warm plan pool.
 
 The batched transform is the throughput lever (the MXU contraction wants a
 fat K axis; ``speedup/batched-K4`` in BENCH_*.json), but production traffic
@@ -10,14 +10,46 @@ engine closes that gap:
   spin, dtype)`` plus ``(direction, iters)`` -- only transforms that can
   share one device call are mixed;
 * within a group, queued requests are **stacked along the K channel axis**
-  up to ``max_k`` maps per micro-batch, zero-padded to a power-of-two K
-  bucket so every device step has a dense, pre-compiled shape;
+  into power-of-two K buckets so every device step has a dense,
+  pre-compiled shape.  The bucket width is capped by ``max_k`` and -- when
+  a ``p99_target_s`` is set -- by **roofline admission control**
+  (`repro.roofline.admission`): the largest K whose *predicted* batch
+  time still fits the latency target, libsharp's performance-model idea
+  applied to coalescing;
+* across groups, batch formation runs **weighted deficit round-robin**
+  (WDRR): every signature group with queued work gets a deficit top-up of
+  ``quantum * weight`` K-units per scheduling round and spends it to send
+  batches, so one hot tenant can be 10x the traffic of a minority
+  signature without starving it (FIFO order is still strict *within* a
+  group);
 * execution goes through a **warm pool** of plans (`repro.serve.PlanPool`,
   a bounded LRU over ``make_plan`` with compile warm-up), so a recurring
   signature never re-traces;
 * each request resolves an :class:`ShtFuture` carrying per-request
-  queue/compute/total timing; ``engine.stats()`` aggregates latency
-  percentiles (p50/p95/p99), coalescing factor, and plan-pool hit rate.
+  queue/form/compute/total timing; ``engine.stats()`` aggregates latency
+  percentiles (p50/p95/p99), coalescing factor, plan-pool hit rate,
+  admission caps, and roofline-vs-measured calibration.
+
+Request lifecycle (the state machine ``stats()`` accounts for)::
+
+    submit() --> QUEUED --(batch formation pops)--> IN-FLIGHT
+                    |                                   |
+                    +--(deadline expired)---------------+--> RETIRED
+                                                  (resolved | failed
+                                                   | timed out)
+
+``pending`` counts QUEUED + IN-FLIGHT, so ``drain()`` cannot return while
+a popped micro-batch is still executing, and ``max_queue`` bounds total
+engine *occupancy*, not just the queue.
+
+The engine runs in two modes.  Synchronous: pump ``step()`` / ``drain()``
+inline (deterministic -- what most tests use).  Background
+(``with engine:`` or ``start()``/``stop()``): **double-buffered
+submit->execute** in the spirit of the paper's host/device overlap -- a
+formation thread stages batch i+1 (pops requests, resolves the pooled
+plan, stacks and uploads the host payload) while the execute thread runs
+batch i on the device, with a capacity-one condition-variable handoff
+slot between them (no polling sleeps anywhere on the serving path).
 
 Fault containment: the queue is bounded (`submit` raises
 :class:`BackpressureError` instead of growing without bound), a request
@@ -26,20 +58,15 @@ claimed signature -- fails *its own* future only, and a per-request
 ``timeout`` evicts stale work at batch-formation time so one wedged
 client cannot stall the loop.
 
-Batches preserve FIFO order: within a signature strictly (the coalescer
-never reorders a group's deque), and across signatures by oldest waiting
-request.  Results are per-channel identical to independent per-request
-``Plan`` calls -- the K axis is a pure batch axis in every backend
-(asserted to 1e-12/f64 by tests/test_serve.py and bench_serve).
-
-The engine runs in two modes: pump it synchronously (``step()`` /
-``drain()``, deterministic -- what the tests use) or start the background
-serving thread (``with engine: ...`` or ``start()``/``stop()``).
+Results are per-channel identical to independent per-request ``Plan``
+calls -- the K axis is a pure batch axis in every backend (asserted to
+1e-12/f64 by tests/test_serve.py and bench_serve).
 """
 
 from __future__ import annotations
 
 import dataclasses
+import os
 import threading
 import time
 from collections import deque
@@ -47,7 +74,7 @@ from typing import Optional
 
 import numpy as np
 
-from repro.serve.metrics import LatencyWindow
+from repro.serve.metrics import Calibration, LatencyWindow
 from repro.serve.pool import PlanPool, PlanSig
 
 __all__ = ["ShtEngine", "ShtRequest", "ShtFuture", "BackpressureError",
@@ -55,7 +82,8 @@ __all__ = ["ShtEngine", "ShtRequest", "ShtFuture", "BackpressureError",
 
 
 class BackpressureError(RuntimeError):
-    """submit() refused: the bounded request queue is full."""
+    """submit() refused: queued + in-flight requests already fill
+    ``max_queue``."""
 
 
 class ShtTimeoutError(TimeoutError):
@@ -161,6 +189,62 @@ class _Pending:
     squeeze: bool                     # drop the K axis from the result
     t_submit: float
     deadline: Optional[float]
+    state: str = "queued"             # queued -> in_flight -> retired
+
+
+@dataclasses.dataclass
+class _Staged:
+    """A formed micro-batch, host side done: the unit the formation
+    thread hands to the execute thread through the double-buffer slot."""
+
+    gkey: tuple                       # (PlanSig, direction, iters)
+    plan: object
+    good: list                        # _Pending entries riding this batch
+    dev: object                       # stacked device payload (K = k_plan)
+    k_total: int
+    k_plan: int
+    form_s: float                     # host-side staging wall time
+    predicted_s: Optional[float]      # admission model's batch estimate
+
+
+class _HandoffSlot:
+    """Capacity-one staging slot between formation and execution: the
+    double buffer.  ``put`` blocks while the previous staged batch has
+    not been taken; ``take`` blocks until a batch arrives (or the slot is
+    closed *and* empty, returning None).  Pure condition-variable
+    handoff -- no polling."""
+
+    def __init__(self):
+        self._cv = threading.Condition()
+        self._item = None
+        self._closed = False
+
+    def put(self, item) -> bool:
+        with self._cv:
+            while self._item is not None and not self._closed:
+                self._cv.wait()
+            if self._closed:
+                return False
+            self._item = item
+            self._cv.notify_all()
+            return True
+
+    def take(self):
+        with self._cv:
+            while self._item is None and not self._closed:
+                self._cv.wait()
+            item, self._item = self._item, None
+            self._cv.notify_all()
+            return item
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+
+def _pow2_floor(n: int) -> int:
+    return 1 << (int(n).bit_length() - 1)
 
 
 def _normalize_payload(req: ShtRequest) -> tuple[np.ndarray, int, bool]:
@@ -205,10 +289,13 @@ class ShtEngine:
 
     Parameters
     ----------
-    max_k : maximum maps coalesced into one device micro-batch (the K
-        channel width plans are built for).
-    max_queue : bounded pending-request count; ``submit`` raises
-        :class:`BackpressureError` beyond it.
+    max_k : maximum maps coalesced into one device micro-batch.  Clamped
+        to the largest power of two <= the requested value (K buckets are
+        power-of-two by contract -- a non-power-of-two cap would fragment
+        the plan-pool key space); the raw value stays visible as
+        ``requested_max_k``.
+    max_queue : bounded engine occupancy (queued **plus** in-flight
+        requests); ``submit`` raises :class:`BackpressureError` beyond it.
     pool_capacity : live plans kept warm (LRU; evictions release the plan
         through ``transform.drop_plan``).
     mode / cache / cache_dir : forwarded to ``make_plan`` for every pooled
@@ -219,34 +306,72 @@ class ShtEngine:
     warm_after : after a signature has been submitted this many times,
         pre-compile its full-width plan in a background thread so the
         steady state never re-traces.  None disables auto warm-up.
+    p99_target_s : tail-latency target driving roofline admission control
+        (`repro.roofline.admission`): per serving group, the coalesced K
+        bucket is capped at the widest power-of-two K whose predicted
+        batch time fits the target with ``admission_slack`` headroom.
+        None (default) disables admission control (``max_k`` rules).
+    admission_slack : pipeline slack factor for the admission test
+        (default 2.0: a request waits behind at most one in-flight batch
+        under double buffering).
+    weights : optional ``{PlanSig.label(): weight}`` map for WDRR batch
+        formation; unlisted signatures weigh 1.0.  A weight-w group earns
+        ``w * quantum_k`` K-units of deficit per scheduling round.
+    quantum_k : WDRR round quantum in K-units (default: the effective
+        ``max_k``, so a weight-1 group can send one full batch per round).
     """
+
+    #: WDRR weights below this are clamped (a zero weight would never
+    #: accumulate deficit and starve the group forever)
+    MIN_WEIGHT = 1.0 / 64.0
 
     def __init__(self, *, max_k: int = 8, max_queue: int = 128,
                  pool_capacity: int = 8, mode: str = "auto",
                  cache: str = "auto", cache_dir: Optional[str] = None,
                  default_timeout: Optional[float] = None,
                  warm_after: Optional[int] = None,
-                 latency_window: int = 4096):
+                 latency_window: int = 4096,
+                 p99_target_s: Optional[float] = None,
+                 admission_slack: float = 2.0,
+                 weights: Optional[dict] = None,
+                 quantum_k: Optional[float] = None):
         assert max_k >= 1 and max_queue >= 1
-        self.max_k = int(max_k)
+        self.requested_max_k = int(max_k)
+        self.max_k = _pow2_floor(int(max_k))
         self.max_queue = int(max_queue)
         self.default_timeout = default_timeout
         self.warm_after = warm_after
+        self.p99_target_s = p99_target_s
+        self.admission_slack = float(admission_slack)
+        self.weights = {str(k): max(float(v), self.MIN_WEIGHT)
+                        for k, v in (weights or {}).items()}
+        self.quantum_k = float(quantum_k if quantum_k is not None
+                               else self.max_k)
+        assert self.quantum_k > 0.0
         self.pool = PlanPool(pool_capacity, mode=mode, cache=cache,
                              cache_dir=cache_dir)
 
         self._lock = threading.RLock()
-        self._work = threading.Condition(self._lock)
+        self._work = threading.Condition(self._lock)   # new/expired work
+        self._idle = threading.Condition(self._lock)   # a request retired
         self._groups: dict = {}             # group key -> deque[_Pending]
+        self._rr: deque = deque()           # WDRR ring: non-empty groups
+        self._deficit: dict = {}            # group key -> K-units earned
+        self._admission: dict = {}          # group key -> admission dict
+        self._n_queued = 0                  # O(1) occupancy counters --
+        self._n_in_flight = 0               # consistent under self._lock
         self._seq = 0
         self._closed = False
-        self._thread: Optional[threading.Thread] = None
         self._stop = False
+        self._form_thread: Optional[threading.Thread] = None
+        self._exec_thread: Optional[threading.Thread] = None
+        self._slot: Optional[_HandoffSlot] = None
 
         # -- observability ----------------------------------------------------
         self._lat_queue = LatencyWindow(latency_window)
         self._lat_compute = LatencyWindow(latency_window)
         self._lat_total = LatencyWindow(latency_window)
+        self._calib = Calibration()
         self.batch_log: list[dict] = []     # bounded, most recent first out
         self._batch_log_cap = latency_window
         self._n_submitted = 0
@@ -266,8 +391,9 @@ class ShtEngine:
     # -- submission -----------------------------------------------------------
 
     def _k_bucket(self, k: int) -> int:
-        """Smallest power-of-two channel width >= k, capped at max_k --
-        the set of K shapes plans are ever compiled for."""
+        """Smallest power-of-two channel width >= k, capped at the
+        (power-of-two) ``max_k`` -- the set of K shapes plans are ever
+        compiled for."""
         b = 1
         while b < min(k, self.max_k):
             b *= 2
@@ -275,8 +401,47 @@ class ShtEngine:
 
     @property
     def pending(self) -> int:
+        """Requests the engine still owes an answer for: queued plus
+        in-flight (popped into a micro-batch but not yet retired)."""
         with self._lock:
-            return sum(len(q) for q in self._groups.values())
+            return self._n_queued + self._n_in_flight
+
+    @staticmethod
+    def _group_label(gkey) -> str:
+        sig, direction, iters = gkey
+        lbl = f"{sig.label()}/{direction}"
+        return lbl if not iters else f"{lbl}/iters{iters}"
+
+    def _weight(self, gkey) -> float:
+        return self.weights.get(gkey[0].label(), 1.0)
+
+    def _admission_for(self, request: ShtRequest) -> Optional[dict]:
+        """Roofline admission verdict for this request's serving group
+        (None when the signature cannot even resolve a geometry -- the
+        plan failure will surface on its own batch instead)."""
+        from repro.core import transform as tf
+        from repro.roofline import admission
+        sig = request.signature()
+        cache_kind = self.pool.cache
+        if cache_kind == "auto":
+            cache_kind = "disk" if (self.pool.cache_dir
+                                    or os.environ.get("REPRO_CACHE_DIR")) \
+                else "memory"
+        try:
+            g, _ = tf._resolve_grid(sig.grid, sig.l_max, sig.nside,
+                                    cache_kind, self.pool.cache_dir)
+        except Exception:
+            return None
+        l_max = sig.l_max if sig.l_max is not None else \
+            (2 * g.nside if g.nside else g.n_rings - 1)
+        return admission.k_caps_for_target(
+            l_max=l_max, m_max=sig.m_max, n_rings=g.n_rings,
+            n_phi=g.max_n_phi, max_k=self.max_k,
+            p99_target_s=self.p99_target_s,
+            direction="synth" if request.direction == "alm2map" else "anal",
+            iters=request.iters, spin=sig.spin,
+            fft_lengths=None if g.uniform else g.n_phi,
+            slack=self.admission_slack)
 
     def submit(self, request: Optional[ShtRequest] = None,
                **kw) -> ShtFuture:
@@ -285,7 +450,8 @@ class ShtEngine:
         Pass a prebuilt :class:`ShtRequest` or its fields as keywords
         (``engine.submit(direction="alm2map", payload=alm, grid="gl",
         l_max=64)``).  Raises ValueError on malformed requests and
-        :class:`BackpressureError` when the queue is full.
+        :class:`BackpressureError` when queued + in-flight requests
+        already fill ``max_queue``.
         """
         if request is None:
             request = ShtRequest(**kw)
@@ -294,19 +460,26 @@ class ShtEngine:
         payload, k, squeeze = _normalize_payload(request)
         if k > self.max_k:
             raise ValueError(
-                f"request K={k} exceeds the engine's max_k={self.max_k}; "
-                "split the batch or build a wider engine")
+                f"request K={k} exceeds the engine's max_k={self.max_k}"
+                f" (requested_max_k={self.requested_max_k}, clamped to a "
+                "power of two); split the batch or build a wider engine")
         timeout = request.timeout if request.timeout is not None \
             else self.default_timeout
+        gkey = (request.signature(), request.direction, request.iters)
+        adm = None
+        if self.p99_target_s is not None and gkey not in self._admission:
+            adm = self._admission_for(request)     # geometry work: no lock
         now = time.perf_counter()
         with self._lock:
             if self._closed:
                 raise RuntimeError("engine is closed")
-            n_pending = sum(len(q) for q in self._groups.values())
-            if n_pending >= self.max_queue:
+            occupancy = self._n_queued + self._n_in_flight
+            if occupancy >= self.max_queue:
                 raise BackpressureError(
-                    f"queue full ({n_pending}/{self.max_queue} pending); "
-                    "drain or raise max_queue")
+                    f"engine full ({occupancy}/{self.max_queue} queued + "
+                    "in-flight); drain or raise max_queue")
+            if adm is not None and gkey not in self._admission:
+                self._admission[gkey] = adm
             fut = ShtFuture(rid=self._seq)
             p = _Pending(request=request, future=fut, seq=self._seq,
                          payload=payload, k=k, squeeze=squeeze,
@@ -314,10 +487,13 @@ class ShtEngine:
                          deadline=None if timeout is None else now + timeout)
             self._seq += 1
             self._n_submitted += 1
+            self._n_queued += 1
             if self._t_first_submit is None:
                 self._t_first_submit = now
-            gkey = (request.signature(), request.direction, request.iters)
-            self._groups.setdefault(gkey, deque()).append(p)
+            q = self._groups.setdefault(gkey, deque())
+            if not q:
+                self._rr.append(gkey)              # group (re)enters WDRR
+            q.append(p)
             sig = gkey[0]
             self._sig_counts[sig] = self._sig_counts.get(sig, 0) + 1
             warm = (self.warm_after is not None
@@ -366,46 +542,90 @@ class ShtEngine:
             return self._spawn_warm(sig, k_plan)
         return self.pool.warm(sig, k_plan)
 
-    # -- the serving loop ------------------------------------------------------
+    # -- batch formation -------------------------------------------------------
+
+    def _take_locked(self, p: _Pending) -> None:
+        """queued -> in-flight (caller holds the lock)."""
+        assert p.state == "queued", p.state
+        p.state = "in_flight"
+        self._n_queued -= 1
+        self._n_in_flight += 1
+
+    def _drop_group_locked(self, gkey) -> None:
+        if gkey in self._rr:
+            self._rr.remove(gkey)
+        self._deficit.pop(gkey, None)
 
     def _evict_expired_locked(self, now: float) -> list[_Pending]:
         out = []
-        for gkey, q in self._groups.items():
+        for gkey, q in list(self._groups.items()):
             if not any(p.deadline is not None and p.deadline < now
                        for p in q):
                 continue
             keep: deque = deque()
             for p in q:
                 if p.deadline is not None and p.deadline < now:
+                    self._take_locked(p)
                     out.append(p)
                 else:
                     keep.append(p)
             self._groups[gkey] = keep
+            if not keep:
+                self._drop_group_locked(gkey)
         return out
 
+    def _k_cap_locked(self, gkey) -> int:
+        adm = self._admission.get(gkey)
+        if adm is None:
+            return self.max_k
+        return min(self.max_k, int(adm["k_cap"]))
+
     def _pop_batch_locked(self):
-        """FIFO batch formation: the group whose head waited longest wins;
-        its requests are taken in order while they fit in max_k (never
-        skipping over one that does not -- order is part of the contract).
-        """
-        live = {g: q for g, q in self._groups.items() if q}
-        if not live:
-            return None, []
-        gkey = min(live, key=lambda g: live[g][0].seq)
-        q = live[gkey]
-        batch, k_sum = [], 0
-        while q and k_sum + q[0].k <= self.max_k:
-            p = q.popleft()
-            batch.append(p)
-            k_sum += p.k
-        return gkey, batch
+        """WDRR batch formation: visit signature groups round-robin; each
+        visit tops the group's deficit up by ``quantum_k * weight`` and
+        the group spends deficit, one K-unit per map, to send requests --
+        in strict FIFO order within the group, up to the admission-
+        controlled K cap per batch.  A hot tenant that exhausts its
+        deficit hands the rest of the round to the others; an oversized
+        single request (k > cap) still ships alone once its deficit
+        covers it, so admission caps coalescing, never service."""
+        passes = 0
+        while self._rr:
+            gkey = self._rr[0]
+            q = self._groups.get(gkey)
+            if not q:                              # lazily prune emptied
+                self._rr.popleft()
+                self._deficit.pop(gkey, None)
+                continue
+            self._deficit[gkey] = (self._deficit.get(gkey, 0.0)
+                                   + self.quantum_k * self._weight(gkey))
+            cap = self._k_cap_locked(gkey)
+            force = passes > 64 * len(self._rr) + 1   # safety: never wedge
+            batch, k_sum = [], 0
+            while q:
+                nk = q[0].k
+                if batch and k_sum + nk > cap:
+                    break                          # bucket full
+                if k_sum + nk > self._deficit[gkey] and not force:
+                    break                          # deficit spent
+                p = q.popleft()
+                self._take_locked(p)
+                batch.append(p)
+                k_sum += nk
+            if batch:
+                self._deficit[gkey] -= k_sum
+                self._rr.rotate(-1)                # next round: next group
+                if not q:
+                    self._drop_group_locked(gkey)
+                return gkey, batch
+            self._rr.rotate(-1)
+            passes += 1
+        return None, []
 
-    def step(self) -> int:
-        """Process one coalesced micro-batch (plus any timeout evictions).
-
-        Returns the number of requests retired (resolved, failed or
-        evicted); 0 means the queue was empty.
-        """
+    def _form_once(self):
+        """Evict expired requests and stage one micro-batch (host side:
+        pop, plan lookup, validation, payload stacking + upload).
+        Returns ``(staged_or_None, n_retired_during_formation)``."""
         now = time.perf_counter()
         with self._lock:
             expired = self._evict_expired_locked(now)
@@ -419,27 +639,67 @@ class ShtEngine:
                 timing={"queue_s": waited, "compute_s": 0.0,
                         "total_s": waited})
             n += 1
-        if batch:
-            n += self._execute(gkey, batch)
-        return n
+        if not batch:
+            return None, n
+        staged, n_failed = self._stage(gkey, batch)
+        return staged, n + n_failed
 
-    def drain(self, timeout: Optional[float] = None) -> None:
-        """Block until every pending request is retired.
+    def _stage(self, gkey, batch: list[_Pending]):
+        """Host-side half of a micro-batch: resolve the pooled plan,
+        validate each payload against it, stack along K and upload.
+        Returns ``(staged_or_None, n_retired)``."""
+        import jax.numpy as jnp
 
-        Synchronous mode pumps ``step()`` inline; with the background
-        thread running it just waits.  Raises TimeoutError if the queue is
-        not empty by ``timeout`` seconds.
-        """
-        deadline = None if timeout is None else time.perf_counter() + timeout
-        while self.pending:
-            if deadline is not None and time.perf_counter() > deadline:
-                raise TimeoutError(f"drain: {self.pending} request(s) "
-                                   f"still pending after {timeout}s")
-            if self._thread is None:
-                self.step()
+        sig, direction, iters = gkey
+        t_form = time.perf_counter()
+        k_claim = sum(p.k for p in batch)
+        k_plan = self._k_bucket(k_claim)
+
+        try:
+            plan = self.pool.get(sig, k_plan)
+        except Exception as e:
+            for p in batch:
+                self._retire(p, exc=e, kind="failed",
+                             timing={"queue_s": t_form - p.t_submit})
+            self._log_batch(sig, direction, batch, k_claim, k_plan, ok=False)
+            return None, len(batch)
+
+        # per-request shape validation against the *resolved* plan: a
+        # payload that lied about its signature fails alone, not its batch
+        base = (plan._alm_shape if direction == "alm2map"
+                else plan._maps_shape)[:-1]
+        good, k_total = [], 0
+        for p in batch:
+            if p.payload.shape[:-1] != base:
+                self._retire(p, exc=ValueError(
+                    f"payload shape {p.payload.shape} does not match plan "
+                    f"{sig.label()} (expected {base} + (K,))"),
+                    kind="failed",
+                    timing={"queue_s": t_form - p.t_submit})
             else:
-                time.sleep(0.002)
-        self._join_warmups()
+                good.append(p)
+                k_total += p.k
+        if not good:
+            self._log_batch(sig, direction, batch, 0, k_plan, ok=False)
+            return None, len(batch)
+
+        cdtype = np.complex128 if sig.dtype == "float64" else np.complex64
+        rdtype = np.dtype(sig.dtype)
+        want = cdtype if direction == "alm2map" else rdtype
+        parts = [np.ascontiguousarray(p.payload, dtype=want) for p in good]
+        if k_total < plan.K:                       # dense K bucket: zero-pad
+            parts.append(np.zeros(base + (plan.K - k_total,), dtype=want))
+        dev = jnp.asarray(np.concatenate(parts, axis=-1))
+
+        adm = self._admission.get(gkey)
+        predicted = None
+        if adm is not None:
+            predicted = adm["predicted_s_by_k"].get(k_plan)
+        staged = _Staged(gkey=gkey, plan=plan, good=good, dev=dev,
+                         k_total=k_total, k_plan=k_plan,
+                         form_s=time.perf_counter() - t_form,
+                         predicted_s=predicted)
+        return staged, len(batch) - len(good)
 
     # -- execution ------------------------------------------------------------
 
@@ -451,6 +711,11 @@ class ShtEngine:
         else:
             p.future._resolve(result)
         with self._lock:
+            if p.state == "queued":
+                self._n_queued -= 1
+            elif p.state == "in_flight":
+                self._n_in_flight -= 1
+            p.state = "retired"
             if kind == "ok":
                 self._n_completed += 1
             elif kind == "timeout":
@@ -464,6 +729,7 @@ class ShtEngine:
                 self._lat_compute.record(t.get("compute_s", 0.0))
                 self._lat_total.record(t.get("total_s", 0.0))
             self._t_last_done = time.perf_counter()
+            self._idle.notify_all()
 
     def _log_batch(self, sig: PlanSig, direction: str, batch, k_total: int,
                    k_plan: int, ok: bool) -> None:
@@ -482,67 +748,32 @@ class ShtEngine:
                 del self.batch_log[: len(self.batch_log)
                                    - self._batch_log_cap]
 
-    def _execute(self, gkey, batch: list[_Pending]) -> int:
+    def _execute_staged(self, staged: _Staged) -> int:
+        """Device half of a micro-batch: run the transform, scatter the
+        K slices back to their futures.  Returns requests retired."""
         import jax
-        import jax.numpy as jnp
 
-        sig, direction, iters = gkey
+        sig, direction, iters = staged.gkey
+        plan, good = staged.plan, staged.good
         t_start = time.perf_counter()
-        k_claim = sum(p.k for p in batch)
-        k_plan = self._k_bucket(k_claim)
-
-        def fail_all(ps, exc):
-            for p in ps:
-                waited = t_start - p.t_submit
-                self._retire(p, exc=exc, kind="failed",
-                             timing={"queue_s": waited})
-
-        try:
-            plan = self.pool.get(sig, k_plan)
-        except Exception as e:
-            fail_all(batch, e)
-            self._log_batch(sig, direction, batch, k_claim, k_plan, ok=False)
-            return len(batch)
-
-        # per-request shape validation against the *resolved* plan: a
-        # payload that lied about its signature fails alone, not its batch
-        base = (plan._alm_shape if direction == "alm2map"
-                else plan._maps_shape)[:-1]
-        good, k_total = [], 0
-        for p in batch:
-            if p.payload.shape[:-1] != base:
-                self._retire(p, exc=ValueError(
-                    f"payload shape {p.payload.shape} does not match plan "
-                    f"{sig.label()} (expected {base} + (K,))"),
-                    kind="failed",
-                    timing={"queue_s": t_start - p.t_submit})
-            else:
-                good.append(p)
-                k_total += p.k
-        if not good:
-            self._log_batch(sig, direction, batch, 0, k_plan, ok=False)
-            return len(batch)
-
-        cdtype = np.complex128 if sig.dtype == "float64" else np.complex64
-        rdtype = np.dtype(sig.dtype)
-        want = cdtype if direction == "alm2map" else rdtype
-        parts = [np.ascontiguousarray(p.payload, dtype=want) for p in good]
-        if k_total < plan.K:                       # dense K bucket: zero-pad
-            parts.append(np.zeros(base + (plan.K - k_total,), dtype=want))
-        stacked = np.concatenate(parts, axis=-1)
-
         try:
             if direction == "alm2map":
-                out = plan.alm2map(jnp.asarray(stacked))
+                out = plan.alm2map(staged.dev)
             else:
-                out = plan.map2alm(jnp.asarray(stacked), iters=iters)
+                out = plan.map2alm(staged.dev, iters=iters)
             jax.block_until_ready(out)
         except Exception as e:
-            fail_all(good, e)
-            self._log_batch(sig, direction, batch, k_total, k_plan, ok=False)
-            return len(batch)
+            for p in good:
+                self._retire(p, exc=e, kind="failed",
+                             timing={"queue_s": t_start - p.t_submit})
+            self._log_batch(sig, direction, good, staged.k_total,
+                            staged.k_plan, ok=False)
+            return len(good)
         t_done = time.perf_counter()
         compute_s = t_done - t_start
+        if staged.predicted_s is not None:
+            with self._lock:
+                self._calib.record(staged.predicted_s, compute_s)
 
         out = np.asarray(out)
         off = 0
@@ -553,61 +784,129 @@ class ShtEngine:
                 res = res[..., 0]
             self._retire(p, result=res, kind="ok", timing={
                 "queue_s": t_start - p.t_submit,
+                "form_s": staged.form_s,
                 "compute_s": compute_s,
                 "total_s": t_done - p.t_submit,
-                "k_plan": k_plan,
+                "k_plan": staged.k_plan,
                 "coalesced_with": len(good) - 1,
             })
-        self._log_batch(sig, direction, good, k_total, k_plan, ok=True)
-        return len(batch)
+        self._log_batch(sig, direction, good, staged.k_total, staged.k_plan,
+                        ok=True)
+        return len(good)
 
-    # -- background serving ----------------------------------------------------
+    # -- synchronous serving ---------------------------------------------------
 
-    def start(self) -> "ShtEngine":
-        """Start the background serving thread (idempotent)."""
-        with self._lock:
-            if self._thread is not None:
-                return self
-            self._stop = False
-            self._thread = threading.Thread(target=self._loop,
-                                            name="sht-serve", daemon=True)
-        self._thread.start()
-        return self
+    def step(self) -> int:
+        """Process one coalesced micro-batch inline (plus any timeout
+        evictions).  Synchronous mode only -- with the background threads
+        running, submit and ``drain()`` instead.
 
-    def _loop(self) -> None:
+        Returns the number of requests retired (resolved, failed or
+        evicted); 0 means the queue was empty.
+        """
+        staged, n = self._form_once()
+        if staged is not None:
+            n += self._execute_staged(staged)
+        return n
+
+    def drain(self, timeout: Optional[float] = None) -> None:
+        """Block until every pending request -- queued *and* in-flight --
+        is retired.
+
+        Synchronous mode pumps ``step()`` inline; with the background
+        threads running it waits on the retirement condition variable (no
+        polling).  Raises TimeoutError if requests are still pending
+        after ``timeout`` seconds.
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        background = self._form_thread is not None
         while True:
             with self._lock:
+                left = self._n_queued + self._n_in_flight
+                if left == 0:
+                    break
+                if deadline is not None and time.perf_counter() > deadline:
+                    raise TimeoutError(f"drain: {left} request(s) "
+                                       f"still pending after {timeout}s")
+                if background:
+                    wait = 0.1 if deadline is None else \
+                        max(0.0, min(0.1, deadline - time.perf_counter()))
+                    self._idle.wait(wait)
+                    continue
+            self.step()
+        self._join_warmups()
+
+    # -- background serving: double-buffered formation -> execution -----------
+
+    def start(self) -> "ShtEngine":
+        """Start the double-buffered serving threads (idempotent): a
+        formation thread stages batch i+1 while the execute thread runs
+        batch i on the device."""
+        with self._lock:
+            if self._form_thread is not None:
+                return self
+            self._stop = False
+            self._slot = _HandoffSlot()
+            self._form_thread = threading.Thread(
+                target=self._formation_loop, name="sht-serve-form",
+                daemon=True)
+            self._exec_thread = threading.Thread(
+                target=self._execute_loop, name="sht-serve-exec",
+                daemon=True)
+        self._form_thread.start()
+        self._exec_thread.start()
+        return self
+
+    def _formation_loop(self) -> None:
+        while True:
+            with self._work:
+                while not self._stop and self._n_queued == 0:
+                    self._work.wait(timeout=0.1)
                 if self._stop:
                     return
-            if self.step() == 0:
-                with self._work:
-                    if self._stop:
-                        return
-                    self._work.wait(timeout=0.01)
+            staged, _ = self._form_once()
+            if staged is not None and not self._slot.put(staged):
+                # slot closed mid-handoff (stop raced us): never strand
+                # an in-flight batch -- run it here instead
+                self._execute_staged(staged)
+
+    def _execute_loop(self) -> None:
+        while True:
+            staged = self._slot.take()
+            if staged is None:                     # closed and flushed
+                return
+            self._execute_staged(staged)
 
     def stop(self, drain: bool = True) -> None:
-        """Stop the background thread; ``drain=True`` (default) retires
-        the remaining queue synchronously first."""
-        t = self._thread
-        if t is not None:
+        """Stop the background threads; ``drain=True`` (default) retires
+        the remaining queue synchronously first.  The in-flight staged
+        batch (if any) always executes -- stopping never strands a popped
+        request."""
+        ft, et = self._form_thread, self._exec_thread
+        if ft is not None:
             with self._work:
                 self._stop = True
                 self._work.notify_all()
-            t.join()
-            self._thread = None
+            ft.join()
+            self._slot.close()                     # executor flushes + exits
+            et.join()
+            self._form_thread = self._exec_thread = None
+            self._slot = None
         if drain:
             while self.pending:
                 self.step()
         self._join_warmups()
 
     def close(self) -> None:
-        """Stop serving and refuse further submissions; pending requests
-        fail with RuntimeError."""
+        """Stop serving and refuse further submissions; queued requests
+        fail with RuntimeError (in-flight batches still complete)."""
         self.stop(drain=False)
         with self._lock:
             self._closed = True
             leftovers = [p for q in self._groups.values() for p in q]
             self._groups.clear()
+            self._rr.clear()
+            self._deficit.clear()
         for p in leftovers:
             self._retire(p, exc=RuntimeError("engine closed"), kind="failed",
                          timing={})
@@ -620,12 +919,46 @@ class ShtEngine:
 
     # -- observability ---------------------------------------------------------
 
-    def stats(self) -> dict:
-        """Structured serving metrics: request counters, latency
-        percentiles (seconds), coalescing factors, plan-pool counters and
-        sustained throughput."""
+    def describe(self) -> dict:
+        """Structured engine configuration: coalescing caps, admission
+        policy, fairness policy, pool settings, pipeline state.  The
+        static complement of :meth:`stats`."""
         with self._lock:
-            n_pending = sum(len(q) for q in self._groups.values())
+            admission = {
+                "p99_target_s": self.p99_target_s,
+                "slack": self.admission_slack,
+                "groups": {self._group_label(g): {
+                    "k_cap": a["k_cap"], "feasible": a["feasible"],
+                    "predicted_s": a["predicted_s"], "backend": a["backend"],
+                } for g, a in self._admission.items()},
+            }
+            return {
+                "max_k": self.max_k,
+                "requested_max_k": self.requested_max_k,
+                "max_queue": self.max_queue,
+                "default_timeout": self.default_timeout,
+                "warm_after": self.warm_after,
+                "states": ("queued", "in_flight", "retired"),
+                "admission": admission,
+                "fairness": {"policy": "wdrr",
+                             "quantum_k": self.quantum_k,
+                             "weights": dict(self.weights)},
+                "pipeline": {
+                    "double_buffered": self._form_thread is not None,
+                    "threads": [t.name for t in (self._form_thread,
+                                                 self._exec_thread) if t],
+                },
+                "pool": {"capacity": self.pool.capacity,
+                         "mode": self.pool.mode, "cache": self.pool.cache,
+                         "cache_dir": self.pool.cache_dir},
+            }
+
+    def stats(self) -> dict:
+        """Structured serving metrics: request counters (queued /
+        in-flight / retired states), latency percentiles (seconds),
+        coalescing factors, admission caps + model calibration, WDRR
+        deficits, plan-pool counters and sustained throughput."""
+        with self._lock:
             nb = self._n_batches
             elapsed = None
             if self._t_first_submit is not None \
@@ -637,7 +970,9 @@ class ShtEngine:
                     "completed": self._n_completed,
                     "failed": self._n_failed,
                     "timed_out": self._n_timed_out,
-                    "pending": n_pending,
+                    "queued": self._n_queued,
+                    "in_flight": self._n_in_flight,
+                    "pending": self._n_queued + self._n_in_flight,
                 },
                 "latency": {
                     "queue": self._lat_queue.summary(),
@@ -654,6 +989,22 @@ class ShtEngine:
                     "k_occupancy":
                         (self._sum_batch_k / self._sum_batch_k_plan)
                         if self._sum_batch_k_plan else float("nan"),
+                },
+                "admission": {
+                    "p99_target_s": self.p99_target_s,
+                    "slack": self.admission_slack,
+                    "groups": {self._group_label(g): {
+                        "k_cap": a["k_cap"], "feasible": a["feasible"],
+                        "predicted_s": a["predicted_s"],
+                    } for g, a in self._admission.items()},
+                    "calibration": self._calib.summary(),
+                },
+                "fairness": {
+                    "policy": "wdrr",
+                    "quantum_k": self.quantum_k,
+                    "weights": dict(self.weights),
+                    "deficits": {self._group_label(g): d
+                                 for g, d in self._deficit.items()},
                 },
                 "pool": self.pool.stats(),
                 "signatures": {s.label(): c
@@ -698,6 +1049,19 @@ class ShtEngine:
                 f"K {co['k_per_batch']:.2f} "
                 f"(occupancy {co['k_occupancy']:.2f}) over "
                 f"{co['batches']} batches")
+        adm = s["admission"]
+        if adm["p99_target_s"] is not None:
+            cal = adm["calibration"]
+            caps = ", ".join(f"{lbl}: K<={a['k_cap']}"
+                             + ("" if a["feasible"] else " (infeasible)")
+                             for lbl, a in sorted(adm["groups"].items()))
+            lines.append(
+                f"  admission: p99 target {ms(adm['p99_target_s'])} "
+                f"(slack x{adm['slack']:.1f}) -> {caps or 'no groups yet'}")
+            if cal["count"]:
+                lines.append(
+                    f"  roofline calibration: measured/predicted = "
+                    f"{cal['ratio']:.2f} over {cal['count']} batches")
         for label, count in sorted(s["signatures"].items()):
             lines.append(f"    {label}: {count} request(s)")
         return "\n".join(lines)

@@ -180,3 +180,96 @@ def test_serve_timeout_evicted_later_requests_complete():
     s = eng.stats()["requests"]
     assert s["timed_out"] == 1 and s["completed"] == 1
     assert stale.timing["queue_s"] >= 0.0
+
+
+def test_serve_timeout_eviction_while_group_mid_batch():
+    """A request that expires while an earlier batch of its *own group*
+    is still executing on the background threads is evicted at the next
+    formation pass -- a wedged batch never pins its group's queue."""
+    import threading
+
+    import pytest
+    from repro.serve import ShtEngine, ShtTimeoutError
+
+    eng = ShtEngine(max_k=1, max_queue=8, mode="jnp")
+    started, release = threading.Event(), threading.Event()
+    real_get = eng.pool.get
+
+    class _Stall:
+        def __init__(self, plan):
+            self._plan = plan
+
+        def __getattr__(self, name):
+            return getattr(self._plan, name)
+
+        def alm2map(self, x):
+            started.set()
+            assert release.wait(30.0)
+            return self._plan.alm2map(x)
+
+    eng.pool.get = lambda sig, k: _Stall(real_get(sig, k))
+    with eng:
+        slow = eng.submit(direction="alm2map", payload=_serve_alm(0),
+                          grid="gl", l_max=12)
+        assert started.wait(30.0)                # batch 1 wedged mid-flight
+        stale = eng.submit(direction="alm2map", payload=_serve_alm(1),
+                           grid="gl", l_max=12, timeout=0.0)
+        fresh = eng.submit(direction="alm2map", payload=_serve_alm(2),
+                           grid="gl", l_max=12)
+        time.sleep(0.05)                         # stale's deadline passes
+        release.set()
+        eng.drain(timeout=30.0)
+    assert slow.exception() is None
+    with pytest.raises(ShtTimeoutError):
+        stale.result()
+    assert fresh.exception() is None
+    s = eng.stats()["requests"]
+    assert s["timed_out"] == 1 and s["completed"] == 2 and s["pending"] == 0
+
+
+def test_serve_stop_and_close_with_live_threads_and_executing_batch():
+    """stop() never strands a popped batch (the in-flight staged work
+    executes before the threads join), and close() fails the queued
+    leftovers instead of dropping them -- with background warm-up threads
+    alive through the whole teardown."""
+    import threading
+
+    import pytest
+    from repro.serve import ShtEngine
+
+    eng = ShtEngine(max_k=1, max_queue=8, mode="jnp", warm_after=1)
+    started, release = threading.Event(), threading.Event()
+    real_get = eng.pool.get
+
+    class _Stall:
+        def __init__(self, plan):
+            self._plan = plan
+
+        def __getattr__(self, name):
+            return getattr(self._plan, name)
+
+        def alm2map(self, x):
+            started.set()
+            assert release.wait(30.0)
+            return self._plan.alm2map(x)
+
+    eng.pool.get = lambda sig, k: _Stall(real_get(sig, k))
+    eng.start()
+    inflight = eng.submit(direction="alm2map", payload=_serve_alm(0),
+                          grid="gl", l_max=12)   # warm_after=1 fires here
+    assert started.wait(30.0)                    # wedged mid-execution
+    timer = threading.Timer(0.05, release.set)
+    timer.start()
+    eng.stop(drain=False)    # returns only after the wedged batch lands
+    timer.join()
+    assert inflight.done() and inflight.exception() is None
+    assert eng.describe()["pipeline"]["double_buffered"] is False
+    queued = eng.submit(direction="alm2map", payload=_serve_alm(1),
+                        grid="gl", l_max=12)     # stopped != closed
+    eng.close()                                  # now fail the leftovers
+    assert isinstance(queued.exception(), RuntimeError)
+    with pytest.raises(RuntimeError):
+        eng.submit(direction="alm2map", payload=_serve_alm(2), grid="gl",
+                   l_max=12)                     # closed = no new work
+    s = eng.stats()["requests"]
+    assert s["pending"] == 0 and s["completed"] == 1 and s["failed"] == 1

@@ -1,14 +1,18 @@
 """The SHT serving engine: K-coalescing correctness, signature grouping,
 FIFO fairness, futures, percentile math, and the warm plan pool."""
 
+import threading
+import time
+
 import numpy as np
 import pytest
 
 import repro
 from repro.core import cache as plancache
 from repro.core import sht, spectra, transform
-from repro.serve import (InvalidStateError, PlanPool, PlanSig, ShtEngine,
-                         ShtFuture, ShtRequest, percentile)
+from repro.serve import (BackpressureError, InvalidStateError, PlanPool,
+                         PlanSig, ShtEngine, ShtFuture, ShtRequest,
+                         percentile)
 
 from _hypothesis_compat import given, settings, strategies as st
 
@@ -325,7 +329,9 @@ def test_random_interleavings_roundtrip(seed, n_sigs, max_k):
     jobs = []
     for rid in range(12):
         L = int(rng.choice(lmaxes))
-        k = int(rng.integers(1, max_k + 1))
+        # the engine clamps max_k to a power of two; submits above the
+        # effective cap are rejected, so draw against eng.max_k
+        k = int(rng.integers(1, eng.max_k + 1))
         alm = np.asarray(sht.random_alm(seed=1000 + rid, l_max=L, m_max=L,
                                         K=k))
         if rng.integers(2) == 0:
@@ -368,3 +374,277 @@ def test_submit_request_object_and_tag():
         eng.submit(req, grid="gl")
     eng.drain()
     assert fut.done() and req.tag == "mc-chain-7"
+
+
+# -- phase 2: K buckets, in-flight accounting, double buffering ---------------
+
+
+class _StallPlan:
+    """Proxy around a real plan whose synthesis blocks until released --
+    makes the 'popped but not retired' in-flight window observable."""
+
+    def __init__(self, plan, started, release):
+        self._plan = plan
+        self._started = started
+        self._release = release
+
+    def __getattr__(self, name):
+        return getattr(self._plan, name)
+
+    def alm2map(self, x):
+        self._started.set()
+        assert self._release.wait(30.0), "test forgot to release the batch"
+        return self._plan.alm2map(x)
+
+
+def _stall_pool(eng):
+    """Wrap eng.pool.get so every served plan stalls in alm2map; returns
+    the (started, release) events."""
+    started, release = threading.Event(), threading.Event()
+    real_get = eng.pool.get
+    eng.pool.get = lambda sig, k: _StallPlan(real_get(sig, k), started,
+                                             release)
+    return started, release
+
+
+def test_max_k_clamped_to_power_of_two_and_bucket_invariants():
+    """K buckets are power-of-two by contract.  Historically max_k=6 with
+    a 5-wide batch produced bucket 6 (min(8, 6)) -- a shape no pooled plan
+    key space expects.  Now the engine clamps max_k itself to a power of
+    two and every bucket is an admissible plan width."""
+    eng = _engine(max_k=6)
+    assert eng.max_k == 4 and eng.requested_max_k == 6
+    for req_max in (1, 2, 3, 4, 5, 6, 7, 8, 12, 16):
+        e = _engine(max_k=req_max)
+        assert e.max_k & (e.max_k - 1) == 0          # power of two
+        assert e.max_k <= req_max < 2 * e.max_k      # largest such
+        for k in range(1, e.max_k + 1):
+            b = e._k_bucket(k)
+            assert b & (b - 1) == 0, (req_max, k, b)
+            assert k <= b <= e.max_k
+    # a request wider than the *effective* cap is rejected eagerly
+    with pytest.raises(ValueError, match="max_k"):
+        eng.submit(direction="alm2map", payload=_alm(seed=0, K=5),
+                   grid="gl", l_max=LMAX)
+
+
+def test_drain_waits_for_in_flight_batch():
+    """Regression: drain() used to watch only the *queued* count, so with
+    the background threads running it could return while a popped
+    micro-batch was still executing -- leaving the caller holding an
+    unresolved future after a 'complete' drain."""
+    eng = _engine(max_k=2)
+    started, release = _stall_pool(eng)
+    with eng:
+        fut = eng.submit(direction="alm2map", payload=_alm(seed=0),
+                         grid="gl", l_max=LMAX)
+        assert started.wait(30.0)                # popped, mid-execution
+        assert eng.pending == 1                  # in-flight, not queued
+        t = threading.Timer(0.05, release.set)
+        t.start()
+        eng.drain(timeout=30.0)
+        assert fut.done(), "drain() returned with the batch in flight"
+        t.join()
+    assert fut.exception() is None
+    assert fut.timing["compute_s"] > 0.0
+
+
+def test_backpressure_counts_in_flight():
+    """max_queue bounds engine *occupancy*: a request executing on the
+    background threads still holds its slot, so submit() past the bound
+    raises BackpressureError even though the queue proper is empty."""
+    eng = _engine(max_k=1, max_queue=1)
+    started, release = _stall_pool(eng)
+    with eng:
+        fut = eng.submit(direction="alm2map", payload=_alm(seed=0),
+                         grid="gl", l_max=LMAX)
+        assert started.wait(30.0)
+        s = eng.stats()["requests"]
+        assert s["queued"] == 0 and s["in_flight"] == 1 and s["pending"] == 1
+        with pytest.raises(BackpressureError):
+            eng.submit(direction="alm2map", payload=_alm(seed=1),
+                       grid="gl", l_max=LMAX)
+        release.set()
+        eng.drain(timeout=30.0)
+    assert fut.done() and fut.exception() is None
+    late = eng.submit(direction="alm2map", payload=_alm(seed=2), grid="gl",
+                      l_max=LMAX)                # slot freed by retirement
+    eng.drain()
+    assert late.exception() is None
+
+
+# -- phase 2: WDRR fairness ---------------------------------------------------
+
+
+def test_wdrr_minority_group_not_starved():
+    """10+:1 hot:minority mix.  Oldest-head-wins served the hot group's
+    whole backlog first; WDRR visits groups round-robin, so the minority
+    signature's batch ships within the first scheduling rounds."""
+    eng = _engine(max_k=2)
+    hot = [eng.submit(direction="alm2map", payload=_alm(seed=i, l_max=8),
+                      grid="gl", l_max=8) for i in range(12)]
+    mino = eng.submit(direction="alm2map", payload=_alm(seed=99, l_max=12),
+                      grid="gl", l_max=12)
+    eng.drain()
+    assert mino.exception() is None
+    assert all(f.exception() is None for f in hot)
+    mino_batches = [i for i, b in enumerate(eng.batch_log)
+                    if "lmax12" in b["signature"]]
+    assert mino_batches and mino_batches[0] <= 2, eng.batch_log
+
+
+def test_wdrr_weight_throttles_group():
+    """A weight-1/4 group earns a quarter of the K-unit deficit per round
+    and must wait out extra rounds between its batches -- so the unit-
+    weight group finishes well before the throttled hot group."""
+    hot_label = "gl/lmax8/spin0/float64"
+    eng = _engine(max_k=2, weights={hot_label: 0.25})
+    assert eng.describe()["fairness"]["weights"][hot_label] == 0.25
+    hot = [eng.submit(direction="alm2map", payload=_alm(seed=i, l_max=8),
+                      grid="gl", l_max=8) for i in range(4)]
+    mino = [eng.submit(direction="alm2map", payload=_alm(seed=50 + i,
+                                                         l_max=12),
+                       grid="gl", l_max=12) for i in range(4)]
+    eng.drain()
+    assert all(f.exception() is None for f in hot + mino)
+    log = eng.batch_log
+    last_mino = max(i for i, b in enumerate(log)
+                    if "lmax12" in b["signature"])
+    hot_before = sum(b["n_requests"] for b in log[:last_mino]
+                     if "lmax8" in b["signature"])
+    # by the time the minority stream finishes, the throttled hot group
+    # has shipped at most half its backlog
+    assert hot_before <= 2, log
+    assert eng.stats()["fairness"]["policy"] == "wdrr"
+
+
+# -- phase 2: roofline admission control --------------------------------------
+
+
+def test_admission_tiny_target_caps_coalescing_at_k1():
+    """An unachievable p99 target (1 ns) caps every batch at K=1 and
+    flags the group infeasible -- service degrades to singles, never to
+    refusal."""
+    eng = _engine(max_k=4, p99_target_s=1e-9)
+    futs = [eng.submit(direction="alm2map", payload=_alm(seed=i),
+                       grid="gl", l_max=LMAX) for i in range(4)]
+    eng.drain()
+    assert all(f.exception() is None for f in futs)
+    assert [b["k_plan"] for b in eng.batch_log] == [1, 1, 1, 1]
+    adm = eng.stats()["admission"]
+    assert adm["p99_target_s"] == 1e-9
+    (group,) = adm["groups"].values()
+    assert group["k_cap"] == 1 and group["feasible"] is False
+
+
+def test_admission_generous_target_keeps_full_bucket_and_calibrates():
+    """A 60 s p99 target admits the full max_k bucket, and every executed
+    batch feeds the predicted-vs-measured calibration tracker."""
+    eng = _engine(max_k=4, p99_target_s=60.0)
+    futs = [eng.submit(direction="alm2map", payload=_alm(seed=i),
+                       grid="gl", l_max=LMAX) for i in range(4)]
+    eng.drain()
+    assert all(f.exception() is None for f in futs)
+    assert len(eng.batch_log) == 1 and eng.batch_log[0]["k_plan"] == 4
+    adm = eng.stats()["admission"]
+    (group,) = adm["groups"].values()
+    assert group["k_cap"] == 4 and group["feasible"] is True
+    cal = adm["calibration"]
+    assert cal["count"] == 1
+    assert np.isfinite(cal["ratio"]) and cal["ratio"] > 0.0
+    assert "admission" in eng.report()
+
+
+def test_engine_describe():
+    eng = _engine(max_k=6, p99_target_s=0.5,
+                  weights={"gl/lmax16/spin0/float64": 0.5})
+    d = eng.describe()
+    assert d["max_k"] == 4 and d["requested_max_k"] == 6
+    assert d["states"] == ("queued", "in_flight", "retired")
+    assert d["fairness"]["policy"] == "wdrr" and d["fairness"]["quantum_k"]
+    assert d["admission"]["p99_target_s"] == 0.5
+    assert d["pipeline"]["double_buffered"] is False
+    assert d["pool"]["capacity"] == eng.pool.capacity
+    with eng:
+        d2 = eng.describe()
+        assert d2["pipeline"]["double_buffered"] is True
+        assert len(d2["pipeline"]["threads"]) == 2
+    # admission verdicts appear per group after first sighting
+    eng.submit(direction="alm2map", payload=_alm(seed=0), grid="gl",
+               l_max=LMAX)
+    eng.drain()
+    (group,) = eng.describe()["admission"]["groups"].values()
+    assert set(group) >= {"k_cap", "feasible", "predicted_s"}
+
+
+def test_pool_concurrent_get_builds_once():
+    """Racing get() calls for one key build the plan exactly once (the
+    build happens outside the pool lock behind a per-key event)."""
+    pool = PlanPool(4, mode="jnp")
+    out, errs = [], []
+
+    def worker():
+        try:
+            out.append(pool.get(PlanSig(grid="gl", l_max=8), 2))
+        except Exception as e:                    # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs
+    assert len(out) == 4 and len({id(p) for p in out}) == 1
+    assert pool.misses == 1
+
+
+# -- phase 2: threaded clients, exactly-once resolution -----------------------
+
+
+@settings(max_examples=3, deadline=None)
+@given(seed=st.integers(0, 10 ** 6))
+def test_threaded_submissions_resolve_exactly_once(seed):
+    """Several client threads submit mixed signatures against the live
+    double-buffered engine; every future resolves exactly once with its
+    own request's transform, and the in-flight accounting lands at zero."""
+    transform.clear_plan_cache()
+    lmaxes = [8, 12]
+    refs = {L: repro.make_plan("gl", l_max=L, K=1, dtype="float64",
+                               mode="jnp") for L in lmaxes}
+    eng = _engine(max_k=4, max_queue=256)
+    jobs, jlock = [], threading.Lock()
+
+    def client(tid):
+        rng = np.random.default_rng(seed * 17 + tid)
+        for i in range(6):
+            L = int(rng.choice(lmaxes))
+            alm = np.asarray(sht.random_alm(
+                seed=seed % 1000 + tid * 100 + i, l_max=L, m_max=L,
+                K=1))[..., 0]
+            fut = eng.submit(direction="alm2map", payload=alm, grid="gl",
+                             l_max=L)
+            with jlock:
+                jobs.append((L, alm, fut))
+            if rng.integers(2):
+                time.sleep(0.001)
+
+    with eng:
+        clients = [threading.Thread(target=client, args=(t,))
+                   for t in range(3)]
+        for t in clients:
+            t.start()
+        for t in clients:
+            t.join()
+        eng.drain(timeout=120.0)
+
+    assert len(jobs) == 18
+    for L, alm, fut in jobs:
+        assert fut.done(), "request dropped"
+        ref = np.asarray(refs[L].alm2map(alm[..., None]))[..., 0]
+        np.testing.assert_array_equal(fut.result(), ref)
+    s = eng.stats()["requests"]
+    assert s["completed"] == 18 and s["pending"] == 0
+    assert s["queued"] == 0 and s["in_flight"] == 0
+    with pytest.raises(InvalidStateError):       # write-once enforced
+        jobs[0][2]._resolve(None)
